@@ -1,0 +1,452 @@
+"""Shared benchmark harness.
+
+Trains (once, cached under ``.cache/``) the paper-reproduction models:
+
+* ``sd15-small`` — tiny VAE (recon+KL) then tiny DiT (eps-MSE) over the
+  synthetic captioned corpus.  This is the "Stable Diffusion" stand-in all
+  benchmarks generate with.
+* ``sd-tiny`` — an architecturally smaller DiT (the paper's SD-Tiny
+  compressed baseline): same pipeline, half the depth/width.
+
+Also provides the evaluation metrics (proxy CLIPScore / PickScore exactly
+as Eq. 7 uses them, an embedding-space FID, a classifier-based Inception
+Score proxy, PSNR) and the baseline serving systems the paper compares
+against (GPT-CACHE, PINECONE, NIRVANA).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.embeddings import BertProxyEmbedder, ProxyClipEmbedder
+from repro.core.latency_model import LatencyModel
+from repro.core.policy import GenerationPolicy, Route
+from repro.core.system import GenerationBackend
+from repro.data.synthetic import (make_corpus, render_caption, SHAPES)
+from repro.models.diffusion import dit as dit_mod
+from repro.models.diffusion import vae as vae_mod
+from repro.models.diffusion.sampler import ddpm_loss
+from repro.models.diffusion.schedule import DiffusionSchedule
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.runtime.serving import DiffusionBackend
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", ".cache")
+IMG_RES = 32
+SCHED = DiffusionSchedule.linear(1000)
+LATENT_SCALE = 0.55
+
+
+def _vae_cfg():
+    return vae_mod.VAEConfig(in_ch=3, base_ch=16, ch_mult=(1, 2), z_ch=4,
+                             n_res=1)
+
+
+def _dit_cfg(tiny: bool = False):
+    if tiny:
+        return dit_mod.DiTConfig(img_res=8, in_ch=4, patch=1, n_layers=2,
+                                 d_model=64, n_heads=4, ctx_dim=512)
+    return dit_mod.DiTConfig(img_res=8, in_ch=4, patch=1, n_layers=4,
+                             d_model=128, n_heads=4, ctx_dim=512)
+
+
+# ---------------------------------------------------------------------------
+# training (cached)
+# ---------------------------------------------------------------------------
+
+
+def _train_vae(images, *, steps=600, batch=32, lr=2e-3, seed=0):
+    cfg = _vae_cfg()
+    params = vae_mod.init_vae(jax.random.key(seed), cfg)
+    opt = adamw_init(params)
+    ocfg = AdamWConfig(lr=lr, weight_decay=0.0)
+
+    @jax.jit
+    def step(params, opt, batch_img, key):
+        def loss_fn(p):
+            mean, logvar = vae_mod.encode(p, cfg, batch_img)
+            z = vae_mod.sample_latent(key, mean, logvar)
+            rec = vae_mod.decode(p, cfg, z)
+            rec_loss = jnp.mean(jnp.square(rec - batch_img))
+            return rec_loss + 1e-4 * vae_mod.kl_loss(mean, logvar), rec_loss
+
+        (loss, rec), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt, _ = adamw_update(g, opt, params, ocfg)
+        return params, opt, rec
+
+    rng = np.random.default_rng(seed)
+    for i in range(steps):
+        idx = rng.integers(0, len(images), batch)
+        params, opt, rec = step(params, opt, jnp.asarray(images[idx]),
+                                jax.random.key(i))
+    return params, float(rec)
+
+
+def _train_dit(images, ctx_vecs, vae_params, *, tiny=False, steps=1200,
+               batch=32, lr=1.5e-3, seed=0):
+    vcfg, dcfg = _vae_cfg(), _dit_cfg(tiny)
+    params = dit_mod.init_dit(jax.random.key(seed + 1), dcfg)
+    opt = adamw_init(params)
+    ocfg = AdamWConfig(lr=lr, weight_decay=0.0)
+
+    @jax.jit
+    def step(params, opt, batch_img, batch_ctx, key):
+        mean, _ = vae_mod.encode(vae_params, vcfg, batch_img)
+        z = mean * LATENT_SCALE
+
+        def loss_fn(p):
+            fn = lambda x, t, c: dit_mod.apply_dit(p, dcfg, x, t, c)  # noqa
+            return ddpm_loss(fn, SCHED, z, batch_ctx, key)
+
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params, opt, _ = adamw_update(g, opt, params, ocfg)
+        return params, opt, loss
+
+    rng = np.random.default_rng(seed)
+    loss = None
+    for i in range(steps):
+        idx = rng.integers(0, len(images), batch)
+        params, opt, loss = step(params, opt, jnp.asarray(images[idx]),
+                                 jnp.asarray(ctx_vecs[idx]),
+                                 jax.random.key(10_000 + i))
+    return params, float(loss)
+
+
+@dataclass
+class TrainedStack:
+    vae_params: dict
+    dit_params: dict
+    sd_tiny_params: dict
+    embedder: ProxyClipEmbedder      # the SYSTEM's CLIP proxy (sharp bands,
+    #                                  calibrated to the paper's Fig-7 geometry)
+    scorer: ProxyClipEmbedder        # the METRIC CLIP proxy (smooth kernel,
+    #                                  tolerant of generation artifacts — the
+    #                                  role Inception/CLIP play in the paper)
+    corpus_images: np.ndarray
+    corpus_captions: List[str]
+    losses: Dict[str, float]
+
+    def backend(self, *, tiny=False, strength=0.6) -> DiffusionBackend:
+        return DiffusionBackend(
+            self.sd_tiny_params if tiny else self.dit_params,
+            _dit_cfg(tiny), self.vae_params, _vae_cfg(),
+            embed_prompt=lambda p: self.embedder.embed_text([p])[0],
+            schedule=SCHED, latent_scale=LATENT_SCALE,
+            img2img_strength=strength)
+
+
+_STACK: Optional[TrainedStack] = None
+
+
+def get_stack(*, corpus_n=600, force=False) -> TrainedStack:
+    """Train-or-load the full reproduction stack (cached)."""
+    global _STACK
+    if _STACK is not None and not force:
+        return _STACK
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    path = os.path.join(CACHE_DIR, f"stack_{corpus_n}.pkl")
+    images, captions, _ = make_corpus(corpus_n, res=IMG_RES, seed=0)
+    embedder = ProxyClipEmbedder(render_caption)
+    embedder.set_corpus_anchor(embedder.embed_image(images))
+    scorer = ProxyClipEmbedder(render_caption, bandwidth=3.0)
+    scorer.set_corpus_anchor(scorer.embed_image(images))
+    if os.path.exists(path) and not force:
+        with open(path, "rb") as f:
+            blob = pickle.load(f)
+        _STACK = TrainedStack(blob["vae"], blob["dit"], blob["sd_tiny"],
+                              embedder, scorer, images, captions,
+                              blob["losses"])
+        return _STACK
+    t0 = time.time()
+    ctx = embedder.embed_text(captions).astype(np.float32)
+    vae_params, vae_loss = _train_vae(images)
+    dit_params, dit_loss = _train_dit(images, ctx, vae_params)
+    tiny_params, tiny_loss = _train_dit(images, ctx, vae_params, tiny=True,
+                                        steps=600)
+    losses = {"vae_rec": vae_loss, "dit": dit_loss, "sd_tiny": tiny_loss,
+              "train_seconds": time.time() - t0}
+    with open(path, "wb") as f:
+        pickle.dump({"vae": jax.device_get(vae_params),
+                     "dit": jax.device_get(dit_params),
+                     "sd_tiny": jax.device_get(tiny_params),
+                     "losses": losses}, f)
+    _STACK = TrainedStack(vae_params, dit_params, tiny_params, embedder,
+                          scorer, images, captions, losses)
+    return _STACK
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+
+def psnr(a: np.ndarray, b: np.ndarray) -> float:
+    mse = float(np.mean((np.asarray(a, np.float64) - b) ** 2))
+    return 10.0 * np.log10(4.0 / max(mse, 1e-12))  # range [-1,1] → peak 2
+
+
+def clip_score(embedder, prompts: Sequence[str], images: np.ndarray) -> float:
+    tv = embedder.embed_text(list(prompts))
+    iv = embedder.embed_image(images)
+    # paper reports 100·cos-style CLIPScore; we keep the [0,1] cos and
+    # scale by 100 for table comparability
+    return float(np.mean(np.clip(np.sum(tv * iv, -1), 0, 1))) * 100.0
+
+
+def pick_score(embedder, prompts: Sequence[str], images: np.ndarray) -> float:
+    tv = embedder.embed_text(list(prompts))
+    iv = embedder.embed_image(images)
+    return float(np.mean([embedder.pick_score(t, i)
+                          for t, i in zip(tv, iv)])) * 100.0
+
+
+def fid_proxy(embedder, real: np.ndarray, fake: np.ndarray) -> float:
+    """Fréchet distance between Gaussians of proxy embeddings (the FID
+    computation, with the proxy tower instead of Inception-v3)."""
+    a = embedder.embed_image(real).astype(np.float64)
+    b = embedder.embed_image(fake).astype(np.float64)
+    mu_a, mu_b = a.mean(0), b.mean(0)
+    ca = np.cov(a, rowvar=False) + 1e-6 * np.eye(a.shape[1])
+    cb = np.cov(b, rowvar=False) + 1e-6 * np.eye(b.shape[1])
+    diff = float(np.sum((mu_a - mu_b) ** 2))
+    # trace term via eigendecomposition of ca·cb (symmetrised sqrt)
+    eig = np.linalg.eigvals(ca @ cb)
+    covmean_tr = float(np.sum(np.sqrt(np.maximum(eig.real, 0))))
+    return 100.0 * (diff + float(np.trace(ca) + np.trace(cb))
+                    - 2.0 * covmean_tr)
+
+
+class ShapeClassifier:
+    """Tiny softmax head over proxy embeddings → p(shape | image); the
+    Inception-v3 stand-in for the IS proxy."""
+
+    def __init__(self, embedder, images, specs, *, steps=300, lr=0.5):
+        self.embedder = embedder
+        x = embedder.embed_image(images)
+        y = np.array([SHAPES.index(s.shape) for s in specs])
+        k = len(SHAPES)
+        w = jnp.zeros((x.shape[1], k))
+
+        @jax.jit
+        def step(w):
+            def loss(w):
+                logits = x @ w
+                return -jnp.mean(jax.nn.log_softmax(logits)[
+                    jnp.arange(len(y)), y])
+            return w - lr * jax.grad(loss)(w)
+
+        x = jnp.asarray(x)
+        y = jnp.asarray(y)
+        for _ in range(steps):
+            w = step(w)
+        self.w = np.asarray(w)
+        self.train_acc = float(np.mean(np.argmax(x @ w, -1) == y))
+
+    def probs(self, images: np.ndarray) -> np.ndarray:
+        e = self.embedder.embed_image(images)
+        logits = e @ self.w
+        logits -= logits.max(-1, keepdims=True)
+        p = np.exp(logits)
+        return p / p.sum(-1, keepdims=True)
+
+
+def inception_score(classifier: ShapeClassifier, images: np.ndarray) -> float:
+    p_yx = classifier.probs(images)
+    p_y = p_yx.mean(0, keepdims=True)
+    kl = np.sum(p_yx * (np.log(p_yx + 1e-12) - np.log(p_y + 1e-12)), -1)
+    # scaled ×10 to land on the paper's ~30 magnitude for readability
+    return float(np.exp(kl.mean())) * 10.0
+
+
+# ---------------------------------------------------------------------------
+# baseline serving systems (the paper's comparison set)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class MethodResult:
+    prompts: List[str]
+    images: np.ndarray
+    latencies: np.ndarray
+    scores: np.ndarray
+    steps_used: np.ndarray
+
+
+def run_retrieval_baseline(stack: TrainedStack, requests, *,
+                           embed="clip", threshold=0.80,
+                           steps_full=30) -> MethodResult:
+    """GPT-CACHE (BERT embeddings) / PINECONE (CLIP embeddings): return the
+    image of the closest cached PROMPT, else full generation."""
+    if embed == "bert":
+        emb = BertProxyEmbedder()
+    else:
+        emb = stack.embedder
+    lm = LatencyModel()
+    backend = stack.backend()
+    cache_vecs = emb.embed_text(stack.corpus_captions)
+    cache_imgs = stack.corpus_images
+    out_imgs, lats, scores, steps_used, prompts = [], [], [], [], []
+    for i, prompt in enumerate(requests):
+        q = emb.embed_text([prompt])[0]
+        sims = cache_vecs @ q
+        j = int(np.argmax(sims))
+        if sims[j] >= threshold:
+            img = cache_imgs[j]
+            lat = lm.t_embed + lm.t_retrieve + lm.t_return
+            steps = 0
+        else:
+            img = backend.txt2img(prompt, steps_full, seed=i)
+            lat = lm.t_embed + lm.t_retrieve + steps_full * lm.t_step
+            steps = steps_full
+        tv = stack.embedder.embed_text([prompt])[0]
+        iv = stack.embedder.embed_image(img[None])[0]
+        s = GenerationPolicy().composite_score(
+            stack.embedder.clip_score(tv, iv),
+            stack.embedder.pick_score(tv, iv))
+        out_imgs.append(img)
+        lats.append(lat)
+        scores.append(s)
+        steps_used.append(steps)
+        prompts.append(prompt)
+    return MethodResult(prompts, np.stack(out_imgs), np.array(lats),
+                        np.array(scores), np.array(steps_used))
+
+
+def run_nirvana(stack: TrainedStack, requests, *, k_resume=15,
+                steps_full=30, threshold=0.75) -> MethodResult:
+    """NIRVANA: approximate caching of intermediate denoising STATES.
+    A hit retrieves a cached x_K latent from a similar past prompt and
+    resumes the remaining K steps; a miss generates fully and caches its
+    intermediate state."""
+    from repro.models.diffusion.sampler import ddim_sample, ddim_step
+    dcfg, vcfg = _dit_cfg(), _vae_cfg()
+    lm = LatencyModel()
+    eps_fn = dit_mod.make_eps_fn(stack.dit_params, dcfg)
+    t_resume = int(SCHED.T * k_resume / steps_full)
+
+    @jax.jit
+    def gen_to_mid(ctx, seed):
+        """Denoise from pure noise at T down to t_resume — the cached
+        intermediate state."""
+        key = jax.random.PRNGKey(seed)
+        shape = (1, dcfg.img_res, dcfg.img_res, dcfg.in_ch)
+        x = jax.random.normal(key, shape)
+        n = steps_full - k_resume
+        ts = jnp.linspace(t_resume, SCHED.T - 1, n + 1
+                          ).round().astype(jnp.int32)[::-1]
+
+        def body(x, i):
+            t, t_prev = ts[i], ts[i + 1]
+            eps = eps_fn(x, jnp.full((1,), t, jnp.int32), ctx)
+            return ddim_step(SCHED, x, eps, t, t_prev), None
+
+        x, _ = jax.lax.scan(body, x, jnp.arange(n))
+        return x
+
+    @jax.jit
+    def gen_from_mid(z_mid, ctx, seed):
+        key = jax.random.PRNGKey(seed)
+        z0 = ddim_sample(eps_fn, SCHED, z_mid.shape, ctx, key,
+                         steps=k_resume, x_init=z_mid, t_start=t_resume)
+        return vae_mod.decode(stack.vae_params, vcfg, z0 / LATENT_SCALE)
+
+    cache_vecs: List[np.ndarray] = []
+    cache_states: List[np.ndarray] = []
+    out_imgs, lats, scores, steps_used, prompts = [], [], [], [], []
+    pol = GenerationPolicy()
+    for i, prompt in enumerate(requests):
+        q = stack.embedder.embed_text([prompt])[0]
+        ctx = jnp.asarray(q, jnp.float32)[None]
+        hit = False
+        if cache_vecs:
+            sims = np.stack(cache_vecs) @ q
+            j = int(np.argmax(sims))
+            hit = sims[j] >= threshold
+        if hit:
+            img = np.asarray(gen_from_mid(jnp.asarray(cache_states[j]),
+                                          ctx, i)[0])
+            lat = lm.t_embed + lm.t_retrieve + lm.t_noise \
+                + k_resume * lm.t_step
+            steps = k_resume
+        else:
+            z_mid = gen_to_mid(ctx, i)
+            img = np.asarray(gen_from_mid(z_mid, ctx, i)[0])
+            cache_vecs.append(q)
+            cache_states.append(np.asarray(z_mid))
+            lat = lm.t_embed + lm.t_retrieve + steps_full * lm.t_step
+            steps = steps_full
+        iv = stack.embedder.embed_image(img[None])[0]
+        s = pol.composite_score(stack.embedder.clip_score(q, iv),
+                                stack.embedder.pick_score(q, iv))
+        out_imgs.append(img)
+        lats.append(lat)
+        scores.append(s)
+        steps_used.append(steps)
+        prompts.append(prompt)
+    return MethodResult(prompts, np.stack(out_imgs), np.array(lats),
+                        np.array(scores), np.array(steps_used))
+
+
+def run_plain_sd(stack: TrainedStack, requests, *, steps_full=30,
+                 tiny=False) -> MethodResult:
+    backend = stack.backend(tiny=tiny)
+    lm = LatencyModel()
+    pol = GenerationPolicy()
+    speed = 1.8 if tiny else 1.0   # SD-Tiny's per-step speedup
+    out_imgs, lats, scores, prompts = [], [], [], []
+    for i, prompt in enumerate(requests):
+        img = backend.txt2img(prompt, steps_full, seed=i)
+        q = stack.embedder.embed_text([prompt])[0]
+        iv = stack.embedder.embed_image(img[None])[0]
+        s = pol.composite_score(stack.embedder.clip_score(q, iv),
+                                stack.embedder.pick_score(q, iv))
+        out_imgs.append(img)
+        lats.append(lm.t_embed + steps_full * lm.t_step / speed)
+        scores.append(s)
+        prompts.append(prompt)
+    return MethodResult(prompts, np.stack(out_imgs), np.array(lats),
+                        np.array(scores),
+                        np.full(len(prompts), steps_full))
+
+
+def run_cachegenius(stack: TrainedStack, requests, *, n_nodes=4,
+                    policy=None, eviction="LCU", use_scheduler=True,
+                    use_prompt_optimizer=True,
+                    capacity_per_node=200) -> Tuple[MethodResult, object]:
+    from repro.launch.serve import build_system
+    system, _, _, _ = build_system(
+        n_nodes=n_nodes, corpus_n=len(stack.corpus_images),
+        capacity_per_node=capacity_per_node, policy=policy,
+        eviction=eviction, use_scheduler=use_scheduler,
+        use_prompt_optimizer=use_prompt_optimizer,
+        backend=stack.backend().as_generation_backend())
+    out_imgs, lats, scores, steps_used, prompts = [], [], [], [], []
+    for i, prompt in enumerate(requests):
+        r = system.serve(prompt, seed=i)
+        img = r.image
+        if img.shape[0] != IMG_RES:
+            img = img[:IMG_RES, :IMG_RES]
+        out_imgs.append(img)
+        lats.append(r.latency)
+        scores.append(r.score)
+        steps_used.append(r.steps)
+        prompts.append(prompt)
+    return (MethodResult(prompts, np.stack(out_imgs), np.array(lats),
+                         np.array(scores), np.array(steps_used)), system)
+
+
+def trace_prompts(n: int, *, seed=1, n_specs=1500) -> List[str]:
+    """Request stream over a 1500-scene pool vs a 600-scene cache corpus:
+    most prompts are NOVEL scenes (the paper's production regime — NIRVANA
+    reports the same). Structural near-matches still exist by construction
+    (shapes share layouts), which is what feeds the img2img band."""
+    from repro.core.trace import RequestTrace
+    return [r.prompt for r in RequestTrace(seed=seed,
+                                           n_specs=n_specs).generate(n)]

@@ -1,0 +1,81 @@
+"""Assemble the §Dry-run / §Roofline tables from experiments/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..",
+                          "experiments", "dryrun")
+
+
+def load_records(dryrun_dir: str = DRYRUN_DIR) -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_markdown(recs: List[Dict], mesh: str = "16x16") -> str:
+    """One row per (arch × shape) on the given mesh."""
+    rows = [r for r in recs if r.get("mesh") == mesh and r.get("ok")]
+    lines = [
+        "| arch | shape | kind | compute s | memory s | collective s | "
+        "dominant | useful ratio | MFU | mem/chip GiB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        t = r["terms"]
+        m = r["memory"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {t['compute_s']:.4g} | {t['memory_s']:.4g} "
+            f"| {t['collective_s']:.4g} | {t['dominant']} "
+            f"| {t['useful_ratio']:.3f} | {t['mfu']:.4f} "
+            f"| {m['peak_estimate_bytes'] / 2**30:.2f} |")
+    return "\n".join(lines)
+
+
+def dryrun_markdown(recs: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | ok | compile s | mem/chip GiB | "
+        "analytic TPU GiB | collectives | coll bytes/chip |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                         f"| FAIL | - | - | - | - | - |")
+            continue
+        m = r["memory"]
+        c = r["collectives"]
+        analytic = m.get("analytic_tpu_budget_bytes", 0) / 2**30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {r['compile_s']:.1f} | {m['peak_estimate_bytes']/2**30:.2f} "
+            f"| {analytic:.2f} | {c['count']} "
+            f"| {c['operand_bytes']/2**30:.3f} GiB |")
+    return "\n".join(lines)
+
+
+def summary(recs: List[Dict]) -> Dict:
+    ok = [r for r in recs if r.get("ok")]
+    fails = [r for r in recs if not r.get("ok")]
+    doms = {}
+    for r in ok:
+        doms[r["terms"]["dominant"]] = doms.get(r["terms"]["dominant"], 0) + 1
+    return {"total": len(recs), "ok": len(ok), "fail": len(fails),
+            "dominant_counts": doms,
+            "failed_cells": [f"{r['arch']}/{r['shape']}/{r['mesh']}"
+                             for r in fails]}
+
+
+if __name__ == "__main__":
+    recs = load_records()
+    print(dryrun_markdown(recs))
+    print()
+    print(roofline_markdown(recs))
+    print()
+    print(json.dumps(summary(recs), indent=1))

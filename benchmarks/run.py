@@ -1,0 +1,78 @@
+"""Benchmark driver: one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run              # everything
+    PYTHONPATH=src python -m benchmarks.run --only table1_quality
+
+Prints ``name,seconds,key=value...`` CSV lines and writes the full JSON to
+``experiments/results.json``.  The roofline tables are assembled from the
+dry-run artifacts when present (``--with-roofline``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+import traceback
+
+
+def _summarize(name: str, result: dict, secs: float) -> str:
+    keys = []
+    for k, v in result.items():
+        if isinstance(v, bool):
+            keys.append(f"{k}={v}")
+        elif isinstance(v, (int, float)):
+            keys.append(f"{k}={v:.4g}")
+    return f"{name},{secs:.1f}s," + ",".join(keys[:6])
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="experiments/results.json")
+    ap.add_argument("--with-roofline", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks.paper_figures import ALL_BENCHMARKS
+    from benchmarks import common as C
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    t0 = time.time()
+    print("# training/loading the reproduction stack ...")
+    stack = C.get_stack()
+    print(f"# stack ready in {time.time()-t0:.1f}s "
+          f"(losses: {stack.losses})")
+
+    results = {"stack_losses": stack.losses}
+    failures = []
+    names = [args.only] if args.only else list(ALL_BENCHMARKS)
+    for name in names:
+        fn = ALL_BENCHMARKS[name]
+        t1 = time.time()
+        try:
+            res = fn()
+            results[name] = res
+            print(_summarize(name, res, time.time() - t1))
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            results[name] = {"error": str(e)}
+            print(f"{name},FAILED,{type(e).__name__}: {e}")
+            traceback.print_exc()
+
+    if args.with_roofline:
+        from benchmarks.roofline_table import load_records, summary
+        recs = load_records()
+        if recs:
+            results["roofline_summary"] = summary(recs)
+            print("roofline," +
+                  json.dumps(results["roofline_summary"]["dominant_counts"]))
+
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1, default=float)
+    print(f"# wrote {args.out}; total {time.time()-t0:.1f}s; "
+          f"{len(failures)} failures {failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

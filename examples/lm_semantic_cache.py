@@ -1,0 +1,72 @@
+"""Beyond-paper example: the semantic cache adapted to LM serving.
+
+The paper's HIT_RETURN branch ported to the assigned LM architectures
+(DESIGN.md §Arch-applicability): near-duplicate prompts return the cached
+completion; misses decode with the reduced qwen2-class model and archive.
+There is no img2img middle band — tokens are discrete.
+
+    PYTHONPATH=src python examples/lm_semantic_cache.py
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, get_shape
+from repro.core.embeddings import BertProxyEmbedder
+from repro.models.transformer.lm import apply_lm, init_lm
+from repro.runtime.serving import LMResponseCache
+
+
+def main() -> None:
+    arch = get_arch("qwen2-0.5b")
+    cfg = arch.make_reduced()
+    params = init_lm(jax.random.key(0), cfg)
+    emb = BertProxyEmbedder()
+
+    from repro.data.tokenizer import HashTokenizer
+    tok = HashTokenizer(vocab_size=cfg.vocab)
+
+    @jax.jit
+    def greedy_decode(tokens):
+        logits, _ = apply_lm(params, cfg, tokens)
+        return jnp.argmax(logits[:, -1], -1)
+
+    def generate(prompt: str, n_tokens: int = 8) -> str:
+        ids = tok.encode(prompt, max_len=24, add_eos=False)
+        out = []
+        cur = jnp.asarray(ids)[None]
+        for _ in range(n_tokens):
+            nxt = greedy_decode(cur)
+            out.append(int(nxt[0]))
+            cur = jnp.concatenate([cur[:, 1:], nxt[:, None]], axis=1)
+        return " ".join(map(str, out))
+
+    cache = LMResponseCache(embed=lambda p: emb.embed_text([p])[0],
+                            hit_threshold=0.9)
+    prompts = [
+        "describe a small red circle on a black background",
+        "what is a large blue square",
+        "describe a small red circle on a black background",   # exact repeat
+        "describe the small red circle on black background",   # near-dup
+        "explain a purple triangle at the left",
+    ]
+    for p in prompts:
+        t0 = time.perf_counter()
+        hit = cache.lookup(p)
+        if hit is None:
+            resp = generate(p)
+            cache.insert(p, resp)
+            kind = "MISS->decode"
+        else:
+            resp, kind = hit, "HIT (cached)"
+        print(f"[{kind:12s}] {time.perf_counter()-t0:6.3f}s  {p[:46]}")
+    print(f"\nhit rate: {cache.hit_rate:.2f} "
+          f"({cache.hits} hits / {cache.misses} misses)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,139 @@
+"""Train the REAL dual-tower embedder (§IV-B) contrastively on the corpus.
+
+The benchmarks use the deterministic CLIP proxy; this example shows the
+trainable path: a tiny ViT-ish image tower + the text transformer from
+``repro.models.diffusion.text_encoder``, trained with the symmetric InfoNCE
+loss CLIP uses, then plugged into the SAME CacheGenius stack via
+:class:`repro.core.embeddings.TowerEmbedder`.
+
+    PYTHONPATH=src python examples/train_clip_tower.py --steps 300
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.embeddings import TowerEmbedder
+from repro.data.synthetic import make_corpus
+from repro.data.tokenizer import HashTokenizer
+from repro.models.common import layers as L
+from repro.models.diffusion.text_encoder import (TextEncoderConfig,
+                                                 apply_text_encoder,
+                                                 init_text_encoder)
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+EMBED_DIM = 512
+
+
+def init_image_tower(key, *, res=32, patch=8, d=128, n_layers=2, heads=4,
+                     param_dtype=jnp.float32):
+    """Tiny ViT: patchify → transformer → mean-pool → 512-d projection."""
+    ks = jax.random.split(key, 4 + n_layers)
+    n_tok = (res // patch) ** 2
+    blocks = []
+    for i in range(n_layers):
+        k1, k2, k3 = jax.random.split(ks[4 + i], 3)
+        blocks.append({
+            "ln1": L.init_layernorm(d, param_dtype),
+            "qkv": L.init_dense(k1, d, 3 * d, param_dtype=param_dtype),
+            "proj": L.init_dense(k2, d, d, param_dtype=param_dtype),
+            "ln2": L.init_layernorm(d, param_dtype),
+            "mlp": L.init_mlp(k3, d, 4 * d, param_dtype=param_dtype),
+        })
+    return {
+        "patch": L.init_dense(ks[0], patch * patch * 3, d, use_bias=True,
+                              param_dtype=param_dtype),
+        "pos": L._normal(ks[1], (n_tok, d), 0.02, param_dtype),
+        "blocks": blocks,
+        "out": L.init_dense(ks[2], d, EMBED_DIM, param_dtype=param_dtype),
+        "logit_scale": jnp.asarray(2.6, param_dtype),
+    }
+
+
+def apply_image_tower(p, images, *, patch=8):
+    from repro.models.common.attention import sdpa
+    x = L.patchify(images, patch)
+    x = L.dense(p["patch"], x) + p["pos"][None]
+    for blk in p["blocks"]:
+        h = L.layernorm(blk["ln1"], x)
+        b, t, d = h.shape
+        qkv = L.dense(blk["qkv"], h).reshape(b, t, 3, 4, d // 4)
+        att = sdpa(qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2], causal=False)
+        x = x + L.dense(blk["proj"], att.reshape(b, t, d))
+        x = x + L.mlp(blk["mlp"], L.layernorm(blk["ln2"], x))
+    pooled = jnp.mean(x, axis=1)
+    v = L.dense(p["out"], pooled)
+    return v / jnp.linalg.norm(v, axis=-1, keepdims=True)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--corpus", type=int, default=512)
+    ap.add_argument("--batch", type=int, default=64)
+    args = ap.parse_args()
+
+    images, captions, _ = make_corpus(args.corpus, res=32, seed=0)
+    tok = HashTokenizer(vocab_size=4096)
+    tokens = tok.encode_batch(captions, max_len=24)
+    tcfg = TextEncoderConfig(vocab=4096, max_len=24, n_layers=2, d_model=128,
+                             n_heads=4, out_dim=128, pool_dim=EMBED_DIM)
+
+    key = jax.random.key(0)
+    params = {
+        "img": init_image_tower(jax.random.split(key)[0]),
+        "txt": init_text_encoder(jax.random.split(key)[1], tcfg),
+    }
+    opt = adamw_init(params)
+    ocfg = AdamWConfig(lr=1e-3, weight_decay=1e-4)
+
+    @jax.jit
+    def step(params, opt, imgs, toks):
+        def loss_fn(p):
+            iv = apply_image_tower(p["img"], imgs)
+            _, tv = apply_text_encoder(p["txt"], tcfg, toks)
+            tv = tv / jnp.linalg.norm(tv, axis=-1, keepdims=True)
+            logits = iv @ tv.T * jnp.exp(p["img"]["logit_scale"])
+            labels = jnp.arange(imgs.shape[0])
+            li = -jnp.mean(jax.nn.log_softmax(logits, 0)[labels, labels])
+            lt = -jnp.mean(jax.nn.log_softmax(logits, 1)[labels, labels])
+            return 0.5 * (li + lt)
+
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params, opt, _ = adamw_update(g, opt, params, ocfg)
+        return params, opt, loss
+
+    rng = np.random.default_rng(0)
+    for i in range(args.steps):
+        idx = rng.integers(0, len(images), args.batch)
+        params, opt, loss = step(params, opt, jnp.asarray(images[idx]),
+                                 jnp.asarray(tokens[idx]))
+        if i % 50 == 0:
+            print(f"step {i:4d}  contrastive loss {float(loss):.4f}")
+
+    # retrieval accuracy: does each caption find its own image?
+    embedder = TowerEmbedder(
+        params,
+        apply_text=lambda p, prompts: apply_text_encoder(
+            p["txt"], tcfg,
+            jnp.asarray(tok.encode_batch(list(prompts), max_len=24)))[1],
+        apply_image=lambda p, imgs: apply_image_tower(
+            p["img"], jnp.asarray(imgs, jnp.float32)))
+    n_eval = 128
+    iv = embedder.embed_image(images[:n_eval])
+    tv = embedder.embed_text(captions[:n_eval])
+    ranks = np.argmax(tv @ iv.T, axis=1)
+    acc = float(np.mean(ranks == np.arange(n_eval)))
+    print(f"\ntext→image retrieval top-1 over {n_eval}: {acc:.3f} "
+          f"(chance {1 / n_eval:.3f})")
+    assert acc > 5.0 / n_eval, "tower failed to learn alignment"
+    print("TowerEmbedder is drop-in compatible with CacheGenius "
+          "(same embed_text/embed_image/clip_score/pick_score interface).")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

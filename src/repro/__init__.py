@@ -1,0 +1,19 @@
+"""repro — CacheGenius-JAX: semantic-aware caching for diffusion serving.
+
+A production-grade JAX framework reproducing and extending
+"Semantic-Aware Caching for Efficient Image Generation in Edge Computing"
+(CacheGenius, CS.NI 2025).
+
+Layout:
+  repro.core       — the paper's contribution (cache, scheduler, LCU, policy)
+  repro.models     — model zoo (LM / diffusion / vision)
+  repro.kernels    — Pallas TPU kernels + jnp oracles
+  repro.data       — synthetic captioned-image corpus + pipeline
+  repro.optim      — optimizer stack
+  repro.checkpoint — sharded checkpointing / restore / elastic reshard
+  repro.runtime    — partitioning, step builders, train loop, serving engine
+  repro.configs    — assigned architecture configs + input-shape cells
+  repro.launch     — mesh, dry-run, roofline, drivers
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+"""Checkpointing: sharded save/restore, async writer, retention, elastic."""
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401

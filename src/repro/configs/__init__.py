@@ -1,0 +1,6 @@
+"""Assigned architecture configs + input-shape cells (``--arch <id>``)."""
+from repro.configs.registry import (ARCH_IDS, ArchSpec, all_cells, get_arch,
+                                    list_archs)  # noqa: F401
+from repro.configs.shapes import (DIFFUSION_SHAPES, LM_SHAPES, ShapeCell,
+                                  VISION_SHAPES, get_shape,
+                                  shapes_for_family)  # noqa: F401

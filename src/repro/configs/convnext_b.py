@@ -1,0 +1,35 @@
+"""convnext-b — ConvNeXt-Base. [arXiv:2201.03545; paper]
+
+img_res=224 depths=3-3-27-3 dims=128-256-512-1024.  Classification is one
+forward pass — no multi-step loop for CacheGenius to shorten; supported
+with an embedding-keyed prediction cache for near-duplicate inputs, but
+reported baseline-only (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from repro.configs.registry import ArchSpec
+from repro.configs.shapes import ShapeCell
+from repro.models.vision.convnext import ConvNeXtConfig
+
+
+def make_config(cell: ShapeCell) -> ConvNeXtConfig:
+    return ConvNeXtConfig(depths=(3, 3, 27, 3), dims=(128, 256, 512, 1024),
+                          n_classes=1000, remat=(cell.kind == "train"))
+
+
+def make_reduced() -> ConvNeXtConfig:
+    return ConvNeXtConfig(depths=(1, 1, 2, 1), dims=(16, 32, 64, 128),
+                          n_classes=10)
+
+
+ARCH = ArchSpec(
+    name="convnext-b",
+    family="vision-convnext",
+    make_config=make_config,
+    make_reduced=make_reduced,
+    shapes=("cls_224", "cls_384", "serve_b1", "serve_b128"),
+    optimizer="adamw",
+    technique=("Mostly inapplicable: single forward pass; prediction cache "
+               "only. Reported baseline-only."),
+    source="arXiv:2201.03545; paper",
+)

@@ -1,0 +1,43 @@
+"""dit-l2 — Diffusion Transformer L/2 (Peebles & Xie). [arXiv:2212.09748; paper]
+
+img_res=256 patch=2 n_layers=24 d_model=1024 n_heads=16.
+"""
+from __future__ import annotations
+
+from repro.configs.diffusion_common import (DiffusionConfig, FULL_VAE,
+                                            REDUCED_VAE, latent_res_of)
+from repro.configs.registry import ArchSpec
+from repro.configs.shapes import ShapeCell
+from repro.models.diffusion.dit import DiTConfig
+
+
+def make_config(cell: ShapeCell) -> DiffusionConfig:
+    latent = latent_res_of(cell.img_res or 256, FULL_VAE)
+    return DiffusionConfig(
+        backbone="dit",
+        net=DiTConfig(img_res=latent, in_ch=FULL_VAE.z_ch, patch=2,
+                      n_layers=24, d_model=1024, n_heads=16,
+                      ctx_dim=512, remat=(cell.kind == "train")),
+        vae=FULL_VAE,
+    )
+
+
+def make_reduced() -> DiffusionConfig:
+    return DiffusionConfig(
+        backbone="dit",
+        net=DiTConfig(img_res=8, in_ch=REDUCED_VAE.z_ch, patch=2,
+                      n_layers=3, d_model=96, n_heads=4, ctx_dim=512),
+        vae=REDUCED_VAE,
+    )
+
+
+ARCH = ArchSpec(
+    name="dit-l2",
+    family="diffusion-dit",
+    make_config=make_config,
+    make_reduced=make_reduced,
+    shapes=("train_256", "gen_1024", "gen_fast", "train_1024"),
+    optimizer="adamw",
+    technique="Primary: full Algorithm 1 serve path (0/K/N steps).",
+    source="arXiv:2212.09748; paper",
+)

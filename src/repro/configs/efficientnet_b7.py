@@ -1,0 +1,33 @@
+"""efficientnet-b7 — compound-scaled EfficientNet. [arXiv:1905.11946; paper]
+
+width_mult=2.0 depth_mult=3.1 over the B0 block table (native img_res=600;
+the assigned shape cells run 224/384 per the vision shape set).
+Same CacheGenius applicability note as convnext-b: baseline-only.
+"""
+from __future__ import annotations
+
+from repro.configs.registry import ArchSpec
+from repro.configs.shapes import ShapeCell
+from repro.models.vision.efficientnet import EffNetConfig
+
+
+def make_config(cell: ShapeCell) -> EffNetConfig:
+    return EffNetConfig(width_mult=2.0, depth_mult=3.1, n_classes=1000,
+                        remat=(cell.kind == "train"))
+
+
+def make_reduced() -> EffNetConfig:
+    return EffNetConfig(width_mult=0.35, depth_mult=0.35, n_classes=10)
+
+
+ARCH = ArchSpec(
+    name="efficientnet-b7",
+    family="vision-effnet",
+    make_config=make_config,
+    make_reduced=make_reduced,
+    shapes=("cls_224", "cls_384", "serve_b1", "serve_b128"),
+    optimizer="adamw",
+    technique=("Mostly inapplicable: single forward pass; prediction cache "
+               "only. Reported baseline-only."),
+    source="arXiv:1905.11946; paper",
+)

@@ -1,0 +1,53 @@
+"""moonshot-v1-16b-a3b — kimi/moonlight-style all-MoE decoder.
+
+[hf:moonshotai/Moonlight-16B-A3B; hf]
+48L d_model=2048 16H (GQA kv=16 → MHA) d_ff=1408 per expert,
+vocab=163840, MoE 64 experts top-6 every layer.
+
+Active ≈3.3B per token (6/64 experts × 48 layers) — matches the a3b tag;
+total follows from the assigned layer count as listed.
+"""
+from __future__ import annotations
+
+from repro.configs.registry import ArchSpec
+from repro.configs.shapes import ShapeCell
+from repro.models.transformer.lm import LMConfig
+from repro.models.transformer.moe import MoEConfig
+
+
+def make_config(cell: ShapeCell) -> LMConfig:
+    return LMConfig(
+        vocab=163_840,
+        n_layers=48,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        head_dim=128,
+        d_ff=1408,
+        pattern=("moe",),
+        moe=MoEConfig(n_experts=64, top_k=6, d_ff=1408,
+                      capacity_factor=1.25),
+        rope_theta=50_000.0,
+        max_seq=max(cell.seq_len, 8192),
+        remat=(cell.kind == "train"),
+    )
+
+
+def make_reduced() -> LMConfig:
+    return LMConfig(vocab=512, n_layers=2, d_model=64, n_heads=4,
+                    n_kv_heads=4, head_dim=16, d_ff=96, pattern=("moe",),
+                    moe=MoEConfig(n_experts=8, top_k=2, d_ff=96),
+                    max_seq=128)
+
+
+ARCH = ArchSpec(
+    name="moonshot-v1-16b-a3b",
+    family="lm-moe",
+    make_config=make_config,
+    make_reduced=make_reduced,
+    shapes=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+    optimizer="adamw",
+    technique=("Partial (beyond-paper): semantic response cache in serving; "
+               "decode compute itself uncached."),
+    source="hf:moonshotai/Moonlight-16B-A3B; hf",
+)

@@ -1,0 +1,47 @@
+"""qwen2-0.5b — small dense decoder with QKV bias and tied embeddings.
+
+[arXiv:2407.10671; hf]
+24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151936, QKV bias,
+tied input/output embeddings.  ≈0.49B params.
+"""
+from __future__ import annotations
+
+from repro.configs.registry import ArchSpec
+from repro.configs.shapes import ShapeCell
+from repro.models.transformer.lm import LMConfig
+
+
+def make_config(cell: ShapeCell) -> LMConfig:
+    return LMConfig(
+        vocab=151_936,
+        n_layers=24,
+        d_model=896,
+        n_heads=14,
+        n_kv_heads=2,
+        head_dim=64,
+        d_ff=4864,
+        pattern=("dense",),
+        qkv_bias=True,
+        tie_embeddings=True,
+        rope_theta=1_000_000.0,
+        max_seq=max(cell.seq_len, 8192),
+        remat=(cell.kind == "train"),
+    )
+
+
+def make_reduced() -> LMConfig:
+    return LMConfig(vocab=512, n_layers=2, d_model=64, n_heads=4,
+                    n_kv_heads=2, head_dim=16, d_ff=128, qkv_bias=True,
+                    tie_embeddings=True, max_seq=128)
+
+
+ARCH = ArchSpec(
+    name="qwen2-0.5b",
+    family="lm-dense",
+    make_config=make_config,
+    make_reduced=make_reduced,
+    shapes=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+    optimizer="adamw",
+    technique=("Partial (beyond-paper): semantic response cache in serving."),
+    source="arXiv:2407.10671; hf",
+)

@@ -1,0 +1,46 @@
+"""qwen3-14b — dense decoder with qk-norm and GQA.
+
+[hf:Qwen/Qwen3-8B; hf]
+40L d_model=5120 40H (GQA kv=8) d_ff=17408 vocab=151936, qk_norm.
+≈14.8B params (measured via eval_shape in the smoke tests).
+"""
+from __future__ import annotations
+
+from repro.configs.registry import ArchSpec
+from repro.configs.shapes import ShapeCell
+from repro.models.transformer.lm import LMConfig
+
+
+def make_config(cell: ShapeCell) -> LMConfig:
+    return LMConfig(
+        vocab=151_936,
+        n_layers=40,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=17_408,
+        pattern=("dense",),
+        qk_norm=True,
+        rope_theta=1_000_000.0,
+        max_seq=max(cell.seq_len, 8192),
+        remat=(cell.kind == "train"),
+    )
+
+
+def make_reduced() -> LMConfig:
+    return LMConfig(vocab=512, n_layers=2, d_model=64, n_heads=4,
+                    n_kv_heads=2, head_dim=16, d_ff=160, qk_norm=True,
+                    max_seq=128)
+
+
+ARCH = ArchSpec(
+    name="qwen3-14b",
+    family="lm-dense",
+    make_config=make_config,
+    make_reduced=make_reduced,
+    shapes=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+    optimizer="adamw",
+    technique=("Partial (beyond-paper): semantic response cache in serving."),
+    source="hf:Qwen/Qwen3-8B; hf",
+)

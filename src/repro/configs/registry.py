@@ -1,0 +1,86 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Each ``src/repro/configs/<id>.py`` module defines an ``ARCH: ArchSpec``.
+``make_config(shape)`` returns the family config tuned for one shape cell
+(e.g. the latent resolution of a diffusion cell, remat on for train cells);
+``make_reduced()`` returns a tiny same-family config for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+from repro.configs.shapes import ShapeCell, get_shape, shapes_for_family
+
+ARCH_IDS: Tuple[str, ...] = (
+    # LM family
+    "llama4-maverick-400b-a17b",
+    "moonshot-v1-16b-a3b",
+    "qwen3-14b",
+    "qwen2-0.5b",
+    # diffusion
+    "dit-b2",
+    "unet-sd15",
+    "flux-dev",
+    "dit-l2",
+    # vision
+    "convnext-b",
+    "efficientnet-b7",
+    # the paper's own CPU-scale reproduction model
+    "sd15-small",
+)
+
+_MODULE_OF = {a: "repro.configs." + a.replace("-", "_").replace(".", "_")
+              for a in ARCH_IDS}
+
+
+@dataclass(frozen=True)
+class ArchSpec:
+    name: str
+    family: str                       # lm | diffusion-dit | diffusion-unet |
+    #                                   diffusion-mmdit | vision-convnext |
+    #                                   vision-effnet
+    make_config: Callable[[ShapeCell], Any]
+    make_reduced: Callable[[], Any]
+    shapes: Tuple[str, ...]
+    optimizer: str = "adamw"          # adamw | adafactor
+    fsdp_params: bool = False         # additionally shard params over data
+    param_dtype: str = "float32"      # storage dtype at full scale
+    train_microbatches: Optional[int] = None  # override the cell's count
+    technique: str = ""               # how CacheGenius applies (§Arch-applicability)
+    source: str = ""
+
+    @property
+    def family_group(self) -> str:
+        return ("lm" if self.family.startswith("lm")
+                else "vision" if self.family.startswith("vision")
+                else "diffusion")
+
+    def cells(self) -> Tuple[ShapeCell, ...]:
+        return tuple(get_shape(self.family_group, s) for s in self.shapes)
+
+
+_cache: Dict[str, ArchSpec] = {}
+
+
+def get_arch(name: str) -> ArchSpec:
+    if name not in _cache:
+        if name not in _MODULE_OF:
+            raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULE_OF)}")
+        mod = importlib.import_module(_MODULE_OF[name])
+        _cache[name] = mod.ARCH
+    return _cache[name]
+
+
+def list_archs(include_paper_model: bool = False) -> Tuple[str, ...]:
+    out = tuple(a for a in ARCH_IDS if a != "sd15-small")
+    return out + (("sd15-small",) if include_paper_model else ())
+
+
+def all_cells(include_paper_model: bool = False):
+    """Yield every assigned (arch, shape) pair — the 40 dry-run cells."""
+    for a in list_archs(include_paper_model):
+        arch = get_arch(a)
+        for cell in arch.cells():
+            yield arch, cell

@@ -1,0 +1,39 @@
+"""sd15-small — the CPU-scale reproduction model the benchmarks train.
+
+A tiny DiT + tiny VAE over the 32×32 synthetic captioned corpus; this is
+the "Stable Diffusion" stand-in that the CacheGenius experiments
+(benchmarks/) actually run end-to-end on this container.  Not part of the
+40 assigned dry-run cells.
+"""
+from __future__ import annotations
+
+from repro.configs.diffusion_common import DiffusionConfig
+from repro.configs.registry import ArchSpec
+from repro.configs.shapes import ShapeCell
+from repro.models.diffusion.dit import DiTConfig
+from repro.models.diffusion.vae import VAEConfig
+
+TINY_VAE = VAEConfig(in_ch=3, base_ch=16, ch_mult=(1, 2), z_ch=4, n_res=1)
+
+
+def make_config(cell: ShapeCell = None) -> DiffusionConfig:  # noqa: ARG001
+    return DiffusionConfig(
+        backbone="dit",
+        net=DiTConfig(img_res=8, in_ch=TINY_VAE.z_ch, patch=1,
+                      n_layers=4, d_model=128, n_heads=4, ctx_dim=512),
+        vae=TINY_VAE,
+    )
+
+
+make_reduced = make_config
+
+ARCH = ArchSpec(
+    name="sd15-small",
+    family="diffusion-dit",
+    make_config=make_config,
+    make_reduced=make_reduced,
+    shapes=("train_256", "gen_fast"),
+    optimizer="adamw",
+    technique="The reproduction substrate for every paper benchmark.",
+    source="this repo",
+)

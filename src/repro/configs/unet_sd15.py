@@ -1,0 +1,50 @@
+"""unet-sd15 — the paper's own base model (Stable Diffusion v1.5 UNet).
+
+[arXiv:2112.10752; paper]
+img_res=512 latent_res=64 ch=320 ch_mult=1-2-4-4 n_res_blocks=2
+attn_res=4-2-1 ctx_dim=768.  ≈0.86B UNet params.
+
+This is the arch the paper runs: SDEdit partial-noise start in latent
+space (§III-C) with K=20 < N=30/50 steps.
+"""
+from __future__ import annotations
+
+from repro.configs.diffusion_common import (DiffusionConfig, FULL_VAE,
+                                            REDUCED_VAE)
+from repro.configs.registry import ArchSpec
+from repro.configs.shapes import ShapeCell
+from repro.models.diffusion.unet import UNetConfig
+
+
+def make_config(cell: ShapeCell) -> DiffusionConfig:
+    return DiffusionConfig(
+        backbone="unet",
+        net=UNetConfig(in_ch=FULL_VAE.z_ch, ch=320, ch_mult=(1, 2, 4, 4),
+                       n_res=2, attn_factors=(1, 2, 4), n_heads=8,
+                       ctx_dim=768, remat=(cell.kind == "train")),
+        vae=FULL_VAE,
+        ctx_len=77, ctx_dim=768,
+    )
+
+
+def make_reduced() -> DiffusionConfig:
+    return DiffusionConfig(
+        backbone="unet",
+        net=UNetConfig(in_ch=REDUCED_VAE.z_ch, ch=16, ch_mult=(1, 2),
+                       n_res=1, attn_factors=(2,), n_heads=2, ctx_dim=64,
+                       groups=8),
+        vae=REDUCED_VAE,
+        ctx_len=8, ctx_dim=64,
+    )
+
+
+ARCH = ArchSpec(
+    name="unet-sd15",
+    family="diffusion-unet",
+    make_config=make_config,
+    make_reduced=make_reduced,
+    shapes=("train_256", "gen_1024", "gen_fast", "train_1024"),
+    optimizer="adamw",
+    technique="The paper's own model: SDEdit img2img in latent space.",
+    source="arXiv:2112.10752; paper",
+)

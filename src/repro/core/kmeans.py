@@ -1,0 +1,83 @@
+"""Jittable K-means — substrate of the storage classifier (paper §IV-C).
+
+The paper clusters CLIP embeddings of the reference corpus with K-means
+(Eq. 5) and stores each cluster on one edge node's vector DB.  We implement
+Lloyd's algorithm as a ``lax.scan`` over iterations so it jits, shards
+(points may be sharded over the data axis; the centroid update is a
+reduction GSPMD turns into an all-reduce), and runs identically on CPU/TPU.
+
+K-means++-style seeding is approximated with a deterministic farthest-point
+sweep, which is reproducible under jit (no rejection sampling).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class KMeansState(NamedTuple):
+    centroids: jax.Array  # (k, d)
+    assignment: jax.Array  # (n,) int32
+    inertia: jax.Array  # () — within-cluster sum of squared errors (Eq. 5)
+
+
+def _pairwise_sqdist(x, c):
+    """(n, d) x (k, d) -> (n, k) squared euclidean distances."""
+    # |x - c|^2 = |x|^2 - 2 x.c + |c|^2 ; keeps the n*k*d contraction on the MXU
+    x2 = jnp.sum(jnp.square(x), axis=-1, keepdims=True)
+    c2 = jnp.sum(jnp.square(c), axis=-1)
+    return x2 - 2.0 * (x @ c.T) + c2[None, :]
+
+
+def kmeans_assign(x, centroids):
+    """Nearest-centroid assignment. Returns (assignment, sq_distance)."""
+    d = _pairwise_sqdist(x, centroids)
+    idx = jnp.argmin(d, axis=-1)
+    return idx.astype(jnp.int32), jnp.min(d, axis=-1)
+
+
+def _seed_farthest_point(x, k):
+    """Deterministic farthest-point seeding (k-means++ flavoured)."""
+    n = x.shape[0]
+
+    def body(carry, _):
+        cents, mind, count = carry
+        nxt = jnp.argmax(mind)
+        cents = cents.at[count].set(x[nxt])
+        d = jnp.sum(jnp.square(x - x[nxt][None, :]), axis=-1)
+        mind = jnp.minimum(mind, d)
+        return (cents, mind, count + 1), None
+
+    cents0 = jnp.zeros((k, x.shape[-1]), x.dtype).at[0].set(x[0])
+    mind0 = jnp.sum(jnp.square(x - x[0][None, :]), axis=-1)
+    (cents, _, _), _ = jax.lax.scan(body, (cents0, mind0, jnp.int32(1)),
+                                    None, length=k - 1)
+    del n
+    return cents
+
+
+@partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans_fit(x, *, k: int, iters: int = 25) -> KMeansState:
+    """Lloyd's algorithm. x: (n, d) float. Empty clusters keep their centroid."""
+    x = x.astype(jnp.float32)
+    cents0 = _seed_farthest_point(x, k)
+
+    def step(cents, _):
+        idx, dmin = kmeans_assign(x, cents)
+        onehot = jax.nn.one_hot(idx, k, dtype=jnp.float32)  # (n, k)
+        counts = jnp.sum(onehot, axis=0)  # (k,)
+        sums = onehot.T @ x  # (k, d)
+        new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts, 1.0)[:, None],
+                        cents)
+        return new, jnp.sum(dmin)
+
+    cents, inertias = jax.lax.scan(step, cents0, None, length=iters)
+    idx, dmin = kmeans_assign(x, cents)
+    return KMeansState(centroids=cents, assignment=idx, inertia=jnp.sum(dmin))
+
+
+def cluster_sizes(assignment, k: int):
+    return jnp.bincount(assignment, length=k)

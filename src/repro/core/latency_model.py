@@ -1,0 +1,66 @@
+"""Latency (Eq. 8) and $ cost models.
+
+    L_i = t_retrieve + x_i * t_return + y_i * (t_noise + K * t_step)
+                     + z_i * N * t_step
+
+with exactly one of x, y, z set per request (direct return / img2img /
+txt2img).  ``t_step`` is per-node (heterogeneous GPUs in the paper; on TPU
+we derive it from the roofline terms of the compiled denoise step).
+
+The cost model mirrors the paper's AutoDL accounting: GPU-hours at per-node
+rates + a flat VDB rate, aggregated over a task stream (Fig. 17).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence
+
+from repro.core.policy import Route
+
+
+@dataclass
+class LatencyModel:
+    t_retrieve: float = 0.050   # VDB query
+    t_return: float = 0.020     # ship cached image to the user
+    t_noise: float = 0.005      # SDEdit forward noising (Eq. 4)
+    t_step: float = 0.060       # per denoising step (node-speed scaled)
+    t_schedule: float = 0.002   # Eq. 6 node matching
+    t_embed: float = 0.008      # CLIP encode of the prompt
+
+    def latency(self, route: Route, steps: int, *, node_speed: float = 1.0,
+                scheduled: bool = True, retrieved: bool = True) -> float:
+        t = self.t_embed + (self.t_schedule if scheduled else 0.0)
+        t += self.t_retrieve if retrieved else 0.0
+        step = self.t_step / max(node_speed, 1e-9)
+        if route is Route.HIT_RETURN:
+            return t + self.t_return
+        if route is Route.IMG2IMG:
+            return t + self.t_noise + steps * step
+        return t + steps * step
+
+    @classmethod
+    def from_roofline(cls, step_seconds: float, *, retrieve_seconds: float = 0.01,
+                      ) -> "LatencyModel":
+        """Build a TPU latency model from the dry-run's per-step roofline time."""
+        return cls(t_retrieve=retrieve_seconds, t_step=step_seconds,
+                   t_noise=step_seconds * 0.05, t_return=0.005)
+
+
+@dataclass
+class CostModel:
+    """Per-hour rates (paper's AutoDL numbers, $/h)."""
+
+    gpu_rates: Sequence[float] = (0.28, 0.28, 0.23, 0.084)  # 4090D, 4090D, 3090, 2070S
+    vdb_rate: float = 0.12
+    accumulated_gpu_s: Dict[int, float] = field(default_factory=dict)
+    vdb_busy_s: float = 0.0
+
+    def charge(self, node: int, gpu_seconds: float, vdb_seconds: float = 0.0) -> None:
+        self.accumulated_gpu_s[node] = self.accumulated_gpu_s.get(node, 0.0) + gpu_seconds
+        self.vdb_busy_s += vdb_seconds
+
+    def total_cost(self, *, vdb_wall_s: Optional[float] = None) -> float:
+        gpu = sum(self.gpu_rates[n % len(self.gpu_rates)] * s / 3600.0
+                  for n, s in self.accumulated_gpu_s.items())
+        vdb_s = self.vdb_busy_s if vdb_wall_s is None else vdb_wall_s
+        return gpu + self.vdb_rate * vdb_s / 3600.0

@@ -1,0 +1,86 @@
+"""Cache-maintenance policies (paper §IV-G, Algorithm 2).
+
+LCU — Least Correlation Used — scores every cached vector by its euclidean
+distance to the *current* semantic centre of its node's VDB and evicts the
+farthest ("semantic outliers carry mixed concepts of limited reference
+value").  LRU / LFU / FIFO are implemented on the same interface as the
+paper's baselines (Fig. 19).
+
+All policies operate across the fleet of node VDBs at once, exactly like
+Algorithm 2: build one global list, sort by the policy key, pop until the
+total size fits ``C_max``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.vdb import VectorDB
+
+
+class EvictionPolicy:
+    name = "base"
+
+    def scores(self, db: VectorDB) -> np.ndarray:
+        """Higher score = evicted earlier. Only valid slots are consulted."""
+        raise NotImplementedError
+
+    def maintain(self, dbs: Sequence[VectorDB], c_max: int,
+                 ) -> Dict[int, np.ndarray]:
+        """Algorithm 2: evict across all nodes until total size <= c_max.
+
+        Returns {node_index: evicted payload ids}.
+        """
+        entries: List[Tuple[float, int, int]] = []  # (score, node, slot)
+        total = 0
+        for ni, db in enumerate(dbs):
+            total += db.size
+            s = self.scores(db)
+            for slot in np.flatnonzero(db.valid):
+                entries.append((float(s[slot]), ni, int(slot)))
+        evicted: Dict[int, List[int]] = {}
+        if total <= c_max:
+            return {}
+        entries.sort(key=lambda e: e[0], reverse=True)  # farthest first
+        n_evict = total - c_max
+        for score, ni, slot in entries[:n_evict]:
+            payloads = dbs[ni].evict_slots(np.array([slot]))
+            evicted.setdefault(ni, []).extend(int(p) for p in payloads)
+        return {ni: np.array(v, np.int64) for ni, v in evicted.items()}
+
+
+class LCUPolicy(EvictionPolicy):
+    """Least Correlation Used: distance-to-centroid outlier eviction."""
+
+    name = "LCU"
+
+    def scores(self, db: VectorDB) -> np.ndarray:
+        mu = db.centroid()
+        d = np.linalg.norm(db.img_vecs - mu[None, :], axis=-1)
+        return np.where(db.valid, d, -np.inf)
+
+
+class LRUPolicy(EvictionPolicy):
+    name = "LRU"
+
+    def scores(self, db: VectorDB) -> np.ndarray:
+        # least-recently-used = oldest last_access evicted first
+        return np.where(db.valid, -db.last_access, -np.inf)
+
+
+class LFUPolicy(EvictionPolicy):
+    name = "LFU"
+
+    def scores(self, db: VectorDB) -> np.ndarray:
+        return np.where(db.valid, -db.access_count.astype(np.float64), -np.inf)
+
+
+class FIFOPolicy(EvictionPolicy):
+    name = "FIFO"
+
+    def scores(self, db: VectorDB) -> np.ndarray:
+        return np.where(db.valid, -db.insert_time, -np.inf)
+
+
+POLICIES = {p.name: p for p in (LCUPolicy(), LRUPolicy(), LFUPolicy(), FIFOPolicy())}

@@ -1,0 +1,67 @@
+"""Generation-strategy policy (paper §IV-F, Algorithm 1, Fig. 7).
+
+Composite similarity score  S = CLIPScore + PickScore  (Eq. 7), then:
+
+    S  > hi  (0.5)        -> HIT_RETURN  : ship the cached image, 0 steps
+    lo <= S <= hi (0.4..) -> IMG2IMG     : SDEdit from noised reference, K steps
+    S  < lo  (0.4)        -> TXT2IMG     : full generation from noise, N steps
+
+Both scores are normalised to [0, 1] before summing and the sum is halved,
+so thresholds live on the paper's 0..1 scale. Thresholds are configurable —
+benchmark fig15 sweeps them exactly like the paper's Figure 15.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+from typing import Callable
+
+import numpy as np
+
+
+class Route(enum.Enum):
+    HIT_RETURN = "hit_return"
+    IMG2IMG = "img2img"
+    TXT2IMG = "txt2img"
+
+
+@dataclass
+class GenerationPolicy:
+    lo: float = 0.4
+    hi: float = 0.5
+    steps_full: int = 30   # N — text-to-image denoising steps
+    steps_ref: int = 20    # K — image-to-image denoising steps (K < N)
+
+    def composite_score(self, clip_score: float, pick_score: float) -> float:
+        """Eq. 7 with both terms mapped to [0,1]; mean keeps S in [0,1]."""
+        return 0.5 * (float(clip_score) + float(pick_score))
+
+    def route(self, score: float) -> Route:
+        if score > self.hi:
+            return Route.HIT_RETURN
+        if score >= self.lo:
+            return Route.IMG2IMG
+        return Route.TXT2IMG
+
+    def steps_for(self, route: Route) -> int:
+        return {Route.HIT_RETURN: 0, Route.IMG2IMG: self.steps_ref,
+                Route.TXT2IMG: self.steps_full}[route]
+
+
+def select_reference(scores: np.ndarray) -> int:
+    """argmax over the unioned candidate set (Algorithm 1 line 8)."""
+    if scores.size == 0:
+        return -1
+    return int(np.argmax(scores))
+
+
+def make_score_fn(embedder) -> Callable:
+    """Build S_sim(P, I) from an embedding generator: CLIPScore uses the
+    text/image cosine; PickScore uses the embedder's preference proxy."""
+
+    def score(prompt_vec: np.ndarray, img_vec: np.ndarray, image=None) -> float:
+        clip_s = float(np.clip((prompt_vec @ img_vec + 1.0) / 2.0, 0.0, 1.0))
+        pick_s = float(embedder.pick_score(prompt_vec, img_vec, image))
+        return clip_s, pick_s
+
+    return score

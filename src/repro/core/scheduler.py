@@ -1,0 +1,141 @@
+"""Request scheduler (paper §IV-E).
+
+Routes each request to the edge node whose VDB's mean embedding (the "node
+representation vector") is most cosine-similar to the prompt embedding
+(Eq. 6).  Adds the paper's two fast paths:
+
+* **historical query cache** — near-duplicate prompts (cosine above
+  ``dedup_threshold``) return the previously generated image directly,
+  skipping scheduling AND VDB retrieval;
+* **quality-aware priority scheduling** — repeated prompts from
+  quality-tier users are pinned to the fastest node and forced through the
+  full text-to-image path for maximum quality.
+
+The scheduler also load-balances: the similarity score is penalised by each
+node's queue depth so a hot cluster does not starve (the paper's async task
+queue serves the same purpose).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.vdb import VectorDB
+
+
+@dataclass
+class NodeInfo:
+    index: int
+    speed: float = 1.0           # relative denoise-step throughput (RTX mix)
+    queue_depth: int = 0
+    alive: bool = True
+
+
+@dataclass
+class ScheduleDecision:
+    node: int
+    fast_path: Optional[str] = None      # None | "history" | "priority"
+    history_payload: Optional[int] = None
+    match_score: float = 0.0
+
+
+@dataclass
+class RequestScheduler:
+    nodes: List[NodeInfo]
+    dedup_threshold: float = 0.97
+    balance_weight: float = 0.02
+    history_capacity: int = 4096
+    _hist_vecs: np.ndarray = field(default=None, repr=False)  # type: ignore
+    _hist_payloads: List[int] = field(default_factory=list, repr=False)
+    _hist_hits: int = 0
+    _prompt_counts: Dict[int, int] = field(default_factory=dict, repr=False)
+
+    def __post_init__(self):
+        self._hist_vecs = np.zeros((0, 512), np.float32)
+
+    # -- node representation vectors ----------------------------------------
+
+    @staticmethod
+    def node_vectors(dbs: Sequence[VectorDB]) -> np.ndarray:
+        vecs = np.stack([db.centroid() for db in dbs])
+        n = np.linalg.norm(vecs, axis=-1, keepdims=True)
+        return vecs / np.maximum(n, 1e-12)
+
+    # -- main entry -----------------------------------------------------------
+
+    def schedule(self, prompt_vec: np.ndarray, dbs: Sequence[VectorDB], *,
+                 quality_tier: bool = False, prompt_key: Optional[int] = None,
+                 ) -> ScheduleDecision:
+        # fast path 1: historical query cache
+        hist = self._history_lookup(prompt_vec)
+        if hist is not None:
+            self._hist_hits += 1
+            return ScheduleDecision(node=-1, fast_path="history",
+                                    history_payload=hist, match_score=1.0)
+
+        # fast path 2: quality-aware priority scheduling for repeated prompts
+        if prompt_key is not None:
+            c = self._prompt_counts.get(prompt_key, 0)
+            self._prompt_counts[prompt_key] = c + 1
+            if quality_tier and c > 0:
+                fastest = max((n for n in self.nodes if n.alive),
+                              key=lambda n: n.speed)
+                fastest.queue_depth += 1
+                return ScheduleDecision(node=fastest.index, fast_path="priority")
+
+        # Eq. 6: cosine(prompt, node representation), minus a load penalty
+        reps = self.node_vectors(dbs)
+        q = prompt_vec / max(np.linalg.norm(prompt_vec), 1e-12)
+        sims = reps @ q
+        for n in self.nodes:
+            if not n.alive:
+                sims[n.index] = -np.inf
+            else:
+                sims[n.index] -= self.balance_weight * n.queue_depth
+        node = int(np.argmax(sims))
+        self.nodes[node].queue_depth += 1
+        return ScheduleDecision(node=node, match_score=float(sims[node]))
+
+    def complete(self, node: int) -> None:
+        if 0 <= node < len(self.nodes):
+            self.nodes[node].queue_depth = max(0, self.nodes[node].queue_depth - 1)
+
+    # -- history cache --------------------------------------------------------
+
+    def _history_lookup(self, vec: np.ndarray) -> Optional[int]:
+        if self._hist_vecs.shape[0] == 0:
+            return None
+        q = vec / max(np.linalg.norm(vec), 1e-12)
+        sims = self._hist_vecs @ q
+        i = int(np.argmax(sims))
+        if sims[i] >= self.dedup_threshold:
+            return self._hist_payloads[i]
+        return None
+
+    def record_result(self, prompt_vec: np.ndarray, payload_id: int) -> None:
+        q = prompt_vec / max(np.linalg.norm(prompt_vec), 1e-12)
+        self._hist_vecs = np.concatenate([self._hist_vecs, q[None]])[-self.history_capacity:]
+        self._hist_payloads = (self._hist_payloads + [payload_id])[-self.history_capacity:]
+
+    def invalidate_payloads(self, payload_ids) -> None:
+        """Cache-maintenance consistency (paper §IV-G: image files are
+        removed synchronously): drop history entries whose blobs were
+        evicted, else a history hit would dereference a deleted image."""
+        doomed = set(int(p) for p in payload_ids)
+        if not doomed or self._hist_vecs.shape[0] == 0:
+            return
+        keep = [i for i, p in enumerate(self._hist_payloads)
+                if p not in doomed]
+        self._hist_vecs = self._hist_vecs[keep]
+        self._hist_payloads = [self._hist_payloads[i] for i in keep]
+
+    # -- failures ---------------------------------------------------------------
+
+    def mark_failed(self, node: int) -> None:
+        self.nodes[node].alive = False
+
+    @property
+    def history_hits(self) -> int:
+        return self._hist_hits

@@ -1,0 +1,104 @@
+"""Storage classifier (paper §IV-C): cluster the corpus, one cluster per node.
+
+K-means over the corpus *image* embeddings (the paper clusters both
+modalities, observes high cross-modal consistency — Fig. 6b — and picks the
+image-vector clustering for placement); cluster i's vectors are inserted
+into edge node i's VDB.  The classifier also owns the fitted centroids so
+that (a) the request scheduler can route by centroid similarity and (b) a
+failed node's shard can be reassigned to the nearest surviving centroid.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kmeans import kmeans_assign, kmeans_fit
+from repro.core.vdb import VectorDB
+
+
+class StorageClassifier:
+    def __init__(self, n_nodes: int, *, iters: int = 25):
+        self.n_nodes = n_nodes
+        self.iters = iters
+        self.centroids: Optional[np.ndarray] = None  # (n_nodes, d)
+        self.modal_consistency: Optional[float] = None
+
+    def fit(self, img_vecs: np.ndarray, txt_vecs: Optional[np.ndarray] = None,
+            ) -> np.ndarray:
+        """Cluster image vectors into n_nodes clusters; returns assignment.
+
+        If text vectors are given, also measures image/text cluster
+        consistency (the paper's Fig. 6b argument for using image vectors).
+        """
+        state = kmeans_fit(jnp.asarray(img_vecs), k=self.n_nodes, iters=self.iters)
+        self.centroids = np.asarray(state.centroids)
+        assignment = np.asarray(state.assignment)
+        if txt_vecs is not None:
+            t_state = kmeans_fit(jnp.asarray(txt_vecs), k=self.n_nodes,
+                                 iters=self.iters)
+            self.modal_consistency = _cluster_agreement(
+                assignment, np.asarray(t_state.assignment), self.n_nodes)
+        return assignment
+
+    def assign(self, img_vecs: np.ndarray) -> np.ndarray:
+        assert self.centroids is not None, "fit() first"
+        idx, _ = kmeans_assign(jnp.asarray(img_vecs, jnp.float32),
+                               jnp.asarray(self.centroids))
+        return np.asarray(idx)
+
+    def build_node_dbs(self, img_vecs: np.ndarray, txt_vecs: np.ndarray,
+                       payload_ids: np.ndarray, *, capacity_per_node: int,
+                       use_pallas: bool = False, t0: float = 0.0,
+                       ) -> List[VectorDB]:
+        """Fit + materialise the per-node VDBs (data-preprocessing phase)."""
+        assignment = self.fit(img_vecs, txt_vecs)
+        dbs = []
+        for ni in range(self.n_nodes):
+            db = VectorDB(img_vecs.shape[-1], capacity_per_node,
+                          name=f"node{ni}", use_pallas=use_pallas)
+            sel = np.flatnonzero(assignment == ni)
+            if sel.size:
+                # Respect capacity at build time; the LCU policy maintains it after.
+                sel = sel[:capacity_per_node]
+                db.add(img_vecs[sel], txt_vecs[sel], payload_ids[sel], t=t0)
+            dbs.append(db)
+        return dbs
+
+    def reassign_failed_node(self, dbs: Sequence[VectorDB], failed: int,
+                             t: float) -> None:
+        """Node-failure recovery: move the failed node's entries to the
+        nearest surviving centroid's VDB and drop the failed centroid."""
+        assert self.centroids is not None
+        db = dbs[failed]
+        survivors = [i for i in range(len(dbs)) if i != failed]
+        surv_cents = self.centroids[survivors]
+        sel = np.flatnonzero(db.valid)
+        if sel.size:
+            idx, _ = kmeans_assign(jnp.asarray(db.img_vecs[sel]),
+                                   jnp.asarray(surv_cents))
+            idx = np.asarray(idx)
+            for j, ni in enumerate(survivors):
+                pick = sel[idx == j]
+                if pick.size:
+                    dbs[ni].add(db.img_vecs[pick], db.txt_vecs[pick],
+                                db.payload_ids[pick], t=t)
+            db.evict_slots(sel)
+        self.centroids = surv_cents
+
+
+def _cluster_agreement(a: np.ndarray, b: np.ndarray, k: int) -> float:
+    """Best-match overlap between two clusterings (greedy Hungarian-ish)."""
+    conf = np.zeros((k, k), np.int64)
+    for i, j in zip(a, b):
+        conf[i, j] += 1
+    total = len(a)
+    agree = 0
+    used = set()
+    for i in np.argsort(-conf.max(axis=1)):
+        j = int(np.argmax(np.where(np.isin(np.arange(k), list(used)),
+                                   -1, conf[i])))
+        used.add(j)
+        agree += conf[i, j]
+    return agree / max(total, 1)

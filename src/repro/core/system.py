@@ -1,0 +1,231 @@
+"""CacheGenius orchestrator — the end-to-end request path of Fig. 5.
+
+request -> prompt-optimizer -> embedding-generator -> request-scheduler
+        -> VDB dual retrieval on the chosen node -> Algorithm 1 routing
+        -> {return cached | SDEdit img2img (K steps) | txt2img (N steps)}
+        -> archive result to blob store + VDB insert -> periodic LCU sweep
+
+The denoising backends are injected (``GenerationBackend``) so the same
+orchestrator drives the tiny CPU DiT in benchmarks, the SD1.5-class UNet in
+the examples, and a ShapeDtypeStruct-only stub in the dry-run.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.embeddings import ProxyClipEmbedder
+from repro.core.latency_model import CostModel, LatencyModel
+from repro.core.lcu import EvictionPolicy, LCUPolicy
+from repro.core.policy import GenerationPolicy, Route
+from repro.core.prompt_optimizer import PromptOptimizer
+from repro.core.scheduler import NodeInfo, RequestScheduler, ScheduleDecision
+from repro.core.storage_classifier import StorageClassifier
+from repro.core.vdb import BlobStore, VectorDB
+from repro.utils import stable_hash
+
+
+@dataclass
+class GenerationBackend:
+    """txt2img(prompt, steps, seed) / img2img(prompt, reference, steps, seed)
+    both return an (H, W, 3) float image in [-1, 1]."""
+
+    txt2img: Callable[[str, int, int], np.ndarray]
+    img2img: Callable[[str, np.ndarray, int, int], np.ndarray]
+
+
+@dataclass
+class ServeResult:
+    image: np.ndarray
+    route: Route
+    node: int
+    score: float
+    latency: float            # Eq. 8 modelled latency
+    wall_latency: float       # measured wall-clock on this host
+    steps: int
+    fast_path: Optional[str] = None
+
+
+@dataclass
+class ServeStats:
+    route_counts: Dict[str, int] = field(default_factory=dict)
+    latencies: List[float] = field(default_factory=list)
+    wall_latencies: List[float] = field(default_factory=list)
+    scores: List[float] = field(default_factory=list)
+    requests: int = 0
+    cache_hits: int = 0        # HIT_RETURN + history fast path
+    reference_hits: int = 0    # IMG2IMG
+
+    def record(self, r: ServeResult) -> None:
+        self.requests += 1
+        key = r.fast_path or r.route.value
+        self.route_counts[key] = self.route_counts.get(key, 0) + 1
+        self.latencies.append(r.latency)
+        self.wall_latencies.append(r.wall_latency)
+        self.scores.append(r.score)
+        if r.route is Route.HIT_RETURN or r.fast_path == "history":
+            self.cache_hits += 1
+        elif r.route is Route.IMG2IMG:
+            self.reference_hits += 1
+
+    @property
+    def hit_rate(self) -> float:
+        """Any outcome that avoided full-noise generation counts as a hit."""
+        useful = self.cache_hits + self.reference_hits
+        return useful / max(self.requests, 1)
+
+
+class CacheGenius:
+    def __init__(self, *, embedder, dbs: Sequence[VectorDB], blob_store: BlobStore,
+                 backend: GenerationBackend,
+                 classifier: Optional[StorageClassifier] = None,
+                 policy: Optional[GenerationPolicy] = None,
+                 latency_model: Optional[LatencyModel] = None,
+                 cost_model: Optional[CostModel] = None,
+                 eviction: Optional[EvictionPolicy] = None,
+                 prompt_optimizer: Optional[PromptOptimizer] = None,
+                 node_speeds: Optional[Sequence[float]] = None,
+                 cache_capacity: Optional[int] = None,
+                 maintenance_interval: int = 200,
+                 topk: int = 8,
+                 use_scheduler: bool = True,
+                 use_prompt_optimizer: bool = True):
+        self.embedder = embedder
+        self.dbs = list(dbs)
+        self.blob_store = blob_store
+        self.backend = backend
+        self.classifier = classifier
+        self.policy = policy or GenerationPolicy()
+        self.latency_model = latency_model or LatencyModel()
+        self.cost_model = cost_model or CostModel()
+        self.eviction = eviction or LCUPolicy()
+        self.prompt_optimizer = prompt_optimizer or PromptOptimizer()
+        speeds = list(node_speeds or [1.0] * len(self.dbs))
+        self.scheduler = RequestScheduler(
+            nodes=[NodeInfo(i, speed=s) for i, s in enumerate(speeds)])
+        self.cache_capacity = cache_capacity or sum(db.capacity for db in self.dbs)
+        self.maintenance_interval = maintenance_interval
+        self.topk = topk
+        self.use_scheduler = use_scheduler
+        self.use_prompt_optimizer = use_prompt_optimizer
+        self.stats = ServeStats()
+        self.clock = 0.0
+
+    # ------------------------------------------------------------------ serve
+
+    def serve(self, prompt: str, *, seed: int = 0, quality_tier: bool = False,
+              ) -> ServeResult:
+        t_wall0 = time.perf_counter()
+        self.clock += 1.0
+        raw_prompt = prompt
+        if self.use_prompt_optimizer:
+            prompt = self.prompt_optimizer.optimize(prompt)
+        pvec = self.embedder.embed_text([raw_prompt])[0]
+        pkey = stable_hash(raw_prompt, 1 << 62)
+
+        if self.use_scheduler:
+            decision = self.scheduler.schedule(
+                pvec, self.dbs, quality_tier=quality_tier, prompt_key=pkey)
+        else:
+            decision = ScheduleDecision(node=int(self.clock) % len(self.dbs))
+
+        # fast path: historical query cache — reuse the archived image
+        if decision.fast_path == "history":
+            img = self.blob_store.get(decision.history_payload)
+            res = self._finish(img, Route.HIT_RETURN, -1, 1.0, t_wall0,
+                               steps=0, retrieved=False, fast="history")
+            return res
+
+        node = decision.node
+        db = self.dbs[node]
+
+        # quality-priority fast path: forced full-quality txt2img, no retrieval
+        if decision.fast_path == "priority":
+            steps = self.policy.steps_full
+            img = self.backend.txt2img(prompt, steps, seed)
+            self._archive(raw_prompt, pvec, img, node)
+            self.scheduler.complete(node)
+            return self._finish(img, Route.TXT2IMG, node, 0.0, t_wall0,
+                                steps=steps, retrieved=False, fast="priority")
+
+        # dual ANN retrieval + composite scoring (Algorithm 1)
+        scores, slots = db.search(pvec, self.topk)
+        best_slot, best_score = -1, -1.0
+        for sc, sl in zip(scores, slots):
+            ivec = db.img_vecs[sl]
+            clip_s = self.embedder.clip_score(pvec, ivec)
+            pick_s = self.embedder.pick_score(pvec, ivec)
+            s = self.policy.composite_score(clip_s, pick_s)
+            if s > best_score:
+                best_score, best_slot = s, int(sl)
+
+        route = self.policy.route(best_score) if best_slot >= 0 else Route.TXT2IMG
+        steps = self.policy.steps_for(route)
+
+        if route is Route.HIT_RETURN:
+            db.mark_access(np.array([best_slot]), self.clock)
+            img = self.blob_store.get(int(db.payload_ids[best_slot]))
+        elif route is Route.IMG2IMG:
+            db.mark_access(np.array([best_slot]), self.clock)
+            ref = self.blob_store.get(int(db.payload_ids[best_slot]))
+            img = self.backend.img2img(prompt, ref, steps, seed)
+            self._archive(raw_prompt, pvec, img, node)
+        else:
+            img = self.backend.txt2img(prompt, steps, seed)
+            self._archive(raw_prompt, pvec, img, node)
+
+        self.scheduler.complete(node)
+        if self.stats.requests % self.maintenance_interval == self.maintenance_interval - 1:
+            self.maintain()
+        return self._finish(img, route, node, best_score, t_wall0, steps=steps)
+
+    # ------------------------------------------------------------- internals
+
+    def _archive(self, prompt: str, pvec: np.ndarray, img: np.ndarray,
+                 node: int) -> None:
+        """Store the generated image to NFS (blob store) + insert into VDB."""
+        pid = self.blob_store.put(img)
+        ivec = self.embedder.embed_image(img[None])[0]
+        self.dbs[node].add(ivec[None], pvec[None], np.array([pid]), self.clock)
+        self.scheduler.record_result(pvec, pid)
+
+    def _finish(self, img, route, node, score, t_wall0, *, steps, retrieved=True,
+                fast=None) -> ServeResult:
+        speed = (self.scheduler.nodes[node].speed if 0 <= node < len(self.dbs)
+                 else max(n.speed for n in self.scheduler.nodes))
+        lat = self.latency_model.latency(route, steps, node_speed=speed,
+                                         scheduled=self.use_scheduler,
+                                         retrieved=retrieved)
+        gpu_s = steps * self.latency_model.t_step / max(speed, 1e-9)
+        self.cost_model.charge(max(node, 0), gpu_s,
+                               vdb_seconds=self.latency_model.t_retrieve if retrieved else 0.0)
+        res = ServeResult(image=img, route=route, node=node, score=score,
+                          latency=lat, wall_latency=time.perf_counter() - t_wall0,
+                          steps=steps, fast_path=fast)
+        self.stats.record(res)
+        return res
+
+    def maintain(self) -> Dict[int, np.ndarray]:
+        """Run the eviction policy across all node VDBs (Algorithm 2)."""
+        evicted = self.eviction.maintain(self.dbs, self.cache_capacity)
+        all_payloads = []
+        for _, payloads in evicted.items():
+            for p in payloads:
+                self.blob_store.delete(int(p))
+                all_payloads.append(int(p))
+        # keep the historical-query cache consistent with the blob store
+        self.scheduler.invalidate_payloads(all_payloads)
+        return evicted
+
+    def fail_node(self, node: int) -> None:
+        """Edge-node failure: reassign its VDB shard, stop routing to it."""
+        self.scheduler.mark_failed(node)
+        if self.classifier is not None:
+            self.classifier.reassign_failed_node(self.dbs, node, self.clock)
+
+    @property
+    def total_size(self) -> int:
+        return sum(db.size for db in self.dbs)

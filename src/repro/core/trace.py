@@ -1,0 +1,76 @@
+"""Request-trace generator for the serving experiments.
+
+Real text-to-image traffic is heavy-tailed with topic drift (NIRVANA's
+production observation, which the paper's LCU experiment leans on: "5 cache
+updates" under a shifting query distribution).  We model:
+
+  * a Zipf popularity law over scene specs,
+  * topic drift: the Zipf ranking rotates every ``drift_every`` requests,
+  * optional quality-tier users (paper's artistic/professional requests),
+  * near-duplicate prompts (verbatim repeats) at rate ``repeat_rate`` to
+    exercise the historical-query cache.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterator, List, Optional
+
+import numpy as np
+
+from repro.data.synthetic import SceneSpec, caption_of, random_spec
+
+
+@dataclass
+class TraceRequest:
+    prompt: str
+    spec: SceneSpec
+    quality_tier: bool = False
+    is_repeat: bool = False
+
+
+@dataclass
+class RequestTrace:
+    n_specs: int = 400
+    zipf_a: float = 1.2
+    drift_every: int = 250
+    repeat_rate: float = 0.08
+    quality_rate: float = 0.05
+    seed: int = 0
+    _specs: List[SceneSpec] = field(default_factory=list)
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        seen = set()
+        while len(self._specs) < self.n_specs:
+            s = random_spec(rng)
+            if s.key() not in seen:
+                seen.add(s.key())
+                self._specs.append(s)
+
+    def generate(self, n: int) -> Iterator[TraceRequest]:
+        rng = np.random.default_rng(self.seed + 1)
+        order = rng.permutation(self.n_specs)
+        # Zipf over ranks, truncated to the spec pool
+        ranks = np.arange(1, self.n_specs + 1, dtype=np.float64)
+        probs = ranks ** (-self.zipf_a)
+        probs /= probs.sum()
+        last_prompt: Optional[TraceRequest] = None
+        for i in range(n):
+            if i > 0 and i % self.drift_every == 0:
+                # topic drift: rotate which specs are popular
+                order = np.roll(order, self.n_specs // 7)
+            if last_prompt is not None and rng.random() < self.repeat_rate:
+                yield TraceRequest(last_prompt.prompt, last_prompt.spec,
+                                   quality_tier=rng.random() < self.quality_rate,
+                                   is_repeat=True)
+                continue
+            rank = rng.choice(self.n_specs, p=probs)
+            spec = self._specs[order[rank]]
+            req = TraceRequest(caption_of(spec), spec,
+                               quality_tier=rng.random() < self.quality_rate)
+            last_prompt = req
+            yield req
+
+    @property
+    def specs(self) -> List[SceneSpec]:
+        return list(self._specs)

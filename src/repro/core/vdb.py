@@ -1,0 +1,204 @@
+"""In-framework vector database (paper's pgvector equivalent, §IV-C/§IV-F).
+
+One ``VectorDB`` instance per edge node.  Each entry carries BOTH the image
+embedding and the caption/text embedding (the paper's dual ANN retrieval,
+Algorithm 1 lines 2-3), plus the bookkeeping the eviction policies need
+(insert time, access counts, last access).
+
+Storage layout is a fixed-capacity slab of numpy arrays with a validity
+mask; similarity search runs as a jitted masked matmul + top-k on device.
+On TPU the scan dispatches to the fused Pallas similarity+top-k kernel
+(``repro.kernels.ops.vdb_topk``); the jnp path is the oracle.
+
+``payload_ids`` are opaque ints pointing into a :class:`BlobStore` (the
+paper's NFS layer).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class BlobStore:
+    """The shared image store (paper: 500GB NFS PersistentVolume)."""
+
+    def __init__(self):
+        self._blobs: Dict[int, np.ndarray] = {}
+        self._next = 0
+
+    def put(self, blob: np.ndarray) -> int:
+        bid = self._next
+        self._next += 1
+        self._blobs[bid] = np.asarray(blob)
+        return bid
+
+    def get(self, bid: int) -> np.ndarray:
+        return self._blobs[bid]
+
+    def delete(self, bid: int) -> None:
+        self._blobs.pop(bid, None)
+
+    def __len__(self) -> int:
+        return len(self._blobs)
+
+    def nbytes(self) -> int:
+        return sum(b.nbytes for b in self._blobs.values())
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _masked_topk(query, db, valid, k: int):
+    """Cosine top-k of `query` (d,) against `db` (cap, d) under mask."""
+    scores = db @ query  # vectors are L2-normalised at insert
+    scores = jnp.where(valid, scores, -jnp.inf)
+    return jax.lax.top_k(scores, k)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _masked_topk_batch(queries, db, valid, k: int):
+    scores = queries @ db.T
+    scores = jnp.where(valid[None, :], scores, -jnp.inf)
+    return jax.lax.top_k(scores, k)
+
+
+def _l2n(x: np.ndarray) -> np.ndarray:
+    n = np.linalg.norm(x, axis=-1, keepdims=True)
+    return x / np.maximum(n, 1e-12)
+
+
+class VectorDB:
+    """Fixed-capacity dual-index vector DB for one edge node."""
+
+    def __init__(self, dim: int, capacity: int, *, name: str = "node",
+                 use_pallas: bool = False):
+        self.dim = dim
+        self.capacity = capacity
+        self.name = name
+        self.use_pallas = use_pallas
+        self.img_vecs = np.zeros((capacity, dim), np.float32)
+        self.txt_vecs = np.zeros((capacity, dim), np.float32)
+        self.valid = np.zeros((capacity,), bool)
+        self.insert_time = np.full((capacity,), -1.0, np.float64)
+        self.last_access = np.full((capacity,), -1.0, np.float64)
+        self.access_count = np.zeros((capacity,), np.int64)
+        self.payload_ids = np.full((capacity,), -1, np.int64)
+        self.query_count = 0
+
+    # -- mutation ----------------------------------------------------------
+
+    def add(self, img_vecs: np.ndarray, txt_vecs: np.ndarray,
+            payload_ids: np.ndarray, t: float) -> np.ndarray:
+        """Insert a batch; overwrite oldest entries if full (FIFO pressure
+        valve — the real policy runs via :mod:`repro.core.lcu`)."""
+        img_vecs = _l2n(np.atleast_2d(np.asarray(img_vecs, np.float32)))
+        txt_vecs = _l2n(np.atleast_2d(np.asarray(txt_vecs, np.float32)))
+        payload_ids = np.atleast_1d(np.asarray(payload_ids, np.int64))
+        n = img_vecs.shape[0]
+        free = np.flatnonzero(~self.valid)
+        if len(free) < n:  # overwrite oldest
+            order = np.argsort(np.where(self.valid, self.insert_time, -np.inf))
+            extra = order[: n - len(free)]
+            free = np.concatenate([free, extra])
+        slots = free[:n]
+        self.img_vecs[slots] = img_vecs
+        self.txt_vecs[slots] = txt_vecs
+        self.valid[slots] = True
+        self.insert_time[slots] = t
+        self.last_access[slots] = t
+        self.access_count[slots] = 0
+        self.payload_ids[slots] = payload_ids
+        return slots
+
+    def evict_slots(self, slots: np.ndarray) -> np.ndarray:
+        """Invalidate slots; returns the payload ids to delete from the blob
+        store (the paper synchronously removes image files for consistency)."""
+        slots = np.atleast_1d(np.asarray(slots))
+        payloads = self.payload_ids[slots].copy()
+        self.valid[slots] = False
+        self.payload_ids[slots] = -1
+        return payloads
+
+    def mark_access(self, slots: np.ndarray, t: float) -> None:
+        slots = np.atleast_1d(np.asarray(slots))
+        self.access_count[slots] += 1
+        self.last_access[slots] = t
+
+    # -- search ------------------------------------------------------------
+
+    def search(self, query_vec: np.ndarray, k: int,
+               *, index: str = "both") -> Tuple[np.ndarray, np.ndarray]:
+        """Dual ANN retrieval (Algorithm 1 lines 2-4).
+
+        Returns (scores, slots) of up to 2k unioned candidates (or k when a
+        single index is selected); invalid slots get score=-inf.
+        """
+        self.query_count += 1
+        q = _l2n(np.asarray(query_vec, np.float32).reshape(-1))
+        k = min(k, self.capacity)
+        if self.use_pallas:
+            from repro.kernels import ops as kops
+            searcher = lambda db: kops.vdb_topk(  # noqa: E731
+                jnp.asarray(q)[None], jnp.asarray(db), jnp.asarray(self.valid), k)
+            out = []
+            if index in ("img", "both"):
+                s, i = searcher(self.img_vecs)
+                out.append((np.asarray(s)[0], np.asarray(i)[0]))
+            if index in ("txt", "both"):
+                s, i = searcher(self.txt_vecs)
+                out.append((np.asarray(s)[0], np.asarray(i)[0]))
+        else:
+            out = []
+            if index in ("img", "both"):
+                s, i = _masked_topk(jnp.asarray(q), jnp.asarray(self.img_vecs),
+                                    jnp.asarray(self.valid), k)
+                out.append((np.asarray(s), np.asarray(i)))
+            if index in ("txt", "both"):
+                s, i = _masked_topk(jnp.asarray(q), jnp.asarray(self.txt_vecs),
+                                    jnp.asarray(self.valid), k)
+                out.append((np.asarray(s), np.asarray(i)))
+        scores = np.concatenate([o[0] for o in out])
+        slots = np.concatenate([o[1] for o in out])
+        # de-duplicate the union, keep best score per slot
+        best: Dict[int, float] = {}
+        for sc, sl in zip(scores, slots):
+            if not np.isfinite(sc):
+                continue
+            if sl not in best or sc > best[sl]:
+                best[int(sl)] = float(sc)
+        if not best:
+            return np.empty((0,), np.float32), np.empty((0,), np.int64)
+        slots_u = np.array(sorted(best, key=best.get, reverse=True), np.int64)
+        scores_u = np.array([best[s] for s in slots_u], np.float32)
+        return scores_u, slots_u
+
+    # -- stats -------------------------------------------------------------
+
+    @property
+    def size(self) -> int:
+        return int(self.valid.sum())
+
+    def centroid(self) -> np.ndarray:
+        """Node representation vector = mean of stored image vectors (§IV-E)."""
+        if self.size == 0:
+            return np.zeros((self.dim,), np.float32)
+        return self.img_vecs[self.valid].mean(axis=0)
+
+    def snapshot(self) -> dict:
+        """Serializable state (for checkpoint / node-failure recovery)."""
+        return {
+            "img_vecs": self.img_vecs.copy(), "txt_vecs": self.txt_vecs.copy(),
+            "valid": self.valid.copy(), "insert_time": self.insert_time.copy(),
+            "last_access": self.last_access.copy(),
+            "access_count": self.access_count.copy(),
+            "payload_ids": self.payload_ids.copy(),
+        }
+
+    @classmethod
+    def restore(cls, dim: int, capacity: int, state: dict, **kw) -> "VectorDB":
+        db = cls(dim, capacity, **kw)
+        for k_, v in state.items():
+            setattr(db, k_, v.copy())
+        return db

@@ -1,0 +1,7 @@
+"""Data substrate: procedural captioned-image corpus + sharded pipeline."""
+from repro.data.synthetic import (  # noqa: F401
+    SceneSpec, make_corpus, render_caption, render_scene, caption_of,
+    parse_caption, random_spec,
+)
+from repro.data.tokenizer import HashTokenizer  # noqa: F401
+from repro.data.pipeline import ShardedDataLoader, DataState  # noqa: F401

@@ -1,0 +1,80 @@
+"""Deterministic, resumable, shardable data pipeline.
+
+Design goals (the fault-tolerance story depends on all three):
+  * **Deterministic**: batch t is a pure function of (seed, step) — no
+    hidden RNG state, so a restore at step t replays batch t exactly.
+  * **Resumable**: ``DataState`` is a tiny pytree saved inside checkpoints;
+    restoring it resumes mid-epoch with zero drift.
+  * **Shardable**: each data-parallel host takes a disjoint slice of every
+    global batch (``host_index``/``host_count``), matching how batches are
+    fed to a ``("pod","data")``-sharded global array.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DataState:
+    seed: int
+    step: int
+
+    def next(self) -> "DataState":
+        return replace(self, step=self.step + 1)
+
+
+class ShardedDataLoader:
+    """Samples global batches from in-memory arrays (or a factory fn).
+
+    ``arrays`` is a dict of equally-lengthed numpy arrays; every batch is a
+    dict of slices along axis 0.  Sampling is with replacement from a
+    per-step PRNG stream: batch(t) == batch(t) always.
+    """
+
+    def __init__(self, arrays: Dict[str, np.ndarray], *, global_batch: int,
+                 seed: int = 0, host_index: int = 0, host_count: int = 1,
+                 transform: Optional[Callable[[Dict[str, np.ndarray], np.random.Generator], Dict[str, np.ndarray]]] = None):
+        lens = {len(v) for v in arrays.values()}
+        assert len(lens) == 1, "all arrays must share axis-0 length"
+        self.n = lens.pop()
+        assert global_batch % host_count == 0, "global batch must split across hosts"
+        self.arrays = arrays
+        self.global_batch = global_batch
+        self.host_index = host_index
+        self.host_count = host_count
+        self.local_batch = global_batch // host_count
+        self.transform = transform
+        self.state = DataState(seed=seed, step=0)
+
+    def batch_at(self, state: DataState) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng((state.seed << 20) ^ state.step)
+        idx = rng.integers(0, self.n, size=(self.global_batch,))
+        lo = self.host_index * self.local_batch
+        sel = idx[lo: lo + self.local_batch]
+        batch = {k: v[sel] for k, v in self.arrays.items()}
+        if self.transform is not None:
+            batch = self.transform(batch, rng)
+        return batch
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        b = self.batch_at(self.state)
+        self.state = self.state.next()
+        return b
+
+    def __iter__(self):
+        return self
+
+    # -- checkpoint integration ------------------------------------------------
+
+    def state_dict(self) -> dict:
+        return {"seed": self.state.seed, "step": self.state.step}
+
+    def load_state_dict(self, d: dict) -> None:
+        self.state = DataState(seed=int(d["seed"]), step=int(d["step"]))
+
+    def skip_to(self, step: int) -> None:
+        """Fast-forward (e.g. after restoring a checkpoint written at step t)."""
+        self.state = DataState(seed=self.state.seed, step=step)

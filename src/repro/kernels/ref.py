@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel.  Tests sweep shapes/dtypes and
+assert_allclose kernel(interpret=True) against these."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = False):
+    """q: (B, Sq, H, D); k/v: (B, Sk, H, D) -> (B, Sq, H, D)."""
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        sq, sk = logits.shape[-2], logits.shape[-1]
+        mask = jnp.tril(jnp.ones((sq, sk), jnp.bool_), k=sk - sq)
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def vdb_topk_ref(queries, db, valid, k: int):
+    """queries: (Q, D) L2-normalised; db: (N, D); valid: (N,) bool.
+    Returns (scores (Q, k), idx (Q, k)) by cosine similarity."""
+    scores = queries @ db.T
+    scores = jnp.where(valid[None, :], scores, -jnp.inf)
+    return jax.lax.top_k(scores, k)
+
+
+def groupnorm_silu_ref(x, scale, bias, *, groups: int = 32, eps: float = 1e-5):
+    """x: (B, H, W, C) -> silu(groupnorm(x))."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    b, h, w, c = x.shape
+    g = min(groups, c)
+    while c % g:
+        g -= 1
+    xg = x.reshape(b, h, w, g, c // g)
+    mean = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.mean(jnp.square(xg - mean), axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+    y = xg.reshape(b, h, w, c) * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return (y * jax.nn.sigmoid(y)).astype(dtype)
+
+
+def adaln_modulate_ref(x, shift, scale, *, eps: float = 1e-5):
+    """Fused LN(affine-free) + adaLN modulation.
+    x: (B, T, D); shift/scale: (B, D)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    xn = (x - mean) * jax.lax.rsqrt(var + eps)
+    y = xn * (1.0 + scale.astype(jnp.float32)[:, None, :]) \
+        + shift.astype(jnp.float32)[:, None, :]
+    return y.astype(dtype)

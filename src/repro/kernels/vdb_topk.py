@@ -1,0 +1,113 @@
+"""Fused cosine-similarity + streaming top-k for the vector DB scan.
+
+The paper's retrieval hot-spot (pgvector ANN scan) reimagined for TPU:
+instead of a GPU warp-level heap, the database streams through VMEM in
+``block_n`` tiles, the (Q × block_n) similarity tile is one MXU matmul,
+and a running per-query top-k lives in VMEM scratch across grid steps
+(the k-block axis is sequential).  Selection uses k rounds of
+max+mask — argmax-free and Mosaic-friendly — which is cheap for the small
+k (≤ 32) a cache lookup needs.
+
+HBM traffic: each database row is read exactly once → the scan is
+memory-bound at ~N·D·dtype bytes, the roofline optimum for one-shot
+retrieval.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _vdb_kernel(q_ref, db_ref, valid_ref, score_out, idx_out,
+                best_s, best_i, *, k: int, block_n: int, n_blocks: int,
+                n_total: int):
+    ni = pl.program_id(0)
+
+    @pl.when(ni == 0)
+    def _init():
+        best_s[...] = jnp.full_like(best_s, NEG_INF)
+        best_i[...] = jnp.zeros_like(best_i)
+
+    q = q_ref[...].astype(jnp.float32)           # (Q, D)
+    db = db_ref[...].astype(jnp.float32)         # (block_n, D)
+    valid = valid_ref[...]                       # (1, block_n) int32
+
+    s = jax.lax.dot_general(q, db, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q, block_n)
+    cols = ni * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    ok = (valid > 0) & (cols < n_total)
+    s = jnp.where(ok, s, NEG_INF)
+
+    # merge tile scores into the running top-k: k rounds of max+mask over
+    # the concatenated (k + block_n) candidates
+    cand_s = jnp.concatenate([best_s[...], s], axis=1)          # (Q, k+bn)
+    cand_i = jnp.concatenate([best_i[...], cols], axis=1)
+    new_s = jnp.zeros_like(best_s[...])
+    new_i = jnp.zeros_like(best_i[...])
+    for j in range(k):
+        m = jnp.max(cand_s, axis=1, keepdims=True)              # (Q, 1)
+        # first position achieving the max
+        is_max = cand_s == m
+        first = jnp.cumsum(is_max.astype(jnp.int32), axis=1) == 1
+        pick = is_max & first
+        picked_i = jnp.sum(jnp.where(pick, cand_i, 0), axis=1, keepdims=True)
+        new_s = jax.lax.dynamic_update_slice(new_s, m, (0, j))
+        new_i = jax.lax.dynamic_update_slice(new_i, picked_i, (0, j))
+        cand_s = jnp.where(pick, NEG_INF, cand_s)
+    best_s[...] = new_s
+    best_i[...] = new_i
+
+    @pl.when(ni == n_blocks - 1)
+    def _finalize():
+        score_out[...] = best_s[...].astype(score_out.dtype)
+        idx_out[...] = best_i[...]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+def vdb_topk(queries, db, valid, k: int, *, block_n: int = 512,
+             interpret: bool = True):
+    """queries: (Q, D); db: (N, D); valid: (N,) bool → (scores, idx) (Q, k)."""
+    qn, d = queries.shape
+    n = db.shape[0]
+    block_n = min(block_n, n)
+    pad_n = (-n) % block_n
+    if pad_n:
+        db = jnp.pad(db, ((0, pad_n), (0, 0)))
+        valid = jnp.pad(valid, (0, pad_n))
+    n_p = n + pad_n
+    n_blocks = n_p // block_n
+    valid_i = valid.astype(jnp.int32).reshape(1, n_p)
+
+    kernel = functools.partial(_vdb_kernel, k=k, block_n=block_n,
+                               n_blocks=n_blocks, n_total=n)
+    scores, idx = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((qn, d), lambda ni: (0, 0)),
+            pl.BlockSpec((block_n, d), lambda ni: (ni, 0)),
+            pl.BlockSpec((1, block_n), lambda ni: (0, ni)),
+        ],
+        out_specs=[
+            pl.BlockSpec((qn, k), lambda ni: (0, 0)),
+            pl.BlockSpec((qn, k), lambda ni: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qn, k), jnp.float32),
+            jax.ShapeDtypeStruct((qn, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((qn, k), jnp.float32),
+            pltpu.VMEM((qn, k), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(queries, db, valid_i)
+    return scores, idx

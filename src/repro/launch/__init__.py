@@ -1,0 +1,2 @@
+"""Launch layer: production mesh, multi-pod dry-run, roofline analysis,
+and the CPU-scale train/serve drivers."""

@@ -1,0 +1,370 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+cell on the production meshes and extract the roofline terms.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init).  Smoke tests and benches never import this module —
+they see 1 device.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun                 # all 40 × 2
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b
+    PYTHONPATH=src python -m repro.launch.dryrun --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --skip-existing
+
+Each cell writes ``experiments/dryrun/<arch>__<shape>__<mesh>.json`` with
+memory analysis, cost analysis, loop-weighted collective bytes and the
+three roofline terms; EXPERIMENTS.md §Dry-run/§Roofline tables are built
+from these files by ``benchmarks/roofline_table.py``.
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_arch, get_shape, list_archs
+from repro.launch import roofline
+from repro.launch.mesh import make_production_mesh, n_chips
+from repro.models.diffusion import dit as dit_mod
+from repro.models.diffusion import mmdit as mmdit_mod
+from repro.models.diffusion import unet as unet_mod
+from repro.models.diffusion import vae as vae_mod
+from repro.models.vision import convnext as cnx_mod
+from repro.models.vision import efficientnet as eff_mod
+from repro.runtime.pspec import logical_rules
+from repro.runtime.steps import build_cell_program
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _shardings(tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# useful-FLOPs reference per family
+# ---------------------------------------------------------------------------
+
+
+def model_flops_for(arch, cell, prog) -> Dict[str, Any]:
+    fam = arch.family_group
+    if fam == "lm":
+        params_sds = (prog.args_sds[0]["params"] if cell.kind == "train"
+                      else prog.args_sds[0])
+        return roofline.lm_model_flops(arch, cell, params_sds)
+
+    if fam == "diffusion":
+        dcfg = arch.make_config(cell)
+        latent = prog.meta["latent"]
+        b = cell.global_batch
+        key = jax.random.key(0)
+        if dcfg.backbone == "dit":
+            net_sds = jax.eval_shape(
+                lambda k: dit_mod.init_dit(k, dcfg.net), key)
+            fwd1 = roofline.measured_fwd_flops(
+                lambda p, x, t, c: dit_mod.apply_dit(p, dcfg.net, x, t, c),
+                (net_sds,
+                 jax.ShapeDtypeStruct((1, latent, latent, dcfg.vae.z_ch),
+                                      jnp.float32),
+                 jax.ShapeDtypeStruct((1,), jnp.float32),
+                 jax.ShapeDtypeStruct((1, dcfg.net.ctx_dim), jnp.float32)),
+                (arch.name, "dit", latent))
+        elif dcfg.backbone == "unet":
+            net_sds = jax.eval_shape(
+                lambda k: unet_mod.init_unet(k, dcfg.net), key)
+            fwd1 = roofline.measured_fwd_flops(
+                lambda p, x, t, c: unet_mod.apply_unet(p, dcfg.net, x, t, c),
+                (net_sds,
+                 jax.ShapeDtypeStruct((1, latent, latent, dcfg.vae.z_ch),
+                                      jnp.float32),
+                 jax.ShapeDtypeStruct((1,), jnp.float32),
+                 jax.ShapeDtypeStruct((1, dcfg.ctx_len, dcfg.ctx_dim),
+                                      jnp.float32)),
+                (arch.name, "unet", latent))
+        else:
+            net_sds = jax.eval_shape(
+                lambda k: mmdit_mod.init_mmdit(k, dcfg.net), key)
+            ctx = {"txt": jax.ShapeDtypeStruct((1, dcfg.net.txt_len,
+                                                dcfg.net.txt_dim), jnp.float32),
+                   "vec": jax.ShapeDtypeStruct((1, dcfg.net.vec_dim),
+                                               jnp.float32)}
+            fwd1 = roofline.measured_fwd_flops(
+                lambda p, x, t, c: mmdit_mod.apply_mmdit(p, dcfg.net, x, t, c),
+                (net_sds,
+                 jax.ShapeDtypeStruct((1, latent, latent, dcfg.vae.z_ch),
+                                      jnp.float32),
+                 jax.ShapeDtypeStruct((1,), jnp.float32), ctx),
+                (arch.name, "mmdit", latent))
+        if cell.kind == "train":
+            res = latent * dcfg.vae.downsample
+            vae_sds = jax.eval_shape(
+                lambda k: vae_mod.init_vae(k, dcfg.vae), key)
+            enc1 = roofline.measured_fwd_flops(
+                lambda p, x: vae_mod.encode(p, dcfg.vae, x),
+                (vae_sds, jax.ShapeDtypeStruct((1, res, res, 3), jnp.float32)),
+                (arch.name, "vae_enc", res))
+            mf = b * (3.0 * fwd1 + enc1)
+            note = f"B*(3*fwd1 + vae_enc1), fwd1={fwd1:.3g} (measured)"
+        else:
+            mf = b * fwd1
+            note = f"B*fwd1 per denoise step, fwd1={fwd1:.3g} (measured)"
+        return {"model_flops": mf, "formula": note,
+                "params_total": None, "params_active": None}
+
+    # vision ----------------------------------------------------------------
+    cfg = arch.make_config(cell)
+    res = cell.img_res
+    key = jax.random.key(0)
+    if arch.family == "vision-convnext":
+        net_sds = jax.eval_shape(lambda k: cnx_mod.init_convnext(k, cfg), key)
+        fwd1 = roofline.measured_fwd_flops(
+            lambda p, x: cnx_mod.apply_convnext(p, cfg, x),
+            (net_sds, jax.ShapeDtypeStruct((1, res, res, 3), jnp.float32)),
+            (arch.name, res))
+    else:
+        net_sds = jax.eval_shape(lambda k: eff_mod.init_effnet(k, cfg), key)
+        fwd1 = roofline.measured_fwd_flops(
+            lambda p, x: eff_mod.apply_effnet(p, cfg, x),
+            (net_sds, jax.ShapeDtypeStruct((1, res, res, 3), jnp.float32)),
+            (arch.name, res))
+    mult = 3.0 if cell.kind == "train" else 1.0
+    return {"model_flops": mult * cell.global_batch * fwd1,
+            "formula": f"{mult:.0f}*B*fwd1, fwd1={fwd1:.3g} (measured)",
+            "params_total": None, "params_active": None}
+
+
+# ---------------------------------------------------------------------------
+# one cell
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
+             skip_model_flops: bool = False,
+             save_hlo: Optional[str] = None,
+             options: Optional[Dict[str, Any]] = None,
+             submesh: Optional[tuple] = None) -> Dict[str, Any]:
+    """``submesh=(d, m)``: lower on a (data=d, model=m) sub-mesh instead of
+    the full pod — the serving-throughput variant (§Perf): one request per
+    sub-mesh, pod-count/|submesh| requests in flight."""
+    arch = get_arch(arch_name)
+    cell = get_shape(arch.family_group, shape_name)
+    if submesh is not None:
+        mesh = jax.make_mesh(submesh, ("data", "model"))
+        chips = int(submesh[0] * submesh[1])
+        mesh_shape = {"data": submesh[0], "model": submesh[1]}
+        mesh_tag = f"{submesh[0]}x{submesh[1]}"
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = n_chips(multi_pod)
+        mesh_shape = None
+        mesh_tag = "2x16x16" if multi_pod else "16x16"
+    rec: Dict[str, Any] = {
+        "arch": arch_name, "shape": shape_name,
+        "mesh": mesh_tag, "chips": chips,
+        "kind": cell.kind, "ok": False,
+    }
+    t0 = time.perf_counter()
+    prog = build_cell_program(arch, cell, multi_pod=multi_pod,
+                              options=options, mesh_shape=mesh_shape)
+    in_sh = tuple(_shardings(s, mesh) for s in prog.in_specs)
+    out_sh = _shardings(prog.out_specs, mesh) if prog.out_specs is not None \
+        else None
+    jit_kwargs: Dict[str, Any] = {"in_shardings": in_sh,
+                                  "donate_argnums": prog.donate}
+    if out_sh is not None:
+        jit_kwargs["out_shardings"] = out_sh
+    jitted = jax.jit(prog.step_fn, **jit_kwargs)
+    with mesh:
+        with logical_rules(prog.rules):
+            lowered = jitted.lower(*prog.args_sds)
+        rec["lower_s"] = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        rec["compile_s"] = time.perf_counter() - t1
+
+    mem = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "alias_bytes": int(mem.alias_size_in_bytes),
+        "peak_estimate_bytes": int(mem.argument_size_in_bytes
+                                   + mem.temp_size_in_bytes
+                                   + mem.output_size_in_bytes
+                                   - mem.alias_size_in_bytes),
+        # CPU-backend caveat: XLA's float-normalization-bf16 pass upcasts
+        # every bf16 buffer to f32 on CPU (no native bf16), so temp_bytes
+        # over-reports bf16 archs ~2× vs a real TPU compilation.  The
+        # analytic budget below counts the sharded state + dominant
+        # transients at their TRUE dtypes.
+        "analytic_tpu_budget_bytes": _analytic_budget(arch, cell, prog,
+                                                      multi_pod),
+    }
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo_text = compiled.as_text()
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo_text)
+    weighted = roofline.hlo_cost(hlo_text)
+    rec["cost"] = {
+        # XLA static analysis (while bodies counted once — for reference)
+        "xla_flops_per_device": float(cost.get("flops", 0.0)),
+        "xla_bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        # loop-weighted instruction model (used for the roofline terms)
+        "flops_per_device": weighted.flops,
+        "bytes_per_device": weighted.bytes,
+        "dot_flops": weighted.dot_flops,
+        "conv_flops": weighted.conv_flops,
+    }
+    coll = roofline.collective_stats(hlo_text)
+    rec["collectives"] = {"operand_bytes": coll.operand_bytes,
+                          "wire_bytes": coll.wire_bytes,
+                          "count": coll.count, "by_op": coll.by_op}
+    if skip_model_flops:
+        mf = {"model_flops": 0.0, "formula": "skipped"}
+    else:
+        mf = model_flops_for(arch, cell, prog)
+    rec["model_flops"] = mf
+    terms = roofline.roofline_terms(
+        {"flops": rec["cost"]["xla_flops_per_device"],
+         "bytes accessed": rec["cost"]["xla_bytes_per_device"]},
+        coll, chips, mf["model_flops"], weighted=weighted)
+    rec["terms"] = {
+        "compute_s": terms.compute_s, "memory_s": terms.memory_s,
+        "collective_s": terms.collective_s,
+        "collective_wire_s": terms.collective_wire_s,
+        "dominant": terms.dominant, "step_seconds": terms.step_seconds,
+        "useful_ratio": terms.useful_ratio, "mfu": terms.mfu,
+    }
+    if cell.kind == "gen":
+        rec["sampler_steps"] = cell.steps
+    rec["meta"] = {k: v for k, v in prog.meta.items()
+                   if isinstance(v, (int, float, str))}
+    rec["ok"] = True
+    return rec
+
+
+def _sharded_tree_bytes(tree, specs, mesh_shape: Dict[str, int]) -> int:
+    """Per-device bytes of an SDS tree under its PartitionSpec tree."""
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+    flat_t = jax.tree_util.tree_leaves(tree)
+    flat_s = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    total = 0
+    for leaf, sp in zip(flat_t, flat_s):
+        if not hasattr(leaf, "shape"):
+            continue
+        size = float(np.prod(leaf.shape, dtype=float)) * \
+            jnp.dtype(leaf.dtype).itemsize
+        denom = 1
+        for ax in tuple(sp)[: len(leaf.shape)]:
+            if ax is None:
+                continue
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                denom *= mesh_shape.get(a, 1)
+        total += int(size / denom)
+    return total
+
+
+def _analytic_budget(arch, cell, prog, multi_pod: bool) -> int:
+    """Per-chip HBM bytes at TRUE dtypes: sharded state (params + opt +
+    inputs) + gradient accumulator + remat activation saves + the largest
+    transient (one layer's fp32 attention logits).  The CPU backend's
+    memory_analysis over-reports bf16 archs because float-normalization
+    upcasts every bf16 buffer to f32; this budget is the TPU-dtype truth."""
+    from repro.launch.mesh import mesh_shape_dict
+    ms = mesh_shape_dict(multi_pod)
+    state_bytes = 0
+    for sds_tree, spec_tree in zip(prog.args_sds, prog.in_specs):
+        try:
+            state_bytes += _sharded_tree_bytes(sds_tree, spec_tree, ms)
+        except Exception:  # noqa: BLE001
+            pass
+    transient = 0
+    if cell.kind == "train" and arch.family_group == "lm":
+        cfg = arch.make_config(cell)
+        dsize = ms.get("data", 1) * (ms.get("pod", 1) if multi_pod else 1)
+        n_micro = prog.meta.get("n_micro", 1)
+        mb_dev = max(cell.global_batch // n_micro // dsize, 1)
+        bpe = 2 if arch.param_dtype == "bfloat16" else 4
+        params_sds = prog.args_sds[0]["params"]
+        params_specs = prog.in_specs[0]["params"]
+        grad_acc = _sharded_tree_bytes(params_sds, params_specs, ms)
+        saves = cfg.n_groups * mb_dev * cell.seq_len * cfg.d_model * bpe
+        heads_dev = -(-cfg.n_heads // ms.get("model", 1))
+        logits = mb_dev * heads_dev * cell.seq_len * cell.seq_len * 4
+        transient = grad_acc + saves + logits
+    return int(state_bytes + transient)
+
+
+def _out_path(out_dir: str, arch: str, shape: str, mesh: str) -> str:
+    return os.path.join(out_dir, f"{arch}__{shape}__{mesh}.json")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default all)")
+    ap.add_argument("--shape", default=None, help="one shape name")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--skip-model-flops", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    archs = [args.arch] if args.arch else list(list_archs())
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    failures = []
+    for arch_name in archs:
+        arch = get_arch(arch_name)
+        shapes = [args.shape] if args.shape else list(arch.shapes)
+        for shape_name in shapes:
+            for mp in meshes:
+                mesh_tag = "2x16x16" if mp else "16x16"
+                path = _out_path(args.out, arch_name, shape_name, mesh_tag)
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip] {arch_name} {shape_name} {mesh_tag}")
+                    continue
+                label = f"{arch_name:28s} {shape_name:12s} {mesh_tag:8s}"
+                try:
+                    rec = run_cell(arch_name, shape_name, multi_pod=mp,
+                                   skip_model_flops=args.skip_model_flops)
+                    t = rec["terms"]
+                    print(f"[ ok ] {label} compile={rec['compile_s']:6.1f}s "
+                          f"mem/dev={rec['memory']['peak_estimate_bytes']/2**30:6.2f}GiB "
+                          f"C={t['compute_s']*1e3:8.2f}ms M={t['memory_s']*1e3:8.2f}ms "
+                          f"X={t['collective_s']*1e3:8.2f}ms dom={t['dominant']}")
+                except Exception as e:  # noqa: BLE001
+                    rec = {"arch": arch_name, "shape": shape_name,
+                           "mesh": mesh_tag, "ok": False,
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                    failures.append(label)
+                    print(f"[FAIL] {label} {type(e).__name__}: {str(e)[:160]}")
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+    print(f"\ndone; {len(failures)} failures")
+    for f_ in failures:
+        print("  FAIL:", f_)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

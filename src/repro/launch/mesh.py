@@ -1,0 +1,30 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — the dry-run sets
+``--xla_force_host_platform_device_count=512`` before first jax init, and
+smoke tests must keep seeing 1 device.
+
+Topology: v5e pod of 256 chips as (data=16, model=16); two pods add a
+leading ``pod`` axis used as an outer data axis (pure DP across pods — the
+only cross-pod collective is the gradient all-reduce, the right shape when
+inter-pod DCI bandwidth ≪ intra-pod ICI).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_shape_dict(multi_pod: bool = False):
+    return ({"pod": 2, "data": 16, "model": 16} if multi_pod
+            else {"data": 16, "model": 16})
+
+
+def n_chips(multi_pod: bool = False) -> int:
+    return 512 if multi_pod else 256

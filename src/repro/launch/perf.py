@@ -1,0 +1,136 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: re-lower a cell under named variants and record
+hypothesis → change → before/after roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.perf --cell llama4 --variant v1_chunked_ce
+
+Variants are defined per hillclimb cell below; every run writes
+``experiments/perf/<cell>__<variant>.json`` with the same record schema as
+the dry-run, so before/after diffs come straight from the artifacts.
+"""
+import argparse
+import json
+import time
+from typing import Any, Dict
+
+from repro.launch import dryrun as dr
+
+# The three hillclimb cells (§Perf): worst roofline fraction / most
+# collective-bound / most representative of the paper's technique.
+HILLCLIMB = {
+    "llama4": ("llama4-maverick-400b-a17b", "train_4k"),
+    "flux": ("flux-dev", "gen_1024"),
+    "unet": ("unet-sd15", "train_256"),
+}
+
+# variant name -> (options dict, hypothesis string)
+VARIANTS: Dict[str, Dict[str, tuple]] = {
+    "llama4": {
+        "baseline": ({}, "paper-faithful baseline (4 microbatches, "
+                         "full-vocab CE)"),
+        "v1_chunked_ce": ({"vocab_chunks": 4},
+                          "fp32 (B,S,V) logits never materialise → memory "
+                          "term down by ~2×0.83GB/chip of HBM traffic per "
+                          "microbatch; no flop change"),
+        "v2_micro2": ({"microbatches": 2, "vocab_chunks": 4},
+                      "FSDP re-gathers params once per microbatch: halving "
+                      "microbatches halves the all-gather volume; activation "
+                      "memory doubles (remat keeps it transient)"),
+        "v3_micro8": ({"microbatches": 8, "vocab_chunks": 4},
+                      "counter-probe: more microbatches should INCREASE the "
+                      "collective term ~2× if the re-gather hypothesis holds"),
+        "v4_no_remat": ({"vocab_chunks": 4, "remat": False},
+                        "remat recomputes the forward inside backward — "
+                        "dropping it cuts compute ~25% and the re-gather "
+                        "volume by 1/3, at the cost of saved activations"),
+        "v5_shard_heads": ({"vocab_chunks": 4, "shard_heads": True},
+                           "HLO shows 6× fp32 (4,5,4096,4096) logits "
+                           "ALL-REDUCES × 96 trips (≈770 GB/chip): GSPMD "
+                           "sharded the attention contraction because 40 "
+                           "heads don't divide the 16-way model axis. "
+                           "Pinning q/k/v/out to head-sharding (padded "
+                           "40→48) eliminates the logits all-reduce "
+                           "entirely → predicted X down ~40%"),
+        "v6_combined": ({"vocab_chunks": 4, "shard_heads": True,
+                         "microbatches": 8},
+                        "deploy config: head-sharding (X win) + 8 "
+                        "microbatches (memory win, X-neutral per v2/v3) + "
+                        "chunked CE (memory win) — the confirmed variants "
+                        "composed; predicted ≈ v5 terms at ≈ v3 memory"),
+    },
+    "flux": {
+        "baseline": ({}, "paper-faithful baseline (spatial-sharded batch-4 "
+                         "latents, TP over model axis)"),
+        "v1_seq_parallel": ({"seq_shard": True},
+                            "Megatron-style sequence parallelism: the "
+                            "residual stream stays token-sharded over the "
+                            "model axis between blocks, so the per-block TP "
+                            "all-reduce decomposes into reduce-scatter + "
+                            "all-gather and the norm/pointwise work "
+                            "parallelises 16-way → collective term down, "
+                            "memory term down"),
+        "v2_submesh16": ({"submesh": (1, 16)},
+                         "serving-throughput variant: one request on a "
+                         "16-chip TP sub-mesh (batch replicated), 16 "
+                         "concurrent requests per pod. Per-request step "
+                         "time worsens ~3×, but pod throughput ≈ "
+                         "16/(3×) ≈ 5× — the latency/throughput tradeoff "
+                         "the paper's node-level scheduler exploits"),
+    },
+    "unet": {
+        "baseline": ({}, "paper-faithful baseline (channel-TP convs)"),
+        "v1_dp_only": ({"dp_only": True},
+                       "0.86B params fit replicated: pure DP over all 256 "
+                       "chips (1 img/chip) replaces per-conv TP collectives "
+                       "with ONE 3.4GB gradient all-reduce → predicted "
+                       "X ≈ 69ms vs 118ms baseline"),
+        "v2_dp_bf16": ({"dp_only": True, "bf16_params": True},
+                       "on top of v1: bf16 params → bf16 gradients halve "
+                       "the all-reduce volume → predicted X ≈ 45ms"),
+    },
+}
+
+
+def run_variant(cell_key: str, variant: str, out_dir: str) -> Dict[str, Any]:
+    arch_name, shape_name = HILLCLIMB[cell_key]
+    options, hypothesis = VARIANTS[cell_key][variant]
+    options = dict(options)
+    submesh = options.pop("submesh", None)
+    t0 = time.perf_counter()
+    rec = dr.run_cell(arch_name, shape_name, multi_pod=False,
+                      skip_model_flops=False, options=options,
+                      submesh=submesh)
+    rec["variant"] = variant
+    rec["hypothesis"] = hypothesis
+    rec["options"] = options
+    rec["wall_s"] = time.perf_counter() - t0
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{cell_key}__{variant}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    t = rec["terms"]
+    print(f"[{cell_key}/{variant}] C={t['compute_s']*1e3:.1f}ms "
+          f"M={t['memory_s']*1e3:.1f}ms X={t['collective_s']*1e3:.1f}ms "
+          f"dom={t['dominant']} mfu={t['mfu']:.4f} "
+          f"mem={rec['memory']['peak_estimate_bytes']/2**30:.1f}GiB")
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=sorted(HILLCLIMB))
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+    variants = [args.variant] if args.variant else \
+        list(VARIANTS[args.cell])
+    for v in variants:
+        run_variant(args.cell, v, args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,450 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Three terms per (arch × shape × mesh), all in seconds:
+
+    compute    = HLO_FLOPs_global   / (chips × peak_FLOP/s)
+    memory     = HLO_bytes_global   / (chips × HBM_bw)
+    collective = collective_bytes_per_device / link_bw
+
+``cost_analysis()`` of the SPMD-partitioned module reports *per-partition*
+flops/bytes; we scale by chip count for the global numerators so the
+division by chips recovers the per-chip time (identical number, the
+formula shape follows the brief).
+
+collective_bytes is parsed from ``compiled.as_text()``: every
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute
+instruction's operand bytes, with two crucial corrections:
+
+  * **loop weighting** — collectives inside ``while`` bodies (microbatch
+    accumulation, layer scans) run once per iteration; the parser weights
+    each computation by its loop trip count (nested loops multiply).
+  * **ring wire bytes** — besides the operand-sum the brief prescribes, we
+    also report the ring-algorithm wire bytes (2(g−1)/g for all-reduce,
+    (g−1)/g for gather/scatter halves), which is what actually crosses ICI.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link (aggregate model, per the brief)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# operand bytes as a multiple of result bytes, per op
+_OPERAND_MULT = {"all-reduce": lambda g: 1.0,
+                 "all-gather": lambda g: 1.0 / g,
+                 "reduce-scatter": lambda g: float(g),
+                 "all-to-all": lambda g: 1.0,
+                 "collective-permute": lambda g: 1.0}
+
+# ring wire bytes per device as a multiple of result bytes
+_WIRE_MULT = {"all-reduce": lambda g: 2.0 * (g - 1) / g,
+              "all-gather": lambda g: (g - 1) / g,
+              "reduce-scatter": lambda g: float(g - 1),
+              "all-to-all": lambda g: (g - 1) / g,
+              "collective-permute": lambda g: 1.0}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_WHILE_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_WHILE_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of one result type string, e.g. 'f32[16,128]{1,0}' or a tuple
+    '(f32[4], bf16[2,2])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    """Group the HLO text by computation.  Header lines look like
+    ``%name (params...) -> type {`` or ``ENTRY %name (...) -> type {``;
+    parameter lists may contain nested tuple parens, so we key off the
+    first token rather than trying to match the whole signature."""
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        if s.endswith("{") and "->" in s and \
+                (s.startswith("%") or s.startswith("ENTRY")):
+            tok = s.split()[0]
+            if tok == "ENTRY" and len(s.split()) > 1:
+                tok = s.split()[1]
+            cur = tok.lstrip("%")
+            comps[cur] = []
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(s)
+    return comps
+
+
+@dataclass
+class CollectiveStats:
+    operand_bytes: float = 0.0        # the brief's prescribed sum
+    wire_bytes: float = 0.0           # ring-model bytes over ICI
+    by_op: Dict[str, float] = field(default_factory=dict)
+    count: int = 0
+
+
+def _comp_collectives(lines: List[str]) -> CollectiveStats:
+    st = CollectiveStats()
+    for s in lines:
+        if "-done" in s:
+            continue
+        for op in _COLLECTIVES:
+            token = f" {op}(" if f" {op}(" in s else f" {op}-start(" \
+                if f" {op}-start(" in s else None
+            if token is None:
+                continue
+            result_type = s.split("=", 1)[1].split(token)[0] if "=" in s else ""
+            rbytes = _shape_bytes(result_type)
+            g = _group_size(s)
+            st.operand_bytes += rbytes * _OPERAND_MULT[op](g)
+            st.wire_bytes += rbytes * _WIRE_MULT[op](g)
+            st.by_op[op] = st.by_op.get(op, 0.0) + rbytes * _OPERAND_MULT[op](g)
+            st.count += 1
+            break
+    return st
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_EXPL_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 2
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    consts = [int(c) for s in cond_lines for c in _CONST_RE.findall(s)]
+    consts = [c for c in consts if c > 1]
+    return max(consts) if consts else 1
+
+
+def _loop_multipliers(comps: Dict[str, List[str]]) -> Dict[str, float]:
+    """Execution-count multiplier per computation: while bodies/conditions
+    multiply by the loop trip count (parsed from the condition's compare
+    constant); fusion/reduce targets inherit their caller's multiplier."""
+    mult: Dict[str, float] = {name: 1.0 for name in comps}
+    call_re = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+    for _ in range(6):  # fixed-point over realistic nesting depths
+        changed = False
+        for name, lines in comps.items():
+            for s in lines:
+                if " while(" in s:
+                    mc = _WHILE_COND_RE.search(s)
+                    mb = _WHILE_BODY_RE.search(s)
+                    if not (mc and mb):
+                        continue
+                    trips = _trip_count(comps.get(mc.group(1), []))
+                    for target in (mb.group(1), mc.group(1)):
+                        want = mult.get(name, 1.0) * trips
+                        if target in mult and mult[target] < want:
+                            mult[target] = want
+                            changed = True
+                else:
+                    for target in call_re.findall(s):
+                        want = mult.get(name, 1.0)
+                        if target in mult and mult[target] < want:
+                            mult[target] = want
+                            changed = True
+        if not changed:
+            break
+    return mult
+
+
+def _fused_targets(comps: Dict[str, List[str]]) -> set:
+    """Computations reached via calls=/to_apply= — their internal buffers
+    live in registers/VMEM, so they contribute flops but not HBM bytes."""
+    call_re = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+    out = set()
+    for lines in comps.values():
+        for s in lines:
+            out.update(call_re.findall(s))
+    return out
+
+
+def collective_stats(hlo: str) -> CollectiveStats:
+    """Loop-weighted collective bytes for one partitioned HLO module."""
+    comps = _split_computations(hlo)
+    mult = _loop_multipliers(comps)
+    total = CollectiveStats()
+    for name, lines in comps.items():
+        st = _comp_collectives(lines)
+        w = mult.get(name, 1.0)
+        total.operand_bytes += st.operand_bytes * w
+        total.wire_bytes += st.wire_bytes * w
+        total.count += int(st.count * w)
+        for op, b in st.by_op.items():
+            total.by_op[op] = total.by_op.get(op, 0.0) + b * w
+    return total
+
+
+# ---------------------------------------------------------------------------
+# loop-weighted flops / bytes (XLA's cost_analysis counts while bodies once,
+# which under-reports scanned layers and microbatch loops by 10-100×)
+# ---------------------------------------------------------------------------
+
+_INSTR_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_DIMLABELS_RE = re.compile(r"dim_labels=([\w?]+)_([\w?]+)->")
+
+# no HBM traffic: pure aliasing / metadata ops
+_FREE_OPS = {"parameter", "get-tuple-element", "bitcast", "tuple",
+             "constant", "after-all", "partition-id", "replica-id",
+             "while", "conditional", "call", "iota", "domain",
+             "opt-barrier"}
+
+
+def _parse_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    dot_flops: float = 0.0
+    conv_flops: float = 0.0
+
+
+def hlo_cost(hlo: str) -> HloCost:
+    """Instruction-level, loop-weighted flop/byte model of a partitioned
+    module.  FLOPs: 2·M·N·K for dots, 2·out·kernel for convolutions.
+    Bytes: every non-free top-level instruction reads its operands and
+    writes its result once (post-fusion HLO granularity ≈ HBM traffic);
+    instructions inside fusion bodies stay in registers → bytes 0."""
+    comps = _split_computations(hlo)
+    mult = _loop_multipliers(comps)
+    fused = _fused_targets(comps)
+
+    # global symbol table: instruction name -> result type string
+    symtab: Dict[str, str] = {}
+    for lines in comps.values():
+        for s in lines:
+            m = _INSTR_RE.match(s)
+            if m:
+                symtab[m.group(1)] = m.group(2)
+
+    out = HloCost()
+    for name, lines in comps.items():
+        w = mult.get(name, 1.0)
+        count_bytes = name not in fused
+        for s in lines:
+            m = _INSTR_RE.match(s)
+            if not m:
+                continue
+            _res_name, res_type, op = m.groups()
+            res_bytes = _shape_bytes(res_type)
+            res_dims = _parse_dims(res_type)
+            # ---- flops
+            if op == "dot":
+                cm = _CONTRACT_RE.search(s)
+                ops = _OPERAND_RE.findall(s.split("(", 1)[1])
+                k = 1
+                if cm and ops:
+                    lhs_dims = _parse_dims(symtab.get(ops[0], ""))
+                    for ci in (cm.group(1).split(",") if cm.group(1) else []):
+                        ci = int(ci)
+                        if ci < len(lhs_dims):
+                            k *= lhs_dims[ci]
+                f = 2.0 * math.prod(res_dims or [0]) * k
+                out.flops += f * w
+                out.dot_flops += f * w
+            elif op == "convolution":
+                ops = _OPERAND_RE.findall(s.split("(", 1)[1])
+                rhs_dims = _parse_dims(symtab.get(ops[1], "")) if len(ops) > 1 else []
+                o_size = 1
+                dm = _DIMLABELS_RE.search(s)
+                if dm and rhs_dims:
+                    rhs_labels = dm.group(2)
+                    if "o" in rhs_labels:
+                        o_size = rhs_dims[rhs_labels.index("o")]
+                kernel = (math.prod(rhs_dims) / max(o_size, 1)) if rhs_dims else 0
+                f = 2.0 * math.prod(res_dims or [0]) * kernel
+                out.flops += f * w
+                out.conv_flops += f * w
+            # ---- bytes (TPU semantics, not CPU artifacts)
+            if count_bytes and op not in _FREE_OPS:
+                if op == "copy":
+                    # loop-carried buffer copies are a CPU-backend artifact;
+                    # XLA:TPU aliases while-loop state in place
+                    continue
+                if op == "dynamic-update-slice" or (
+                        op == "fusion" and "dynamic-update-slice" in _res_name):
+                    # in-place on TPU: per execution the traffic is the
+                    # updated window, ≈ buffer/trips inside a loop — so one
+                    # UNWEIGHTED 2×buffer covers the whole loop
+                    ops_ = _OPERAND_RE.findall(s.split("(", 1)[1])
+                    if op == "dynamic-update-slice" and len(ops_) > 1:
+                        out.bytes += 2 * _shape_bytes(
+                            symtab.get(ops_[1], "")) * w
+                    else:
+                        out.bytes += 2 * res_bytes
+                    continue
+                if op == "dynamic-slice" or (
+                        op == "fusion" and "dynamic-slice" in _res_name):
+                    # slice result IS the window: read + write it
+                    out.bytes += 2 * res_bytes * w
+                    continue
+                b = res_bytes
+                for oname in _OPERAND_RE.findall(s.split("(", 1)[1])[:8]:
+                    b += _shape_bytes(symtab.get(oname, ""))
+                out.bytes += b * w
+    return out
+
+
+# ---------------------------------------------------------------------------
+# useful ("model") FLOPs
+# ---------------------------------------------------------------------------
+
+
+def _param_counts(params_sds, pattern_active: Optional[Tuple[float, str]] = None):
+    """(total, active) param counts; ``pattern_active`` = (keep_fraction,
+    regex) applied to expert weights for MoE."""
+    total = 0
+    expert = 0
+    flat, _ = jax.tree_util.tree_flatten_with_path(params_sds)
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx",
+                        getattr(p, "name", p)))) for p in path)
+        n = math.prod(leaf.shape)
+        total += n
+        if pattern_active and re.search(pattern_active[1], name):
+            expert += n
+    active = total
+    if pattern_active:
+        active = total - expert * (1.0 - pattern_active[0])
+    return total, active
+
+
+def lm_model_flops(arch, cell, params_sds) -> Dict[str, float]:
+    cfg_active = None
+    if "moe" in arch.family:
+        # keep fraction of expert weights that fire per token
+        from repro.configs.registry import get_arch  # noqa: F401 (doc aid)
+        moe = arch.make_config(cell).moe
+        cfg_active = (moe.top_k / moe.n_experts, r"moe/w_(gate|up|down)")
+    total, active = _param_counts(params_sds, cfg_active)
+    tokens = (cell.global_batch * cell.seq_len if cell.kind != "decode"
+              else cell.global_batch)
+    mult = 6.0 if cell.kind == "train" else 2.0
+    return {"params_total": float(total), "params_active": float(active),
+            "model_flops": mult * active * tokens,
+            "formula": f"{mult:.0f}*N_active*D (N={active:.3g}, D={tokens})"}
+
+
+_FWD_CACHE: Dict[Tuple, float] = {}
+
+
+def measured_fwd_flops(apply_fn, args_sds, cache_key: Tuple) -> float:
+    """Unsharded single-device forward FLOPs at batch=1 (linear in batch for
+    conv/diffusion nets) — the 'useful compute' reference for non-LM archs.
+    Uses the loop-weighted instruction model (layer scans!)."""
+    if cache_key not in _FWD_CACHE:
+        lowered = jax.jit(apply_fn).lower(*args_sds)
+        _FWD_CACHE[cache_key] = hlo_cost(lowered.compile().as_text()).flops
+    return _FWD_CACHE[cache_key]
+
+
+# ---------------------------------------------------------------------------
+# the three terms
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    collective_wire_s: float
+    hlo_flops_global: float
+    hlo_bytes_global: float
+    collective_bytes: float
+    model_flops: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_seconds(self) -> float:
+        """Roofline step-time estimate = max of the three terms (perfectly
+        overlapped model; the sum would be the no-overlap bound)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / max(self.hlo_flops_global, 1.0)
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilisation at the roofline step time."""
+        denom = self.step_seconds * self.chips * PEAK_FLOPS
+        return self.model_flops / max(denom, 1e-30)
+
+
+def roofline_terms(cost: Dict[str, float], coll: CollectiveStats,
+                   chips: int, model_flops: float,
+                   weighted: Optional[HloCost] = None) -> RooflineTerms:
+    """Terms from the loop-weighted instruction model when available
+    (XLA's cost_analysis counts while bodies once — wrong for scanned
+    layers/microbatches); falls back to cost_analysis numbers."""
+    if weighted is not None and weighted.flops > 0:
+        flops_pp = weighted.flops
+        bytes_pp = weighted.bytes
+    else:
+        flops_pp = float(cost.get("flops", 0.0))
+        bytes_pp = float(cost.get("bytes accessed", 0.0))
+    return RooflineTerms(
+        compute_s=flops_pp / PEAK_FLOPS,
+        memory_s=bytes_pp / HBM_BW,
+        collective_s=coll.operand_bytes / ICI_BW,
+        collective_wire_s=coll.wire_bytes / ICI_BW,
+        hlo_flops_global=flops_pp * chips,
+        hlo_bytes_global=bytes_pp * chips,
+        collective_bytes=coll.operand_bytes,
+        model_flops=model_flops,
+        chips=chips,
+    )

@@ -1,0 +1,130 @@
+"""CacheGenius serving driver — the paper's full request path on CPU.
+
+Builds the edge fleet (N node VDBs via the K-means storage classifier over
+a synthetic reference corpus), trains-or-loads the tiny diffusion model,
+AOT-precompiles the serving buckets, then replays a Zipf request trace
+through the hybrid pipeline and prints the paper's headline numbers
+(route mix, hit rate, Eq. 8 latency, $ cost vs. always-full-generation).
+
+    PYTHONPATH=src python -m repro.launch.serve --requests 300 --nodes 4
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core.latency_model import CostModel, LatencyModel
+from repro.core.lcu import POLICIES
+from repro.core.policy import GenerationPolicy, Route
+from repro.core.system import CacheGenius
+from repro.core.trace import RequestTrace
+from repro.core.vdb import BlobStore
+from repro.core.embeddings import ProxyClipEmbedder
+from repro.core.storage_classifier import StorageClassifier
+from repro.data.synthetic import make_corpus, render_caption
+from repro.runtime.serving import ServingEngine
+
+
+def build_system(*, n_nodes: int = 4, corpus_n: int = 600,
+                 capacity_per_node: int = 400, policy=None,
+                 eviction="LCU", use_scheduler=True,
+                 use_prompt_optimizer=True, backend=None, seed=0,
+                 node_speeds=None):
+    """Assemble the full CacheGenius stack over the synthetic corpus."""
+    images, captions, _ = make_corpus(corpus_n, res=32, seed=seed)
+    embedder = ProxyClipEmbedder(render_caption)
+    img_vecs = embedder.embed_image(images)
+    txt_vecs = embedder.embed_text(captions)
+    embedder.set_corpus_anchor(img_vecs)
+
+    blob = BlobStore()
+    payloads = np.array([blob.put(im) for im in images], np.int64)
+    classifier = StorageClassifier(n_nodes)
+    dbs = classifier.build_node_dbs(img_vecs, txt_vecs, payloads,
+                                    capacity_per_node=capacity_per_node)
+    if backend is None:
+        backend = _null_backend(images)
+    base_speeds = [1.0, 1.0, 0.82, 0.45]   # 4090D/4090D/3090/2070S
+    speeds = node_speeds or [base_speeds[i % len(base_speeds)]
+                             for i in range(n_nodes)]
+    system = CacheGenius(
+        embedder=embedder, dbs=dbs, blob_store=blob, backend=backend,
+        classifier=classifier, policy=policy or GenerationPolicy(),
+        latency_model=LatencyModel(), cost_model=CostModel(),
+        eviction=POLICIES[eviction], node_speeds=speeds,
+        use_scheduler=use_scheduler,
+        use_prompt_optimizer=use_prompt_optimizer)
+    return system, embedder, images, captions
+
+
+def _null_backend(corpus_images):
+    """Render-based stand-in backend for latency/routing experiments that
+    don't need a trained model (benchmarks train the real tiny DiT)."""
+    from repro.core.system import GenerationBackend
+    from repro.data.synthetic import render_caption as rc
+
+    def txt2img(prompt, steps, seed):
+        return rc(prompt, res=corpus_images.shape[1])
+
+    def img2img(prompt, ref, steps, seed):
+        target = rc(prompt, res=corpus_images.shape[1])
+        return 0.75 * target + 0.25 * ref[: target.shape[0], : target.shape[1]]
+
+    return GenerationBackend(txt2img=txt2img, img2img=img2img)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=300)
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--eviction", default="LCU",
+                    choices=sorted(POLICIES))
+    ap.add_argument("--no-scheduler", action="store_true")
+    ap.add_argument("--no-prompt-optimizer", action="store_true")
+    ap.add_argument("--fail-node", type=int, default=None,
+                    help="kill node N after half the requests")
+    args = ap.parse_args()
+
+    system, _, _, _ = build_system(
+        n_nodes=args.nodes, eviction=args.eviction,
+        use_scheduler=not args.no_scheduler,
+        use_prompt_optimizer=not args.no_prompt_optimizer)
+    engine = ServingEngine(system)
+
+    trace = RequestTrace(seed=1)
+    reqs = list(trace.generate(args.requests))
+    half = len(reqs) // 2
+    for i, r in enumerate(reqs):
+        if args.fail_node is not None and i == half:
+            print(f"--- failing node {args.fail_node} ---")
+            engine.fail_node(args.fail_node)
+        engine.submit(r.prompt, seed=i, quality_tier=r.quality_tier)
+    done = engine.drain()
+
+    st = system.stats
+    lat = np.array(st.latencies)
+    full_latency = system.latency_model.latency(
+        Route.TXT2IMG, system.policy.steps_full)
+    base_cost = CostModel()
+    for i in range(st.requests):
+        base_cost.charge(0, system.policy.steps_full *
+                         system.latency_model.t_step)
+    print(f"requests           : {st.requests}")
+    print(f"route mix          : {st.route_counts}")
+    print(f"hit rate           : {st.hit_rate:.3f}")
+    print(f"mean latency (Eq.8): {lat.mean():.3f}s   "
+          f"p50 {np.percentile(lat, 50):.3f}  p95 {np.percentile(lat, 95):.3f}")
+    print(f"vs always-full     : {full_latency:.3f}s  "
+          f"(reduction {100 * (1 - lat.mean() / full_latency):.1f}%)")
+    cost = system.cost_model.total_cost()
+    base = base_cost.total_cost()
+    print(f"cost               : ${cost:.4f} vs ${base:.4f} "
+          f"(reduction {100 * (1 - cost / max(base, 1e-12)):.1f}%)")
+    print(f"queue mean delay   : "
+          f"{np.mean([c.queue_delay for c in done]):.1f} ticks")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,17 @@
+"""Shared building blocks for every model family."""
+from repro.models.common.layers import (  # noqa: F401
+    dense,
+    groupnorm,
+    init_dense,
+    init_groupnorm,
+    init_layernorm,
+    init_rmsnorm,
+    layernorm,
+    modulate,
+    patchify,
+    rmsnorm,
+    rope_freqs,
+    apply_rope,
+    timestep_embedding,
+    unpatchify,
+)

@@ -1,0 +1,210 @@
+"""Grouped-query attention used across the LM and diffusion families.
+
+Supports:
+  * GQA (n_kv_heads <= n_heads), MHA as the special case,
+  * optional QK-RMSNorm (qwen3), optional QKV bias (qwen2),
+  * RoPE,
+  * causal or full attention,
+  * single-token decode against a KV cache (flash-decoding style: the
+    KV cache may be sequence-sharded; the softmax reduction then lowers
+    to an all-reduce under GSPMD),
+  * dispatch to the Pallas flash-attention kernel on TPU
+    (``repro.kernels.ops.flash_attention``), jnp fallback elsewhere.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import layers as L
+from repro.runtime.pspec import current_rules, logical_constraint
+
+
+class AttnConfig(NamedTuple):
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    causal: bool = True
+    rope_theta: float = 10000.0
+    use_pallas: bool = False  # dispatch to Pallas flash attention
+
+
+def init_attention(key, cfg: AttnConfig, *, param_dtype=jnp.float32):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": L.init_dense(kq, cfg.d_model, cfg.n_heads * cfg.head_dim,
+                           use_bias=cfg.qkv_bias, param_dtype=param_dtype),
+        "wk": L.init_dense(kk, cfg.d_model, cfg.n_kv_heads * cfg.head_dim,
+                           use_bias=cfg.qkv_bias, param_dtype=param_dtype),
+        "wv": L.init_dense(kv, cfg.d_model, cfg.n_kv_heads * cfg.head_dim,
+                           use_bias=cfg.qkv_bias, param_dtype=param_dtype),
+        "wo": L.init_dense(ko, cfg.n_heads * cfg.head_dim, cfg.d_model,
+                           param_dtype=param_dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = L.init_rmsnorm(cfg.head_dim, param_dtype)
+        p["k_norm"] = L.init_rmsnorm(cfg.head_dim, param_dtype)
+    return p
+
+
+def _repeat_kv(x, n_rep: int):
+    """(B, S, Hkv, D) -> (B, S, Hkv*n_rep, D)."""
+    if n_rep == 1:
+        return x
+    b, s, h, d = x.shape
+    x = jnp.broadcast_to(x[:, :, :, None, :], (b, s, h, n_rep, d))
+    return x.reshape(b, s, h * n_rep, d)
+
+
+# Sequences at or above this length use the chunked (flash-style) jnp path:
+# the naive form materialises a (B, H, S, S) tensor — 5.5 PB at the 32k
+# prefill cell — while the chunked scan keeps memory at O(B·H·S·block).
+CHUNKED_SEQ_THRESHOLD = 8192
+
+
+def _chunked_sdpa(q, k, v, *, causal: bool, block_k: int = 2048):
+    """Online-softmax attention via lax.scan over K/V chunks.
+
+    Pure-jnp flash attention: the same recurrence the Pallas kernel runs in
+    VMEM, expressed so XLA never materialises more than one (B, H, Sq,
+    block_k) logits tile.  Used for long-sequence prefill (Sq == Sk)."""
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    scale = dh ** -0.5
+    block_k = min(block_k, sk)
+    pad = (-sk) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nk = (sk + pad) // block_k
+    # (nk, b, block, h, d) so scan's leading axis is the chunk index
+    kc = jnp.moveaxis(k.reshape(b, nk, block_k, h, dh), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nk, block_k, h, dh), 1, 0)
+    rows = jnp.arange(sq, dtype=jnp.int32)[None, None, :, None]
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, ci = xs
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kb).astype(jnp.float32) * scale
+        cols = ci * block_k + jnp.arange(block_k, dtype=jnp.int32)[None, None, None, :]
+        mask = cols < sk
+        if causal:
+            mask = mask & (rows >= cols)
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l = corr * l + jnp.sum(p, axis=-1, keepdims=True)
+        acc = corr * acc + jnp.einsum("bhqk,bkhd->bhqd",
+                                      p.astype(v.dtype), vb).astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, h, sq, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, h, sq, 1), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kc, vc, jnp.arange(nk, dtype=jnp.int32)))
+    out = (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+    return jnp.moveaxis(out, 1, 2)  # (B, Sq, H, D)
+
+
+def sdpa(q, k, v, *, causal: bool, use_pallas: bool = False):
+    """Scaled dot-product attention over (B, S, H, D) tensors."""
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=causal)
+    if k.shape[1] >= CHUNKED_SEQ_THRESHOLD:
+        return _chunked_sdpa(q, k, v, causal=causal)
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        sq, sk = logits.shape[-2], logits.shape[-1]
+        mask = jnp.tril(jnp.ones((sq, sk), jnp.bool_), k=sk - sq)
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def attention(p, cfg: AttnConfig, x, *, rope=None, positions=None):
+    """Full (prefill/training) attention. x: (B, S, d_model)."""
+    b, s, _ = x.shape
+    q = L.dense(p["wq"], x).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = L.dense(p["wk"], x).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = L.dense(p["wv"], x).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = L.rmsnorm(p["q_norm"], q)
+        k = L.rmsnorm(p["k_norm"], k)
+    if rope is not None:
+        cos, sin = rope
+        q = L.apply_rope(q, cos, sin, positions)
+        k = L.apply_rope(k, cos, sin, positions)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    # "heads" rule (None by default; "model" under the §Perf head-sharding
+    # variant): pins the attention math to head parallelism — without it,
+    # GSPMD may shard the contraction instead and all-reduce the fp32
+    # (B, H, S, S) logits every layer (measured: 6 × 1.25 GB × 96 trips at
+    # the 400B train cell).
+    kf = _repeat_kv(k, n_rep)
+    vf = _repeat_kv(v, n_rep)
+    if (current_rules() or {}).get("heads") is not None:
+        q = logical_constraint(q, "batch", "seq", "heads", None)
+        kf = logical_constraint(kf, "batch", "seq", "heads", None)
+        vf = logical_constraint(vf, "batch", "seq", "heads", None)
+    out = sdpa(q, kf, vf, causal=cfg.causal, use_pallas=cfg.use_pallas)
+    if (current_rules() or {}).get("heads") is not None:
+        out = logical_constraint(out, "batch", "seq", "heads", None)
+    return L.dense(p["wo"], out.reshape(b, s, cfg.n_heads * cfg.head_dim)), (k, v)
+
+
+def decode_attention(p, cfg: AttnConfig, x, kv_cache, cache_len, *, rope=None):
+    """Single-token decode. x: (B, 1, d_model); kv_cache: (k, v) each
+    (B, S_max, Hkv, D). ``cache_len``: scalar or (B,) — number of valid
+    cache entries. Returns (out, new_kv_cache).
+
+    The contraction over the cache sequence axis is a plain reduction, so
+    a sequence-sharded cache (long-context cells) lowers to partial
+    attention + all-reduce — flash-decoding derived by SPMD rather than
+    hand-written.
+    """
+    b = x.shape[0]
+    q = L.dense(p["wq"], x).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    k_new = L.dense(p["wk"], x).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    v_new = L.dense(p["wv"], x).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = L.rmsnorm(p["q_norm"], q)
+        k_new = L.rmsnorm(p["k_norm"], k_new)
+    if rope is not None:
+        cos, sin = rope
+        pos = jnp.broadcast_to(jnp.asarray(cache_len).reshape(-1, 1), (b, 1))
+        q = L.apply_rope(q, cos, sin, pos)
+        k_new = L.apply_rope(k_new, cos, sin, pos)
+
+    k_cache, v_cache = kv_cache
+    s_max = k_cache.shape[1]
+    # Insert the new K/V at position cache_len via a one-hot scatter-add:
+    # dynamic_update_slice would force gather/scatter patterns that resist
+    # sequence sharding; the one-hot formulation is a matmul-like update
+    # GSPMD partitions cleanly along S_max.
+    onehot = jax.nn.one_hot(jnp.asarray(cache_len).reshape(-1), s_max,
+                            dtype=k_cache.dtype)  # (B, S_max) or (1, S_max)
+    onehot = jnp.broadcast_to(onehot, (b, s_max))
+    k_cache = k_cache * (1 - onehot)[:, :, None, None] + onehot[:, :, None, None] * k_new
+    v_cache = v_cache * (1 - onehot)[:, :, None, None] + onehot[:, :, None, None] * v_new
+
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    k_full = _repeat_kv(k_cache, n_rep)
+    v_full = _repeat_kv(v_cache, n_rep)
+    scale = cfg.head_dim ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k_full).astype(jnp.float32) * scale
+    # mask out positions beyond cache_len (inclusive of the new token)
+    valid = jnp.arange(s_max)[None, :] <= jnp.asarray(cache_len).reshape(-1, 1)
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v_full)
+    out = L.dense(p["wo"], out.reshape(b, 1, cfg.n_heads * cfg.head_dim))
+    return out, (k_cache, v_cache)

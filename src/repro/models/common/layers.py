@@ -1,0 +1,249 @@
+"""Foundational layers shared by every model family.
+
+Conventions
+-----------
+* Parameters are plain nested dicts of jnp arrays ("functional" style; no
+  framework).  ``init_*`` functions build the dict, the lower-case twin
+  applies it.  All ``init_*`` functions are pure so they can run under
+  ``jax.eval_shape`` — the multi-pod dry-run materialises parameter
+  *specs* only, never the arrays.
+* ``dtype`` is the computation dtype, ``param_dtype`` the storage dtype.
+* Matmuls use ``jnp.einsum`` with explicit subscripts so XLA/GSPMD sees
+  clean contractions to partition.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# initialisers
+# ---------------------------------------------------------------------------
+
+
+def _normal(key, shape, stddev, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * stddev).astype(dtype)
+
+
+def lecun_normal(key, shape, in_axis_size, dtype=jnp.float32):
+    return _normal(key, shape, 1.0 / math.sqrt(max(1, in_axis_size)), dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense / linear
+# ---------------------------------------------------------------------------
+
+
+def init_dense(key, in_dim: int, out_dim: int, *, use_bias: bool = False,
+               param_dtype=jnp.float32, scale: float | None = None):
+    stddev = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    p = {"w": _normal(key, (in_dim, out_dim), stddev, param_dtype)}
+    if use_bias:
+        p["b"] = jnp.zeros((out_dim,), param_dtype)
+    return p
+
+
+def dense(p, x, *, dtype=None):
+    w = p["w"]
+    if dtype is not None:
+        w = w.astype(dtype)
+        x = x.astype(dtype)
+    y = jnp.einsum("...i,io->...o", x, w)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(dim: int, param_dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), param_dtype)}
+
+
+def rmsnorm(p, x, *, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * p["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def init_layernorm(dim: int, param_dtype=jnp.float32, *, use_scale=True, use_bias=True):
+    p = {}
+    if use_scale:
+        p["scale"] = jnp.ones((dim,), param_dtype)
+    if use_bias:
+        p["bias"] = jnp.zeros((dim,), param_dtype)
+    return p
+
+
+def layernorm(p, x, *, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    if p and "scale" in p:
+        y = y * p["scale"].astype(jnp.float32)
+    if p and "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def init_groupnorm(channels: int, param_dtype=jnp.float32):
+    return {"scale": jnp.ones((channels,), param_dtype),
+            "bias": jnp.zeros((channels,), param_dtype)}
+
+
+def groupnorm(p, x, *, groups: int = 32, eps: float = 1e-5):
+    """GroupNorm over NHWC (or N...C) tensors."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    c = x.shape[-1]
+    g = min(groups, c)
+    while c % g:  # channels must divide; shrink groups if needed (reduced configs)
+        g -= 1
+    shape = x.shape[:-1] + (g, c // g)
+    xg = x.reshape(shape)
+    red_axes = tuple(range(1, len(shape) - 2)) + (len(shape) - 1,)
+    mean = jnp.mean(xg, axis=red_axes, keepdims=True)
+    var = jnp.mean(jnp.square(xg - mean), axis=red_axes, keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+    y = xg.reshape(x.shape)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def modulate(x, shift, scale):
+    """adaLN modulation: x * (1 + scale) + shift; shift/scale broadcast over tokens."""
+    return x * (1.0 + scale[..., None, :]) + shift[..., None, :]
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, max_len: int, *, theta: float = 10000.0):
+    """Return (cos, sin) of shape (max_len, head_dim//2) in float32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    t = jnp.arange(max_len, dtype=jnp.float32)
+    freqs = jnp.outer(t, inv)
+    return jnp.cos(freqs), jnp.sin(freqs)
+
+
+def apply_rope(x, cos, sin, positions=None):
+    """x: (..., seq, heads, head_dim). cos/sin: (max_len, head_dim//2).
+
+    positions: optional (..., seq) int positions (for decode); default arange.
+    """
+    seq = x.shape[-3]
+    if positions is None:
+        c = cos[:seq][None, :, None, :]
+        s = sin[:seq][None, :, None, :]
+    else:
+        c = jnp.take(cos, positions, axis=0)[..., :, None, :]
+        s = jnp.take(sin, positions, axis=0)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# diffusion helpers
+# ---------------------------------------------------------------------------
+
+
+def timestep_embedding(t, dim: int, *, max_period: float = 10000.0):
+    """Sinusoidal timestep embedding. t: (batch,) float; returns (batch, dim)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half)
+    args = t.astype(jnp.float32)[:, None] * freqs[None, :]
+    emb = jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+    if dim % 2:
+        emb = jnp.pad(emb, ((0, 0), (0, 1)))
+    return emb
+
+
+def patchify(x, patch: int):
+    """(B, H, W, C) -> (B, H/p * W/p, p*p*C)."""
+    b, h, w, c = x.shape
+    x = x.reshape(b, h // patch, patch, w // patch, patch, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, (h // patch) * (w // patch), patch * patch * c)
+
+
+def unpatchify(x, patch: int, h: int, w: int, c: int):
+    """(B, H/p * W/p, p*p*C) -> (B, H, W, C)."""
+    b = x.shape[0]
+    x = x.reshape(b, h // patch, w // patch, patch, patch, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, h, w, c)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, dim: int, hidden: int, *, use_bias=True, param_dtype=jnp.float32,
+             out_dim: int | None = None):
+    k1, k2 = jax.random.split(key)
+    out_dim = dim if out_dim is None else out_dim
+    return {
+        "fc1": init_dense(k1, dim, hidden, use_bias=use_bias, param_dtype=param_dtype),
+        "fc2": init_dense(k2, hidden, out_dim, use_bias=use_bias, param_dtype=param_dtype),
+    }
+
+
+def mlp(p, x, *, act=jax.nn.gelu):
+    return dense(p["fc2"], act(dense(p["fc1"], x)))
+
+
+def init_swiglu(key, dim: int, hidden: int, *, param_dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_dense(k1, dim, hidden, param_dtype=param_dtype),
+        "up": init_dense(k2, dim, hidden, param_dtype=param_dtype),
+        "down": init_dense(k3, hidden, dim, param_dtype=param_dtype),
+    }
+
+
+def swiglu(p, x):
+    return dense(p["down"], jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x))
+
+
+# ---------------------------------------------------------------------------
+# convolution wrappers (NHWC)
+# ---------------------------------------------------------------------------
+
+
+def init_conv(key, in_ch: int, out_ch: int, kernel: int | Sequence[int], *,
+              use_bias=True, param_dtype=jnp.float32, feature_group_count: int = 1):
+    if isinstance(kernel, int):
+        kernel = (kernel, kernel)
+    fan_in = (in_ch // feature_group_count) * kernel[0] * kernel[1]
+    p = {"w": _normal(key, kernel + (in_ch // feature_group_count, out_ch),
+                      1.0 / math.sqrt(fan_in), param_dtype)}
+    if use_bias:
+        p["b"] = jnp.zeros((out_ch,), param_dtype)
+    return p
+
+
+def conv(p, x, *, stride: int | Sequence[int] = 1, padding="SAME",
+         feature_group_count: int = 1):
+    if isinstance(stride, int):
+        stride = (stride, stride)
+    y = jax.lax.conv_general_dilated(
+        x, p["w"].astype(x.dtype), window_strides=stride, padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=feature_group_count)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y

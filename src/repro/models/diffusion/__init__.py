@@ -1,0 +1,4 @@
+"""Diffusion model family: noise schedules, samplers (DDIM / SDEdit /
+rectified flow), VAE, DiT, SD1.5-class UNet, Flux-class MMDiT."""
+from repro.models.diffusion.schedule import DiffusionSchedule  # noqa: F401
+from repro.models.diffusion import sampler  # noqa: F401

@@ -1,0 +1,137 @@
+"""DiT — Diffusion Transformer (Peebles & Xie, arXiv:2212.09748).
+
+adaLN-Zero conditioning on (timestep ⊕ pooled text embedding), patchified
+latent tokens, bidirectional attention.  Covers the assigned ``dit-b2``
+(12L/768/12H) and ``dit-l2`` (24L/1024/16H) configs plus the tiny
+reproduction model the CacheGenius benchmarks train on CPU.
+
+Layers run under ``lax.scan`` over stacked parameters so the full-size
+configs lower to compact HLO in the multi-pod dry-run; ``remat`` optionally
+wraps the block for activation checkpointing.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import layers as L
+from repro.models.common.attention import sdpa
+
+
+class DiTConfig(NamedTuple):
+    img_res: int = 32          # latent resolution fed to the backbone
+    in_ch: int = 4
+    patch: int = 2
+    n_layers: int = 12
+    d_model: int = 768
+    n_heads: int = 12
+    mlp_ratio: float = 4.0
+    ctx_dim: int = 512         # pooled conditioning vector (text tower)
+    remat: bool = False
+    use_pallas: bool = False
+    use_pallas_adaln: bool = False
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def n_tokens(self) -> int:
+        return (self.img_res // self.patch) ** 2
+
+
+def _init_block(key, cfg: DiTConfig, param_dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, h = cfg.d_model, int(cfg.d_model * cfg.mlp_ratio)
+    return {
+        "qkv": L.init_dense(k1, d, 3 * d, param_dtype=param_dtype),
+        "proj": L.init_dense(k2, d, d, param_dtype=param_dtype),
+        "mlp": L.init_mlp(k3, d, h, param_dtype=param_dtype),
+        # adaLN-zero: 6 modulation vectors, zero-init projection (norms are
+        # elementwise-affine-free, DiT style)
+        "ada": {"w": jnp.zeros((d, 6 * d), param_dtype),
+                "b": jnp.zeros((6 * d,), param_dtype)},
+    }
+
+
+def init_dit(key, cfg: DiTConfig, *, param_dtype=jnp.float32):
+    keys = jax.random.split(key, 8)
+    d = cfg.d_model
+    patch_dim = cfg.patch * cfg.patch * cfg.in_ch
+    # stacked per-layer params for lax.scan
+    block_keys = jax.random.split(keys[0], cfg.n_layers)
+    blocks = jax.vmap(lambda k: _init_block(k, cfg, param_dtype))(block_keys)
+    params = {
+        "patch_embed": L.init_dense(keys[1], patch_dim, d, use_bias=True,
+                                    param_dtype=param_dtype),
+        "pos_embed": L._normal(keys[2], (cfg.n_tokens, d), 0.02, param_dtype),
+        "t_mlp": L.init_mlp(keys[3], 256, d, out_dim=d, param_dtype=param_dtype),
+        "ctx_proj": L.init_dense(keys[4], cfg.ctx_dim, d, use_bias=True,
+                                 param_dtype=param_dtype),
+        "blocks": blocks,
+        "final_norm": {},
+        "final_ada": {"w": jnp.zeros((d, 2 * d), param_dtype),
+                      "b": jnp.zeros((2 * d,), param_dtype)},
+        "final_proj": {"w": jnp.zeros((d, patch_dim), param_dtype),
+                       "b": jnp.zeros((patch_dim,), param_dtype)},
+    }
+    return params
+
+
+def _block_apply(p, cfg: DiTConfig, x, cond):
+    """One DiT block. x: (B, T, D); cond: (B, D)."""
+    ada = L.dense(p["ada"], jax.nn.silu(cond))
+    sh1, sc1, g1, sh2, sc2, g2 = jnp.split(ada, 6, axis=-1)
+    if cfg.use_pallas_adaln:
+        from repro.kernels import ops as kops
+        h = kops.adaln_modulate(x, sh1, sc1)
+    else:
+        h = L.modulate(L.layernorm({}, x), sh1, sc1)
+    b, t, d = h.shape
+    qkv = L.dense(p["qkv"], h).reshape(b, t, 3, cfg.n_heads, cfg.head_dim)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+    att = sdpa(q, k, v, causal=False, use_pallas=cfg.use_pallas)
+    att = L.dense(p["proj"], att.reshape(b, t, d))
+    x = x + g1[:, None, :] * att
+    if cfg.use_pallas_adaln:
+        from repro.kernels import ops as kops
+        h2 = kops.adaln_modulate(x, sh2, sc2)
+    else:
+        h2 = L.modulate(L.layernorm({}, x), sh2, sc2)
+    x = x + g2[:, None, :] * L.mlp(p["mlp"], h2)
+    return x
+
+
+def apply_dit(params, cfg: DiTConfig, x_img, t, ctx):
+    """eps-prediction forward.
+
+    x_img: (B, res, res, in_ch) latent; t: (B,) int/float timesteps;
+    ctx: (B, ctx_dim) pooled conditioning. Returns eps of x_img's shape.
+    """
+    b = x_img.shape[0]
+    x = L.patchify(x_img, cfg.patch)
+    x = L.dense(params["patch_embed"], x) + params["pos_embed"][None].astype(x.dtype)
+    t_emb = L.timestep_embedding(t, 256).astype(x.dtype)
+    cond = L.mlp(params["t_mlp"], t_emb) + L.dense(params["ctx_proj"], ctx.astype(x.dtype))
+
+    def body(h, block):
+        fn = _block_apply
+        if cfg.remat:
+            fn = jax.checkpoint(fn, static_argnums=(1,))
+        return fn(block, cfg, h, cond), None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+
+    ada = L.dense(params["final_ada"], jax.nn.silu(cond))
+    shift, scale = jnp.split(ada, 2, axis=-1)
+    x = L.modulate(L.layernorm({}, x), shift, scale)
+    x = L.dense(params["final_proj"], x)
+    return L.unpatchify(x, cfg.patch, cfg.img_res, cfg.img_res, cfg.in_ch)
+
+
+def make_eps_fn(params, cfg: DiTConfig):
+    def eps_fn(x, t, ctx):
+        return apply_dit(params, cfg, x, t, ctx)
+    return eps_fn

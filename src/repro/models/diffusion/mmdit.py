@@ -1,0 +1,214 @@
+"""Flux-class MMDiT (rectified-flow multimodal DiT; BFL tech report).
+
+Double-stream blocks (separate image/text streams with joint attention)
+followed by single-stream blocks over the concatenated sequence, adaLN
+modulation from (timestep ⊕ guidance ⊕ pooled text).  The assigned
+``flux-dev`` config: 19 double + 38 single blocks, d_model=3072, 24 heads,
+latent 128 with patch 2 → 4096 image tokens (+ text tokens), ~12B params.
+
+Both block families run under ``lax.scan`` over stacked params so the
+full-size model lowers to compact HLO.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import layers as L
+from repro.models.common.attention import sdpa
+from repro.runtime.pspec import logical_constraint
+
+
+class MMDiTConfig(NamedTuple):
+    img_res: int = 128       # latent resolution
+    in_ch: int = 4
+    patch: int = 2
+    n_double: int = 19
+    n_single: int = 38
+    d_model: int = 3072
+    n_heads: int = 24
+    mlp_ratio: float = 4.0
+    txt_len: int = 256
+    txt_dim: int = 768       # incoming text token dim (stub frontend)
+    vec_dim: int = 512       # pooled conditioning (CLIP-ish)
+    remat: bool = False
+    use_pallas: bool = False
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def n_img_tokens(self) -> int:
+        return (self.img_res // self.patch) ** 2
+
+
+def _init_stream(key, d, hidden, param_dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "mod": L.init_dense(k1, d, 6 * d, use_bias=True, param_dtype=param_dtype,
+                            scale=0.0),
+        "qkv": L.init_dense(k2, d, 3 * d, param_dtype=param_dtype),
+        "proj": L.init_dense(k3, d, d, param_dtype=param_dtype),
+        "mlp": L.init_mlp(k4, d, hidden, param_dtype=param_dtype),
+        "q_norm": L.init_rmsnorm(d // 24 if d >= 24 else d, param_dtype),
+        "k_norm": L.init_rmsnorm(d // 24 if d >= 24 else d, param_dtype),
+    }
+
+
+def _init_double(key, cfg: MMDiTConfig, param_dtype):
+    ki, kt = jax.random.split(key)
+    hidden = int(cfg.d_model * cfg.mlp_ratio)
+    img = _init_stream(ki, cfg.d_model, hidden, param_dtype)
+    txt = _init_stream(kt, cfg.d_model, hidden, param_dtype)
+    # fix q/k norm dims to head_dim
+    for s in (img, txt):
+        s["q_norm"] = L.init_rmsnorm(cfg.head_dim, param_dtype)
+        s["k_norm"] = L.init_rmsnorm(cfg.head_dim, param_dtype)
+    return {"img": img, "txt": txt}
+
+
+def _init_single(key, cfg: MMDiTConfig, param_dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    hidden = int(d * cfg.mlp_ratio)
+    return {
+        "mod": L.init_dense(k1, d, 3 * d, use_bias=True, param_dtype=param_dtype,
+                            scale=0.0),
+        # fused qkv+mlp_in / proj+mlp_out (flux single-block layout)
+        "linear1": L.init_dense(k2, d, 3 * d + hidden, param_dtype=param_dtype),
+        "linear2": L.init_dense(k3, d + hidden, d, param_dtype=param_dtype),
+        "q_norm": L.init_rmsnorm(cfg.head_dim, param_dtype),
+        "k_norm": L.init_rmsnorm(cfg.head_dim, param_dtype),
+    }
+
+
+def init_mmdit(key, cfg: MMDiTConfig, *, param_dtype=jnp.float32):
+    keys = jax.random.split(key, 10)
+    d = cfg.d_model
+    patch_dim = cfg.patch * cfg.patch * cfg.in_ch
+    dbl = jax.vmap(lambda k: _init_double(k, cfg, param_dtype))(
+        jax.random.split(keys[0], cfg.n_double))
+    sgl = jax.vmap(lambda k: _init_single(k, cfg, param_dtype))(
+        jax.random.split(keys[1], cfg.n_single))
+    return {
+        "img_in": L.init_dense(keys[2], patch_dim, d, use_bias=True,
+                               param_dtype=param_dtype),
+        "txt_in": L.init_dense(keys[3], cfg.txt_dim, d, use_bias=True,
+                               param_dtype=param_dtype),
+        "time_mlp": L.init_mlp(keys[4], 256, d, out_dim=d, param_dtype=param_dtype),
+        "vec_mlp": L.init_mlp(keys[5], cfg.vec_dim, d, out_dim=d,
+                              param_dtype=param_dtype),
+        "guidance_mlp": L.init_mlp(keys[6], 256, d, out_dim=d, param_dtype=param_dtype),
+        "img_pos": L._normal(keys[7], (cfg.n_img_tokens, d), 0.02, param_dtype),
+        "double": dbl,
+        "single": sgl,
+        "final_mod": L.init_dense(keys[8], d, 2 * d, use_bias=True,
+                                  param_dtype=param_dtype, scale=0.0),
+        "final_proj": {"w": jnp.zeros((d, patch_dim), param_dtype),
+                       "b": jnp.zeros((patch_dim,), param_dtype)},
+    }
+
+
+def _stream_qkv(s, cfg, h, mod):
+    sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6, axis=-1)
+    hn = L.modulate(L.layernorm({}, h), sh1, sc1)
+    b, t, d = hn.shape
+    qkv = L.dense(s["qkv"], hn).reshape(b, t, 3, cfg.n_heads, cfg.head_dim)
+    q = L.rmsnorm(s["q_norm"], qkv[:, :, 0])
+    k = L.rmsnorm(s["k_norm"], qkv[:, :, 1])
+    return q, k, qkv[:, :, 2], (sh2, sc2, g1, g2)
+
+
+def _double_block(blk, cfg: MMDiTConfig, img, txt, cond):
+    mod_i = L.dense(blk["img"]["mod"], jax.nn.silu(cond))
+    mod_t = L.dense(blk["txt"]["mod"], jax.nn.silu(cond))
+    qi, ki, vi, (shi, sci, gi1, gi2) = _stream_qkv(blk["img"], cfg, img, mod_i)
+    qt, kt, vt, (sht, sct, gt1, gt2) = _stream_qkv(blk["txt"], cfg, txt, mod_t)
+    # joint attention over [txt ; img]
+    q = jnp.concatenate([qt, qi], axis=1)
+    k = jnp.concatenate([kt, ki], axis=1)
+    v = jnp.concatenate([vt, vi], axis=1)
+    att = sdpa(q, k, v, causal=False, use_pallas=cfg.use_pallas)
+    ta, ia = att[:, : txt.shape[1]], att[:, txt.shape[1]:]
+    b = img.shape[0]
+    img = img + gi1[:, None, :] * L.dense(blk["img"]["proj"],
+                                          ia.reshape(b, -1, cfg.d_model))
+    txt = txt + gt1[:, None, :] * L.dense(blk["txt"]["proj"],
+                                          ta.reshape(b, -1, cfg.d_model))
+    img = img + gi2[:, None, :] * L.mlp(blk["img"]["mlp"],
+                                        L.modulate(L.layernorm({}, img), shi, sci))
+    txt = txt + gt2[:, None, :] * L.mlp(blk["txt"]["mlp"],
+                                        L.modulate(L.layernorm({}, txt), sht, sct))
+    return img, txt
+
+
+def _single_block(blk, cfg: MMDiTConfig, x, cond):
+    mod = L.dense(blk["mod"], jax.nn.silu(cond))
+    sh, sc, g = jnp.split(mod, 3, axis=-1)
+    hn = L.modulate(L.layernorm({}, x), sh, sc)
+    u = L.dense(blk["linear1"], hn)
+    b, t, _ = u.shape
+    d = cfg.d_model
+    qkv, m = u[..., : 3 * d], u[..., 3 * d:]
+    qkv = qkv.reshape(b, t, 3, cfg.n_heads, cfg.head_dim)
+    q = L.rmsnorm(blk["q_norm"], qkv[:, :, 0])
+    k = L.rmsnorm(blk["k_norm"], qkv[:, :, 1])
+    att = sdpa(q, k, qkv[:, :, 2], causal=False, use_pallas=cfg.use_pallas)
+    out = L.dense(blk["linear2"],
+                  jnp.concatenate([att.reshape(b, t, d), jax.nn.gelu(m)], axis=-1))
+    return x + g[:, None, :] * out
+
+
+def apply_mmdit(p, cfg: MMDiTConfig, x_img, t, ctx):
+    """Velocity prediction. x_img: (B, res, res, in_ch); t: (B,) in [0,1];
+    ctx: dict(txt=(B, txt_len, txt_dim), vec=(B, vec_dim), guidance=(B,))."""
+    b = x_img.shape[0]
+    img = L.dense(p["img_in"], L.patchify(x_img, cfg.patch))
+    img = img + p["img_pos"][None].astype(img.dtype)
+    txt = L.dense(p["txt_in"], ctx["txt"].astype(img.dtype))
+    cond = L.mlp(p["time_mlp"], L.timestep_embedding(t * 1000.0, 256).astype(img.dtype))
+    cond = cond + L.mlp(p["vec_mlp"], ctx["vec"].astype(img.dtype))
+    if "guidance" in ctx:
+        cond = cond + L.mlp(p["guidance_mlp"],
+                            L.timestep_embedding(ctx["guidance"], 256).astype(img.dtype))
+
+    def dbl_body(carry, blk):
+        im, tx = carry
+        fn = _double_block
+        if cfg.remat:
+            fn = jax.checkpoint(fn, static_argnums=(1,))
+        im, tx = fn(blk, cfg, im, tx, cond)
+        # block-boundary constraint: under sequence-parallel rules
+        # ("seq" → model) the residual stream stays token-sharded between
+        # blocks and the TP all-reduce decomposes into rs + ag (§Perf)
+        im = logical_constraint(im, "batch", "seq", None)
+        tx = logical_constraint(tx, "batch", "seq", None)
+        return (im, tx), None
+
+    (img, txt), _ = jax.lax.scan(dbl_body, (img, txt), p["double"])
+
+    x = jnp.concatenate([txt, img], axis=1)
+
+    def sgl_body(h, blk):
+        fn = _single_block
+        if cfg.remat:
+            fn = jax.checkpoint(fn, static_argnums=(1,))
+        h = fn(blk, cfg, h, cond)
+        return logical_constraint(h, "batch", "seq", None), None
+
+    x, _ = jax.lax.scan(sgl_body, x, p["single"])
+    img = x[:, txt.shape[1]:]
+
+    sh, sc = jnp.split(L.dense(p["final_mod"], jax.nn.silu(cond)), 2, axis=-1)
+    img = L.modulate(L.layernorm({}, img), sh, sc)
+    img = L.dense(p["final_proj"], img)
+    return L.unpatchify(img, cfg.patch, cfg.img_res, cfg.img_res, cfg.in_ch)
+
+
+def make_v_fn(params, cfg: MMDiTConfig):
+    def v_fn(x, t, ctx):
+        return apply_mmdit(params, cfg, x, t, ctx)
+    return v_fn

@@ -1,0 +1,49 @@
+"""DDPM noise schedule (paper §III-A, Eq. 1-2) and the SDEdit forward map
+(Eq. 4).  Everything is precomputed into arrays so samplers stay jittable."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class DiffusionSchedule(NamedTuple):
+    betas: jax.Array          # (T,)
+    alphas: jax.Array         # (T,)
+    alphas_bar: jax.Array     # (T,) cumulative ᾱ_t
+
+    @property
+    def T(self) -> int:
+        return self.betas.shape[0]
+
+    @classmethod
+    def linear(cls, T: int = 1000, beta_start: float = 1e-4,
+               beta_end: float = 0.02) -> "DiffusionSchedule":
+        betas = jnp.linspace(beta_start, beta_end, T, dtype=jnp.float32)
+        alphas = 1.0 - betas
+        return cls(betas, alphas, jnp.cumprod(alphas))
+
+    @classmethod
+    def cosine(cls, T: int = 1000, s: float = 8e-3) -> "DiffusionSchedule":
+        t = jnp.arange(T + 1, dtype=jnp.float32) / T
+        f = jnp.cos((t + s) / (1 + s) * jnp.pi / 2) ** 2
+        abar = f / f[0]
+        betas = jnp.clip(1 - abar[1:] / abar[:-1], 1e-8, 0.999)
+        alphas = 1.0 - betas
+        return cls(betas, alphas, jnp.cumprod(alphas))
+
+    # -- forward process -----------------------------------------------------
+
+    def q_sample(self, x0, t, noise):
+        """Eq. 4: x_t = sqrt(ᾱ_t) x_0 + sqrt(1-ᾱ_t) ε.  This is also the
+        SDEdit noising map that turns a cached reference into the img2img
+        starting point.  t: int array broadcastable to x0's batch."""
+        ab = self.alphas_bar[t]
+        shape = (-1,) + (1,) * (x0.ndim - 1)
+        ab = ab.reshape(shape)
+        return jnp.sqrt(ab) * x0 + jnp.sqrt(1.0 - ab) * noise
+
+    def snr(self, t):
+        ab = self.alphas_bar[t]
+        return ab / (1.0 - ab)

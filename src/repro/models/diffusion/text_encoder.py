@@ -1,0 +1,77 @@
+"""Small CLIP-style text encoder used for diffusion conditioning and the
+trainable dual-tower embedder.  Bidirectional transformer over hash-token
+ids → per-token context (for cross-attention) + pooled vector."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import layers as L
+from repro.models.common.attention import sdpa
+
+
+class TextEncoderConfig(NamedTuple):
+    vocab: int = 32768
+    max_len: int = 77
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    out_dim: int = 768       # ctx token dim handed to the diffusion backbone
+    pool_dim: int = 512      # pooled embedding dim
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+
+def _init_block(key, cfg, param_dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "ln1": L.init_layernorm(d, param_dtype),
+        "qkv": L.init_dense(k1, d, 3 * d, param_dtype=param_dtype),
+        "proj": L.init_dense(k2, d, d, param_dtype=param_dtype),
+        "ln2": L.init_layernorm(d, param_dtype),
+        "mlp": L.init_mlp(k3, d, 4 * d, param_dtype=param_dtype),
+    }
+
+
+def init_text_encoder(key, cfg: TextEncoderConfig, *, param_dtype=jnp.float32):
+    keys = jax.random.split(key, 6)
+    blocks = jax.vmap(lambda k: _init_block(k, cfg, param_dtype))(
+        jax.random.split(keys[0], cfg.n_layers))
+    return {
+        "embed": L._normal(keys[1], (cfg.vocab, cfg.d_model), 0.02, param_dtype),
+        "pos": L._normal(keys[2], (cfg.max_len, cfg.d_model), 0.02, param_dtype),
+        "blocks": blocks,
+        "ln_f": L.init_layernorm(cfg.d_model, param_dtype),
+        "to_ctx": L.init_dense(keys[3], cfg.d_model, cfg.out_dim,
+                               param_dtype=param_dtype),
+        "to_pool": L.init_dense(keys[4], cfg.d_model, cfg.pool_dim,
+                                param_dtype=param_dtype),
+    }
+
+
+def apply_text_encoder(p, cfg: TextEncoderConfig, tokens):
+    """tokens: (B, S) -> (ctx (B, S, out_dim), pooled (B, pool_dim))."""
+    mask = (tokens != 0).astype(jnp.float32)
+    x = jnp.take(p["embed"], tokens, axis=0) + p["pos"][None, : tokens.shape[1]]
+
+    def body(h, blk):
+        hn = L.layernorm(blk["ln1"], h)
+        b, s, d = hn.shape
+        qkv = L.dense(blk["qkv"], hn).reshape(b, s, 3, cfg.n_heads, cfg.head_dim)
+        att = sdpa(qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2], causal=False)
+        h = h + L.dense(blk["proj"], att.reshape(b, s, d))
+        h = h + L.mlp(blk["mlp"], L.layernorm(blk["ln2"], h))
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, p["blocks"])
+    x = L.layernorm(p["ln_f"], x)
+    ctx = L.dense(p["to_ctx"], x)
+    denom = jnp.maximum(mask.sum(-1, keepdims=True), 1.0)
+    pooled = jnp.einsum("bsd,bs->bd", x, mask) / denom
+    pooled = L.dense(p["to_pool"], pooled)
+    return ctx, pooled

@@ -1,0 +1,232 @@
+"""SD1.5-class latent UNet (Rombach et al., arXiv:2112.10752).
+
+Stable Diffusion v1.5 layout: conv stem into ``ch``, channel multipliers
+``ch_mult`` with ``n_res`` residual blocks per level, spatial transformer
+(self-attn + cross-attn over text tokens + GEGLU FF) at the levels whose
+downsample factor is in ``attn_factors`` (the assigned config's
+``attn_res=4-2-1``), a mid block, skip-connected decoder, GroupNorm+SiLU
+throughout, timestep embedding injected into every residual block.
+
+The assigned ``unet-sd15`` config is exactly: ch=320, ch_mult=(1,2,4,4),
+n_res=2, attn at factors {1,2,4}, ctx_dim=768 — ≈0.86B parameters.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import layers as L
+from repro.models.common.attention import sdpa
+
+
+class UNetConfig(NamedTuple):
+    in_ch: int = 4
+    ch: int = 320
+    ch_mult: Sequence[int] = (1, 2, 4, 4)
+    n_res: int = 2
+    attn_factors: Sequence[int] = (1, 2, 4)
+    n_heads: int = 8
+    ctx_dim: int = 768
+    tembed_dim: int = 1280
+    groups: int = 32
+    use_pallas: bool = False
+    remat: bool = False
+
+    def level_ch(self, i: int) -> int:
+        return self.ch * self.ch_mult[i]
+
+    def has_attn(self, level: int) -> bool:
+        return (2 ** level) in tuple(self.attn_factors)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def _init_res(key, cfg, in_ch, out_ch, param_dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "norm1": L.init_groupnorm(in_ch, param_dtype),
+        "conv1": L.init_conv(k1, in_ch, out_ch, 3, param_dtype=param_dtype),
+        "temb": L.init_dense(k2, cfg.tembed_dim, out_ch, use_bias=True,
+                             param_dtype=param_dtype),
+        "norm2": L.init_groupnorm(out_ch, param_dtype),
+        "conv2": L.init_conv(k3, out_ch, out_ch, 3, param_dtype=param_dtype),
+    }
+    if in_ch != out_ch:
+        p["skip"] = L.init_conv(k4, in_ch, out_ch, 1, param_dtype=param_dtype)
+    return p
+
+
+def _res(p, cfg, x, temb):
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        h = kops.groupnorm_silu(x, p["norm1"]["scale"], p["norm1"]["bias"],
+                                groups=cfg.groups)
+    else:
+        h = jax.nn.silu(L.groupnorm(p["norm1"], x, groups=cfg.groups))
+    h = L.conv(p["conv1"], h)
+    h = h + L.dense(p["temb"], jax.nn.silu(temb))[:, None, None, :]
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        h = kops.groupnorm_silu(h, p["norm2"]["scale"], p["norm2"]["bias"],
+                                groups=cfg.groups)
+    else:
+        h = jax.nn.silu(L.groupnorm(p["norm2"], h, groups=cfg.groups))
+    h = L.conv(p["conv2"], h)
+    return h + (L.conv(p["skip"], x) if "skip" in p else x)
+
+
+def _init_spatial_transformer(key, cfg, ch, param_dtype):
+    ks = jax.random.split(key, 9)
+    inner = ch
+    return {
+        "norm": L.init_groupnorm(ch, param_dtype),
+        "proj_in": L.init_conv(ks[0], ch, inner, 1, param_dtype=param_dtype),
+        "ln1": L.init_layernorm(inner, param_dtype),
+        "self_qkv": L.init_dense(ks[1], inner, 3 * inner, param_dtype=param_dtype),
+        "self_out": L.init_dense(ks[2], inner, inner, param_dtype=param_dtype),
+        "ln2": L.init_layernorm(inner, param_dtype),
+        "cross_q": L.init_dense(ks[3], inner, inner, param_dtype=param_dtype),
+        "cross_kv": L.init_dense(ks[4], cfg.ctx_dim, 2 * inner, param_dtype=param_dtype),
+        "cross_out": L.init_dense(ks[5], inner, inner, param_dtype=param_dtype),
+        "ln3": L.init_layernorm(inner, param_dtype),
+        "geglu": L.init_dense(ks[6], inner, 8 * inner, param_dtype=param_dtype),
+        "ff_out": L.init_dense(ks[7], 4 * inner, inner, param_dtype=param_dtype),
+        "proj_out": L.init_conv(ks[8], inner, ch, 1, param_dtype=param_dtype),
+    }
+
+
+def _spatial_transformer(p, cfg, x, ctx):
+    """x: (B, H, W, C); ctx: (B, S_txt, ctx_dim)."""
+    b, hh, ww, c = x.shape
+    heads = cfg.n_heads
+    hd = c // heads
+    h = L.groupnorm(p["norm"], x, groups=cfg.groups)
+    h = L.conv(p["proj_in"], h).reshape(b, hh * ww, c)
+    # self-attention
+    qkv = L.dense(p["self_qkv"], L.layernorm(p["ln1"], h))
+    q, k, v = [u.reshape(b, hh * ww, heads, hd) for u in jnp.split(qkv, 3, -1)]
+    h = h + L.dense(p["self_out"],
+                    sdpa(q, k, v, causal=False, use_pallas=cfg.use_pallas)
+                    .reshape(b, hh * ww, c))
+    # cross-attention over text tokens
+    q = L.dense(p["cross_q"], L.layernorm(p["ln2"], h)).reshape(b, hh * ww, heads, hd)
+    kv = L.dense(p["cross_kv"], ctx.astype(h.dtype))
+    k, v = [u.reshape(b, ctx.shape[1], heads, hd) for u in jnp.split(kv, 2, -1)]
+    h = h + L.dense(p["cross_out"],
+                    sdpa(q, k, v, causal=False, use_pallas=cfg.use_pallas)
+                    .reshape(b, hh * ww, c))
+    # GEGLU feed-forward
+    u = L.dense(p["geglu"], L.layernorm(p["ln3"], h))
+    a, g = jnp.split(u, 2, -1)
+    h = h + L.dense(p["ff_out"], a * jax.nn.gelu(g))
+    h = L.conv(p["proj_out"], h.reshape(b, hh, ww, c))
+    return x + h
+
+
+# ---------------------------------------------------------------------------
+# full UNet
+# ---------------------------------------------------------------------------
+
+
+def init_unet(key, cfg: UNetConfig, *, param_dtype=jnp.float32):
+    keys = iter(jax.random.split(key, 256))
+    nl = len(cfg.ch_mult)
+    p = {
+        "conv_in": L.init_conv(next(keys), cfg.in_ch, cfg.ch, 3, param_dtype=param_dtype),
+        "t_mlp": L.init_mlp(next(keys), cfg.ch, cfg.tembed_dim,
+                            out_dim=cfg.tembed_dim, param_dtype=param_dtype),
+    }
+    # -- encoder
+    ch = cfg.ch
+    skip_chs = [ch]
+    for li in range(nl):
+        out = cfg.level_ch(li)
+        level = {}
+        for ri in range(cfg.n_res):
+            level[f"res{ri}"] = _init_res(next(keys), cfg, ch, out, param_dtype)
+            ch = out
+            if cfg.has_attn(li):
+                level[f"attn{ri}"] = _init_spatial_transformer(next(keys), cfg, ch,
+                                                               param_dtype)
+            skip_chs.append(ch)
+        if li != nl - 1:
+            level["down"] = L.init_conv(next(keys), ch, ch, 3, param_dtype=param_dtype)
+            skip_chs.append(ch)
+        p[f"down{li}"] = level
+    # -- mid
+    p["mid_res1"] = _init_res(next(keys), cfg, ch, ch, param_dtype)
+    p["mid_attn"] = _init_spatial_transformer(next(keys), cfg, ch, param_dtype)
+    p["mid_res2"] = _init_res(next(keys), cfg, ch, ch, param_dtype)
+    # -- decoder
+    for li in reversed(range(nl)):
+        out = cfg.level_ch(li)
+        level = {}
+        for ri in range(cfg.n_res + 1):
+            skip = skip_chs.pop()
+            level[f"res{ri}"] = _init_res(next(keys), cfg, ch + skip, out, param_dtype)
+            ch = out
+            if cfg.has_attn(li):
+                level[f"attn{ri}"] = _init_spatial_transformer(next(keys), cfg, ch,
+                                                               param_dtype)
+        if li != 0:
+            level["up"] = L.init_conv(next(keys), ch, ch * 4, 3, param_dtype=param_dtype)
+        p[f"up{li}"] = level
+    p["norm_out"] = L.init_groupnorm(ch, param_dtype)
+    p["conv_out"] = L.init_conv(next(keys), ch, cfg.in_ch, 3, param_dtype=param_dtype)
+    return p
+
+
+def apply_unet(p, cfg: UNetConfig, x, t, ctx):
+    """eps-prediction. x: (B, h, w, in_ch) latent; t: (B,); ctx: (B, S, ctx_dim)."""
+    nl = len(cfg.ch_mult)
+    temb = L.timestep_embedding(t, cfg.ch).astype(x.dtype)
+    temb = L.mlp(p["t_mlp"], temb)
+
+    def maybe_remat(fn):
+        return jax.checkpoint(fn) if cfg.remat else fn
+
+    h = L.conv(p["conv_in"], x)
+    skips = [h]
+    for li in range(nl):
+        level = p[f"down{li}"]
+        for ri in range(cfg.n_res):
+            h = maybe_remat(lambda hh, blk=level[f"res{ri}"]: _res(blk, cfg, hh, temb))(h)
+            if cfg.has_attn(li):
+                h = maybe_remat(lambda hh, blk=level[f"attn{ri}"]:
+                                _spatial_transformer(blk, cfg, hh, ctx))(h)
+            skips.append(h)
+        if li != nl - 1:
+            h = L.conv(level["down"], h, stride=2)
+            skips.append(h)
+
+    h = _res(p["mid_res1"], cfg, h, temb)
+    h = _spatial_transformer(p["mid_attn"], cfg, h, ctx)
+    h = _res(p["mid_res2"], cfg, h, temb)
+
+    for li in reversed(range(nl)):
+        level = p[f"up{li}"]
+        for ri in range(cfg.n_res + 1):
+            h = jnp.concatenate([h, skips.pop()], axis=-1)
+            h = maybe_remat(lambda hh, blk=level[f"res{ri}"]: _res(blk, cfg, hh, temb))(h)
+            if cfg.has_attn(li):
+                h = maybe_remat(lambda hh, blk=level[f"attn{ri}"]:
+                                _spatial_transformer(blk, cfg, hh, ctx))(h)
+        if li != 0:
+            h = L.conv(level["up"], h)
+            b, hh_, ww_, c4 = h.shape
+            h = h.reshape(b, hh_, ww_, 2, 2, c4 // 4).transpose(0, 1, 3, 2, 4, 5)
+            h = h.reshape(b, hh_ * 2, ww_ * 2, c4 // 4)
+
+    h = jax.nn.silu(L.groupnorm(p["norm_out"], h, groups=cfg.groups))
+    return L.conv(p["conv_out"], h)
+
+
+def make_eps_fn(params, cfg: UNetConfig):
+    def eps_fn(x, t, ctx):
+        return apply_unet(params, cfg, x, t, ctx)
+    return eps_fn

@@ -1,0 +1,124 @@
+"""Convolutional VAE (the LDM autoencoder, §III-B "latent variable space").
+
+f8 spatial compression (three stride-2 stages), GroupNorm+SiLU residual
+blocks, 4 latent channels — the Stable-Diffusion layout at configurable
+width.  ``encode``/``decode`` are used by every latent-diffusion arch
+(unet-sd15, flux-dev, and the DiT configs); the small reproduction model
+trains it jointly on the synthetic corpus.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import layers as L
+
+
+class VAEConfig(NamedTuple):
+    in_ch: int = 3
+    base_ch: int = 64
+    ch_mult: tuple = (1, 2, 4)   # one stride-2 per extra stage → f = 2^(len-1) * 2
+    z_ch: int = 4
+    n_res: int = 1
+
+    @property
+    def downsample(self) -> int:
+        return 2 ** len(self.ch_mult)
+
+
+def _init_resblock(key, in_ch, out_ch, param_dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "norm1": L.init_groupnorm(in_ch, param_dtype),
+        "conv1": L.init_conv(k1, in_ch, out_ch, 3, param_dtype=param_dtype),
+        "norm2": L.init_groupnorm(out_ch, param_dtype),
+        "conv2": L.init_conv(k2, out_ch, out_ch, 3, param_dtype=param_dtype),
+    }
+    if in_ch != out_ch:
+        p["skip"] = L.init_conv(k3, in_ch, out_ch, 1, param_dtype=param_dtype)
+    return p
+
+
+def _resblock(p, x, *, use_pallas: bool = False):
+    if use_pallas:
+        from repro.kernels import ops as kops
+        h = kops.groupnorm_silu(x, p["norm1"]["scale"], p["norm1"]["bias"])
+    else:
+        h = jax.nn.silu(L.groupnorm(p["norm1"], x))
+    h = L.conv(p["conv1"], h)
+    if use_pallas:
+        from repro.kernels import ops as kops
+        h = kops.groupnorm_silu(h, p["norm2"]["scale"], p["norm2"]["bias"])
+    else:
+        h = jax.nn.silu(L.groupnorm(p["norm2"], h))
+    h = L.conv(p["conv2"], h)
+    skip = L.conv(p["skip"], x) if "skip" in p else x
+    return h + skip
+
+
+def init_vae(key, cfg: VAEConfig, *, param_dtype=jnp.float32):
+    keys = iter(jax.random.split(key, 64))
+    enc = {"stem": L.init_conv(next(keys), cfg.in_ch, cfg.base_ch, 3,
+                               param_dtype=param_dtype)}
+    ch = cfg.base_ch
+    for si, mult in enumerate(cfg.ch_mult):
+        out = cfg.base_ch * mult
+        stage = {"down": L.init_conv(next(keys), ch, out, 3, param_dtype=param_dtype)}
+        for ri in range(cfg.n_res):
+            stage[f"res{ri}"] = _init_resblock(next(keys), out, out, param_dtype)
+        enc[f"stage{si}"] = stage
+        ch = out
+    enc["norm_out"] = L.init_groupnorm(ch, param_dtype)
+    enc["to_moments"] = L.init_conv(next(keys), ch, 2 * cfg.z_ch, 1,
+                                    param_dtype=param_dtype)
+
+    dec = {"from_z": L.init_conv(next(keys), cfg.z_ch, ch, 1, param_dtype=param_dtype)}
+    for si, mult in enumerate(reversed(cfg.ch_mult)):
+        out = cfg.base_ch * mult
+        stage = {"up": L.init_conv(next(keys), ch, out * 4, 3, param_dtype=param_dtype)}
+        for ri in range(cfg.n_res):
+            stage[f"res{ri}"] = _init_resblock(next(keys), out, out, param_dtype)
+        dec[f"stage{si}"] = stage
+        ch = out
+    dec["norm_out"] = L.init_groupnorm(ch, param_dtype)
+    dec["to_img"] = L.init_conv(next(keys), ch, cfg.in_ch, 3, param_dtype=param_dtype)
+    return {"enc": enc, "dec": dec}
+
+
+def encode(p, cfg: VAEConfig, x, *, use_pallas: bool = False):
+    """x: (B, H, W, 3) -> latent moments; returns (mean, logvar)."""
+    h = L.conv(p["enc"]["stem"], x)
+    for si in range(len(cfg.ch_mult)):
+        stage = p["enc"][f"stage{si}"]
+        h = L.conv(stage["down"], h, stride=2)
+        for ri in range(cfg.n_res):
+            h = _resblock(stage[f"res{ri}"], h, use_pallas=use_pallas)
+    h = jax.nn.silu(L.groupnorm(p["enc"]["norm_out"], h))
+    moments = L.conv(p["enc"]["to_moments"], h)
+    mean, logvar = jnp.split(moments, 2, axis=-1)
+    return mean, jnp.clip(logvar, -30.0, 20.0)
+
+
+def sample_latent(key, mean, logvar):
+    return mean + jnp.exp(0.5 * logvar) * jax.random.normal(key, mean.shape, mean.dtype)
+
+
+def decode(p, cfg: VAEConfig, z, *, use_pallas: bool = False):
+    """z: (B, h, w, z_ch) -> image (B, H, W, 3) in [-1, 1] (tanh-free)."""
+    h = L.conv(p["dec"]["from_z"], z)
+    for si in range(len(cfg.ch_mult)):
+        stage = p["dec"][f"stage{si}"]
+        h = L.conv(stage["up"], h)
+        b, hh, ww, c4 = h.shape
+        h = h.reshape(b, hh, ww, 2, 2, c4 // 4).transpose(0, 1, 3, 2, 4, 5)
+        h = h.reshape(b, hh * 2, ww * 2, c4 // 4)  # pixel-shuffle upsample
+        for ri in range(cfg.n_res):
+            h = _resblock(stage[f"res{ri}"], h, use_pallas=use_pallas)
+    h = jax.nn.silu(L.groupnorm(p["dec"]["norm_out"], h))
+    return L.conv(p["dec"]["to_img"], h)
+
+
+def kl_loss(mean, logvar):
+    return 0.5 * jnp.mean(jnp.square(mean) + jnp.exp(logvar) - 1.0 - logvar)

@@ -1,0 +1,2 @@
+"""Decoder-only LM family: dense (qwen) and MoE (llama4 / moonshot)."""
+from repro.models.transformer.lm import LMConfig, MoEConfig, init_lm, apply_lm  # noqa: F401

@@ -1,0 +1,119 @@
+"""Mixture-of-Experts FFN with sort-free scatter/gather dispatch.
+
+Dispatch is pure data movement (gathers + one int scatter), NOT a one-hot
+matmul — so compiled HLO FLOPs stay ≈ the *active*-parameter FLOPs and the
+roofline's MODEL_FLOPS/HLO_FLOPs ratio is honest.  Token→expert routing:
+
+  1. top-k router probabilities per token,
+  2. rank-within-expert via a cumulative sum over the (T·k, E) one-hot
+     (memory-cheap int32; GSPMD partitions the cumsum),
+  3. capacity-dropped scatter of token *indices* into an (E·C,) slot map,
+  4. gather tokens into (E, C, d) expert buffers  → batched expert einsum
+     (experts sharded over the ``expert`` logical axis = EP on `model`),
+  5. gather-back + gate-weighted combine (dropped tokens contribute 0,
+     residual stream carries them unchanged).
+
+Supports llama4-maverick (128e top-1 + shared expert, interleaved with
+dense layers) and moonshot (64e top-6).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import layers as L
+from repro.runtime.pspec import logical_constraint
+
+
+class MoEConfig(NamedTuple):
+    n_experts: int
+    top_k: int
+    d_ff: int                      # per-expert hidden
+    capacity_factor: float = 1.25
+    shared_expert_ff: int = 0      # 0 → no shared expert
+    router_zloss: float = 1e-3
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig, *, param_dtype=jnp.float32):
+    k_r, k_g, k_u, k_d, k_s = jax.random.split(key, 5)
+    e, f = cfg.n_experts, cfg.d_ff
+    scale_in = 1.0 / jnp.sqrt(d_model)
+    scale_out = 1.0 / jnp.sqrt(f)
+    p = {
+        "router": L.init_dense(k_r, d_model, e, param_dtype=param_dtype),
+        "w_gate": (jax.random.normal(k_g, (e, d_model, f), jnp.float32)
+                   * scale_in).astype(param_dtype),
+        "w_up": (jax.random.normal(k_u, (e, d_model, f), jnp.float32)
+                 * scale_in).astype(param_dtype),
+        "w_down": (jax.random.normal(k_d, (e, f, d_model), jnp.float32)
+                   * scale_out).astype(param_dtype),
+    }
+    if cfg.shared_expert_ff:
+        p["shared"] = L.init_swiglu(k_s, d_model, cfg.shared_expert_ff,
+                                    param_dtype=param_dtype)
+    return p
+
+
+def moe_ffn(p, cfg: MoEConfig, x, *, capacity: Optional[int] = None):
+    """x: (B, S, d) -> (B, S, d); plus aux losses dict."""
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.top_k
+    e = cfg.n_experts
+    xf = x.reshape(t, d)
+
+    router_logits = L.dense(p["router"], xf).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gates, sel = jax.lax.top_k(probs, k)                          # (T, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+
+    # aux losses: load balance (Switch) + router z-loss
+    density = jnp.mean(jax.nn.one_hot(sel[:, 0], e, dtype=jnp.float32), axis=0)
+    density_prob = jnp.mean(probs, axis=0)
+    lb_loss = e * jnp.sum(density * density_prob)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(router_logits, axis=-1)))
+
+    if capacity is None:
+        capacity = max(int(cfg.capacity_factor * t * k / e), 1)
+    c = capacity
+
+    # rank within expert ----------------------------------------------------
+    sel_flat = sel.reshape(-1)                                   # (T*k,)
+    onehot = jax.nn.one_hot(sel_flat, e, dtype=jnp.int32)        # (T*k, E)
+    ranks = jnp.cumsum(onehot, axis=0) - onehot
+    rank = jnp.sum(ranks * onehot, axis=-1)                      # (T*k,)
+    keep = rank < c
+    slot = jnp.where(keep, sel_flat * c + rank, e * c)           # overflow slot
+
+    # scatter token indices, gather tokens into expert buffers --------------
+    token_idx = jnp.arange(t * k, dtype=jnp.int32) // k
+    slot_token = jnp.zeros((e * c + 1,), jnp.int32).at[slot].set(token_idx + 1)
+    slot_token = slot_token[: e * c]
+    occupied = slot_token > 0
+    buf = jnp.where(occupied[:, None],
+                    jnp.take(xf, jnp.maximum(slot_token - 1, 0), axis=0),
+                    jnp.zeros((1, d), x.dtype))
+    buf = buf.reshape(e, c, d)
+    buf = logical_constraint(buf, "expert", None, None)
+
+    # expert swiglu ----------------------------------------------------------
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x.dtype))
+    out_buf = logical_constraint(out_buf, "expert", None, None)
+
+    # combine ----------------------------------------------------------------
+    flat_out = out_buf.reshape(e * c, d)
+    picked = jnp.take(flat_out, jnp.minimum(slot, e * c - 1), axis=0)  # (T*k, d)
+    picked = jnp.where(keep[:, None], picked, 0.0)
+    y = jnp.sum(picked.reshape(t, k, d) * gates[..., None].astype(x.dtype), axis=1)
+
+    if "shared" in p:
+        y = y + L.swiglu(p["shared"], xf)
+
+    aux = {"lb_loss": lb_loss, "z_loss": z_loss,
+           "dropped_frac": 1.0 - jnp.mean(keep.astype(jnp.float32))}
+    return y.reshape(b, s, d), aux

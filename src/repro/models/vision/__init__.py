@@ -1,0 +1,3 @@
+"""Vision family: ConvNeXt and EfficientNet classifiers."""
+from repro.models.vision.convnext import ConvNeXtConfig, init_convnext, apply_convnext  # noqa: F401
+from repro.models.vision.efficientnet import EffNetConfig, init_effnet, apply_effnet  # noqa: F401

@@ -1,0 +1,86 @@
+"""ConvNeXt (Liu et al., arXiv:2201.03545).
+
+Assigned config convnext-b: depths (3,3,27,3), dims (128,256,512,1024).
+Patchify stem (4×4 s4), blocks = 7×7 depthwise conv → LN → 4× pointwise
+MLP with GELU → layer-scale → residual; LN+2×2 s2 downsample between
+stages; global-average-pool head.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import layers as L
+
+
+class ConvNeXtConfig(NamedTuple):
+    depths: Sequence[int] = (3, 3, 27, 3)
+    dims: Sequence[int] = (128, 256, 512, 1024)
+    n_classes: int = 1000
+    layer_scale_init: float = 1e-6
+    remat: bool = False
+
+
+def _init_block(key, dim, cfg, param_dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "dwconv": L.init_conv(k1, dim, dim, 7, param_dtype=param_dtype,
+                              feature_group_count=dim),
+        "norm": L.init_layernorm(dim, param_dtype),
+        "pw1": L.init_dense(k2, dim, 4 * dim, use_bias=True, param_dtype=param_dtype),
+        "pw2": L.init_dense(k3, 4 * dim, dim, use_bias=True, param_dtype=param_dtype),
+        "gamma": jnp.full((dim,), cfg.layer_scale_init, param_dtype),
+    }
+
+
+def _block(p, x, dim):
+    h = L.conv(p["dwconv"], x, feature_group_count=dim)
+    h = L.layernorm(p["norm"], h)
+    h = L.dense(p["pw2"], jax.nn.gelu(L.dense(p["pw1"], h)))
+    return x + p["gamma"].astype(x.dtype) * h
+
+
+def init_convnext(key, cfg: ConvNeXtConfig, *, param_dtype=jnp.float32):
+    keys = iter(jax.random.split(key, 16))
+    p = {
+        "stem": L.init_conv(next(keys), 3, cfg.dims[0], 4, param_dtype=param_dtype),
+        "stem_norm": L.init_layernorm(cfg.dims[0], param_dtype),
+    }
+    for si, (depth, dim) in enumerate(zip(cfg.depths, cfg.dims)):
+        bkeys = jax.random.split(next(keys), depth)
+        p[f"stage{si}"] = jax.vmap(
+            lambda k: _init_block(k, dim, cfg, param_dtype))(bkeys)
+        if si < len(cfg.dims) - 1:
+            p[f"down{si}"] = {
+                "norm": L.init_layernorm(dim, param_dtype),
+                "conv": L.init_conv(next(keys), dim, cfg.dims[si + 1], 2,
+                                    param_dtype=param_dtype),
+            }
+    p["head_norm"] = L.init_layernorm(cfg.dims[-1], param_dtype)
+    p["head"] = L.init_dense(next(keys), cfg.dims[-1], cfg.n_classes,
+                             use_bias=True, param_dtype=param_dtype)
+    return p
+
+
+def apply_convnext(p, cfg: ConvNeXtConfig, x):
+    """x: (B, H, W, 3) -> logits (B, n_classes)."""
+    h = L.conv(p["stem"], x, stride=4, padding="VALID")
+    h = L.layernorm(p["stem_norm"], h)
+    for si, (depth, dim) in enumerate(zip(cfg.depths, cfg.dims)):
+
+        def body(hh, bp, dim=dim):
+            fn = _block
+            if cfg.remat:
+                fn = jax.checkpoint(fn, static_argnums=(2,))
+            return fn(bp, hh, dim), None
+
+        h, _ = jax.lax.scan(body, h, p[f"stage{si}"])
+        if si < len(cfg.dims) - 1:
+            d = p[f"down{si}"]
+            h = L.conv(d["conv"], L.layernorm(d["norm"], h), stride=2,
+                       padding="VALID")
+    h = jnp.mean(h, axis=(1, 2))
+    h = L.layernorm(p["head_norm"], h)
+    return L.dense(p["head"], h)

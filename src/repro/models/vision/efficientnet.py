@@ -1,0 +1,152 @@
+"""EfficientNet (Tan & Le, arXiv:1905.11946) with compound scaling.
+
+Assigned config efficientnet-b7: width_mult=2.0, depth_mult=3.1 applied to
+the B0 block table; MBConv blocks with expansion, depthwise conv,
+squeeze-and-excitation, swish activations.
+
+Normalisation note (DESIGN.md §8): canonical EfficientNet uses BatchNorm
+with running statistics; we normalise with *batch* statistics in both
+train and serve steps (the compute/roofline-relevant part is identical,
+and the framework stays purely functional).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import layers as L
+
+# B0 table: (expand_ratio, channels, repeats, stride, kernel)
+_B0_BLOCKS: Tuple[Tuple[int, int, int, int, int], ...] = (
+    (1, 16, 1, 1, 3),
+    (6, 24, 2, 2, 3),
+    (6, 40, 2, 2, 5),
+    (6, 80, 3, 2, 3),
+    (6, 112, 3, 1, 5),
+    (6, 192, 4, 2, 5),
+    (6, 320, 1, 1, 3),
+)
+
+
+class EffNetConfig(NamedTuple):
+    width_mult: float = 2.0
+    depth_mult: float = 3.1
+    n_classes: int = 1000
+    se_ratio: float = 0.25
+    stem_ch: int = 32
+    head_ch: int = 1280
+    remat: bool = False
+
+    def round_ch(self, ch: float) -> int:
+        ch *= self.width_mult
+        new = max(8, int(ch + 4) // 8 * 8)
+        if new < 0.9 * ch:
+            new += 8
+        return new
+
+    def round_repeats(self, r: int) -> int:
+        return int(math.ceil(self.depth_mult * r))
+
+    def blocks(self):
+        for expand, ch, rep, stride, kernel in _B0_BLOCKS:
+            yield expand, self.round_ch(ch), self.round_repeats(rep), stride, kernel
+
+
+def _init_bn(ch, param_dtype):
+    return {"scale": jnp.ones((ch,), param_dtype), "bias": jnp.zeros((ch,), param_dtype)}
+
+
+def _bn(p, x, *, eps=1e-3):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x32, axis=(0, 1, 2), keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+def _init_mbconv(key, in_ch, out_ch, expand, kernel, se_ratio, param_dtype):
+    ks = iter(jax.random.split(key, 8))
+    mid = in_ch * expand
+    p = {}
+    if expand != 1:
+        p["expand_conv"] = L.init_conv(next(ks), in_ch, mid, 1, use_bias=False,
+                                       param_dtype=param_dtype)
+        p["expand_bn"] = _init_bn(mid, param_dtype)
+    p["dw_conv"] = L.init_conv(next(ks), mid, mid, kernel, use_bias=False,
+                               param_dtype=param_dtype, feature_group_count=mid)
+    p["dw_bn"] = _init_bn(mid, param_dtype)
+    se_ch = max(1, int(in_ch * se_ratio))
+    p["se_reduce"] = L.init_conv(next(ks), mid, se_ch, 1, param_dtype=param_dtype)
+    p["se_expand"] = L.init_conv(next(ks), se_ch, mid, 1, param_dtype=param_dtype)
+    p["project_conv"] = L.init_conv(next(ks), mid, out_ch, 1, use_bias=False,
+                                    param_dtype=param_dtype)
+    p["project_bn"] = _init_bn(out_ch, param_dtype)
+    return p
+
+
+def _mbconv(p, x, *, stride, expand, kernel):
+    h = x
+    mid_groups = None
+    if expand != 1:
+        h = jax.nn.silu(_bn(p["expand_bn"], L.conv(p["expand_conv"], h)))
+    mid = h.shape[-1]
+    h = L.conv(p["dw_conv"], h, stride=stride, feature_group_count=mid)
+    h = jax.nn.silu(_bn(p["dw_bn"], h))
+    # squeeze & excitation
+    s = jnp.mean(h, axis=(1, 2), keepdims=True)
+    s = jax.nn.silu(L.conv(p["se_reduce"], s))
+    s = jax.nn.sigmoid(L.conv(p["se_expand"], s))
+    h = h * s
+    h = _bn(p["project_bn"], L.conv(p["project_conv"], h))
+    if stride == 1 and x.shape[-1] == h.shape[-1]:
+        h = h + x
+    del mid_groups
+    return h
+
+
+def init_effnet(key, cfg: EffNetConfig, *, param_dtype=jnp.float32):
+    keys = iter(jax.random.split(key, 128))
+    stem_ch = cfg.round_ch(cfg.stem_ch / cfg.width_mult * cfg.width_mult) \
+        if False else cfg.round_ch(cfg.stem_ch)
+    p = {
+        "stem_conv": L.init_conv(next(keys), 3, stem_ch, 3, use_bias=False,
+                                 param_dtype=param_dtype),
+        "stem_bn": _init_bn(stem_ch, param_dtype),
+    }
+    in_ch = stem_ch
+    for bi, (expand, out_ch, repeats, stride, kernel) in enumerate(cfg.blocks()):
+        for ri in range(repeats):
+            p[f"block{bi}_{ri}"] = _init_mbconv(
+                next(keys), in_ch, out_ch, expand, kernel, cfg.se_ratio,
+                param_dtype)
+            in_ch = out_ch
+    head_ch = cfg.round_ch(cfg.head_ch)
+    p["head_conv"] = L.init_conv(next(keys), in_ch, head_ch, 1, use_bias=False,
+                                 param_dtype=param_dtype)
+    p["head_bn"] = _init_bn(head_ch, param_dtype)
+    p["fc"] = L.init_dense(next(keys), head_ch, cfg.n_classes, use_bias=True,
+                           param_dtype=param_dtype)
+    return p
+
+
+def apply_effnet(p, cfg: EffNetConfig, x):
+    """x: (B, H, W, 3) -> logits (B, n_classes)."""
+    h = jax.nn.silu(_bn(p["stem_bn"], L.conv(p["stem_conv"], x, stride=2)))
+    for bi, (expand, out_ch, repeats, stride, kernel) in enumerate(cfg.blocks()):
+        for ri in range(repeats):
+            s = stride if ri == 0 else 1
+            fn = _mbconv
+            if cfg.remat:
+                fn = jax.checkpoint(
+                    lambda pp, hh, s=s, expand=expand, kernel=kernel:
+                    _mbconv(pp, hh, stride=s, expand=expand, kernel=kernel))
+                h = fn(p[f"block{bi}_{ri}"], h)
+                continue
+            h = fn(p[f"block{bi}_{ri}"], h, stride=s, expand=expand, kernel=kernel)
+    h = jax.nn.silu(_bn(p["head_bn"], L.conv(p["head_conv"], h)))
+    h = jnp.mean(h, axis=(1, 2))
+    return L.dense(p["fc"], h)

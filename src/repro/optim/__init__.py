@@ -1,0 +1,4 @@
+"""Optimizer stack: AdamW, LR schedules, grad clipping, int8 compression."""
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from repro.optim.schedule import cosine_schedule, linear_warmup  # noqa: F401
+from repro.optim.compression import compress_grads, decompress_grads, CompressionState  # noqa: F401

@@ -1,0 +1,92 @@
+"""Functional AdamW with decoupled weight decay and global-norm clipping.
+
+Moments are stored in fp32 regardless of the (possibly bf16) param dtype;
+under the dry-run partitioning the moments inherit the parameter sharding
+plus optional ZeRO-style sharding of the moments over the data axis
+(see runtime/partition.py — "zero" rules).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    m: PyTree
+    v: PyTree
+    count: jax.Array
+
+
+def adamw_init(params: PyTree) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+    return AdamWState(
+        m=jax.tree_util.tree_map(zeros, params),
+        v=jax.tree_util.tree_map(zeros, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(grads: PyTree, state: AdamWState, params: PyTree,
+                 cfg: AdamWConfig, *, lr_scale: jax.Array | float = 1.0,
+                 ) -> Tuple[PyTree, AdamWState, dict]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    count = state.count + 1
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        step = (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        if p.ndim >= 2:  # decay matrices only (norms/bias exempt)
+            step = step + cfg.weight_decay * p32
+        return (p32 - lr * step).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    # Serialize large-leaf updates (optimization_barrier chain) so the
+    # scheduler reuses one leaf's fp32 temps instead of keeping every
+    # leaf's chain live simultaneously — Σ-leaves vs max-leaf peak memory
+    # on the multi-billion-parameter archs.
+    out = []
+    token = None
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        if token is not None and p.size > (1 << 20):
+            # value-level no-op dependency (see adafactor.py): serializes
+            # large-leaf update chains so their fp32 temps are reused.
+            zero = jnp.minimum(jnp.abs(token[(0,) * token.ndim]), 0).astype(g.dtype)
+            g = g + zero
+        o = upd(g, m, v, p)
+        out.append(o)
+        if p.size > (1 << 20):
+            token = o[0]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(new_m, new_v, count), metrics

@@ -1,0 +1,64 @@
+"""Int8 gradient compression with error feedback.
+
+Used on the cross-pod data-parallel reduction path (pod-to-pod DCI links
+are the scarce bandwidth at 512+ chips): gradients are quantised to int8
+with a per-tensor scale before the pod-level reduction and dequantised
+after; the quantisation residual is carried into the next step (error
+feedback), which keeps SGD/Adam convergence unbiased in expectation.
+
+In the pjit training steps the cross-pod reduction is implicit (GSPMD
+inserts it), so this module is the OPT-IN building block for a
+shard_map-based DP synchronisation path at deploy time rather than a
+default: quantise -> reduce the (payload, scale) pair over the ``pod``
+axis -> dequantise, carrying the residual. Its convergence contract
+(bounded one-shot error, mean-converging under error feedback) is
+property-tested in tests/test_optim.py.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class CompressionState(NamedTuple):
+    error: PyTree  # residual carried to the next step
+
+
+def compression_init(grads: PyTree) -> CompressionState:
+    return CompressionState(
+        error=jax.tree_util.tree_map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                                     grads))
+
+
+def compress_grads(grads: PyTree, state: CompressionState,
+                   ) -> Tuple[PyTree, PyTree, CompressionState]:
+    """Returns (int8 payload, scales, new_state).  payload+scales are what
+    crosses the wire; caller dequantises with decompress_grads."""
+
+    def comp(g, e):
+        g32 = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        err = g32 - q.astype(jnp.float32) * scale
+        return q, scale, err
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(state.error)
+    out = [comp(g, e) for g, e in zip(flat_g, flat_e)]
+    q = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    s = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    err = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return q, s, CompressionState(error=err)
+
+
+def decompress_grads(payload: PyTree, scales: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda q, s: q.astype(jnp.float32) * s, payload, scales)
+
+
+def compressed_bytes(payload: PyTree) -> int:
+    return sum(l.size for l in jax.tree_util.tree_leaves(payload))

@@ -1,0 +1,2 @@
+"""Distributed runtime: logical-axis partitioning, step builders, training
+loop with fault tolerance, elastic resharding, and the serving engine."""

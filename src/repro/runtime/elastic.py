@@ -1,0 +1,101 @@
+"""Elastic re-meshing: restore a checkpoint onto a *different* mesh.
+
+A 512-chip multi-pod run that loses a pod restarts on 256 chips (or vice
+versa after repair).  The checkpoint manifest records every array's global
+shape + PartitionSpec string; ``reshard_checkpoint`` reads the global
+arrays and lays them out on the new mesh with the same *logical* specs —
+axis names that don't exist on the new mesh (e.g. ``pod``) degrade to
+replication, everything else re-sharding automatically via device_put.
+
+Single-process note: arrays are stored whole, so resharding is a pure
+layout operation here.  On a real cluster each host reads only the shard
+ranges it owns — the manifest already carries what's needed to compute
+them (global shape + spec), which is why specs are persisted at save time.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+
+
+def parse_spec(text: str, mesh: Mesh) -> P:
+    """Parse "PartitionSpec('data', None, ('pod','data'))" back to a spec,
+    dropping axis names the target mesh doesn't have."""
+    if not text or not text.startswith("PartitionSpec"):
+        return P()
+    body = text[len("PartitionSpec"):]
+    try:
+        parts = ast.literal_eval(body)
+    except (ValueError, SyntaxError):
+        return P()
+    if not isinstance(parts, tuple):
+        parts = (parts,)
+    out = []
+    names = set(mesh.axis_names)
+    for p in parts:
+        if p is None:
+            out.append(None)
+        elif isinstance(p, str):
+            out.append(p if p in names else None)
+        elif isinstance(p, (tuple, list)):
+            kept = tuple(a for a in p if a in names)
+            out.append(kept if kept else None)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def reshard_checkpoint(manager, template: PyTree, mesh: Mesh, *,
+                       step: Optional[int] = None,
+                       specs: Optional[PyTree] = None) -> tuple:
+    """Restore ``template``-shaped state onto ``mesh``.
+
+    ``specs`` (a PartitionSpec pytree) overrides the manifest's stored
+    specs — pass the new mesh's partitioning when the parallelism layout
+    changes (e.g. model axis 16 → 8), not just the device count.
+    """
+    state, extra = manager.restore(template, step=step)
+    if step is None:
+        step = manager.latest_step()
+    manifest = manager.manifest(step)
+    spec_by_name: Dict[str, str] = {
+        k: v.get("spec", "") for k, v in manifest["arrays"].items()}
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+    spec_leaves = (jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P)) if specs is not None
+        else None)
+
+    out = []
+    for i, (path, leaf) in enumerate(flat):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx",
+                        getattr(p, "name", p)))) for p in path)
+        if spec_leaves is not None:
+            spec = spec_leaves[i]
+        else:
+            spec = parse_spec(spec_by_name.get(name, ""), mesh)
+        # drop spec axes that no longer divide (elastic shrink safety)
+        spec = _fit_spec(spec, np.shape(leaf), mesh)
+        out.append(jax.device_put(leaf, NamedSharding(mesh, spec)))
+    return jax.tree_util.tree_unflatten(treedef, out), extra
+
+
+def _fit_spec(spec: P, shape, mesh: Mesh) -> P:
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    fitted = []
+    for dim, p in zip(shape, parts):
+        if p is None:
+            fitted.append(None)
+            continue
+        axes = p if isinstance(p, tuple) else (p,)
+        n = int(np.prod([mesh.shape[a] for a in axes]))
+        fitted.append(p if dim % n == 0 else None)
+    return P(*fitted)

@@ -1,0 +1,243 @@
+"""Parameter / input partitioning rules per model family.
+
+Rules are (path-regex → PartitionSpec-for-the-layer-local-shape); stacked
+layer parameters (leading scan dim from the grouped trunks) automatically
+get a ``None`` prepended.  The optimizer moments inherit the parameter
+spec, optionally ZeRO-extended over the data axis (largest divisible
+unsharded dim).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+Rule = Tuple[str, P]
+
+
+# ---------------------------------------------------------------------------
+# rule tables
+# ---------------------------------------------------------------------------
+
+LM_RULES: List[Rule] = [
+    (r"embed$", P("model", None)),                      # vocab-sharded
+    (r"unembed/w$", P(None, "model")),
+    (r"attn/w[qkv]/w$", P(None, "model")),              # head TP
+    (r"attn/w[qkv]/b$", P("model")),
+    (r"attn/wo/w$", P("model", None)),
+    (r"ffn/(gate|up)/w$", P(None, "model")),            # MLP TP
+    (r"ffn/down/w$", P("model", None)),
+    (r"moe/router/w$", P(None, None)),
+    (r"moe/w_(gate|up)$", P("model", None, None)),      # EP: experts on model
+    (r"moe/w_down$", P("model", None, None)),
+    (r"moe/shared/(gate|up)/w$", P(None, "model")),
+    (r"moe/shared/down/w$", P("model", None)),
+]
+
+DIT_RULES: List[Rule] = [
+    (r"patch_embed/w$", P(None, "model")),
+    (r"qkv/w$", P(None, "model")),
+    (r"proj/w$", P("model", None)),
+    (r"mlp/fc1/w$", P(None, "model")),
+    (r"mlp/fc2/w$", P("model", None)),
+    (r"ada/w$", P(None, "model")),
+    (r"final_proj/w$", P("model", None)),
+]
+
+MMDIT_RULES: List[Rule] = [
+    (r"(img|txt)_in/w$", P(None, "model")),
+    (r"qkv/w$", P(None, "model")),
+    (r"proj/w$", P("model", None)),
+    (r"mlp/fc1/w$", P(None, "model")),
+    (r"mlp/fc2/w$", P("model", None)),
+    (r"mod/w$", P(None, "model")),
+    (r"linear1/w$", P(None, "model")),
+    (r"linear2/w$", P("model", None)),
+    (r"final_proj/w$", P("model", None)),
+]
+
+UNET_RULES: List[Rule] = [
+    (r"(conv1|conv2|skip|down|up|expand_conv|project_conv)/w$",
+     P(None, None, None, "model")),                     # out-channel TP
+    (r"temb/w$", P(None, "model")),
+    (r"(self_qkv|cross_q|cross_kv|geglu)/w$", P(None, "model")),
+    (r"(self_out|cross_out|ff_out)/w$", P("model", None)),
+    (r"(proj_in|proj_out)/w$", P(None, None, None, "model")),
+    (r"conv_(in|out)/w$", P(None, None, None, None)),
+]
+
+VAE_RULES: List[Rule] = [
+    (r"(conv1|conv2|skip|down|up|stem|from_z|to_img|to_moments)/w$",
+     P(None, None, None, "model")),
+]
+
+VISION_RULES: List[Rule] = []  # replicate — small models, DP handles scale
+
+
+# ---------------------------------------------------------------------------
+# application
+# ---------------------------------------------------------------------------
+
+
+def spec_for(path: str, shape: Sequence[int], rules: List[Rule],
+             *, stacked_prefix: bool = True) -> P:
+    for pattern, spec in rules:
+        if re.search(pattern, path):
+            base = tuple(spec)
+            if stacked_prefix and len(shape) == len(base) + 1:
+                base = (None,) + base        # leading scan-stack dim
+            elif len(shape) != len(base):
+                continue                      # rank mismatch → keep looking
+            return P(*base)
+    return P(*([None] * len(shape)))
+
+
+def tree_specs(tree: PyTree, rules: List[Rule]) -> PyTree:
+    """PartitionSpec pytree matching ``tree`` (works on ShapeDtypeStructs)."""
+
+    def visit(path, leaf):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        return spec_for(name, leaf.shape, rules)
+
+    return jax.tree_util.tree_map_with_path(visit, tree)
+
+
+def sanitize_specs(specs: PyTree, tree: PyTree, mesh_shape) -> PyTree:
+    """Drop spec axes that do not divide the corresponding dim (e.g. the
+    VAE's 3-channel output conv under a 16-way model axis)."""
+    ms = mesh_shape if isinstance(mesh_shape, dict) else dict(mesh_shape.shape)
+
+    def sizes(ax):
+        return int(np.prod([ms.get(a, 1) for a in
+                            (ax if isinstance(ax, tuple) else (ax,))]))
+
+    def fit(spec, leaf):
+        parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        return P(*[p if (p is not None and dim % sizes(p) == 0) else None
+                   for dim, p in zip(leaf.shape, parts)])
+
+    return jax.tree_util.tree_map(
+        fit, specs, tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def tree_shardings(tree_of_specs: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                                  tree_of_specs,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def zero_extend_spec(spec: P, shape: Sequence[int], mesh: Mesh,
+                     axis: str = "data") -> P:
+    """ZeRO: additionally shard the optimizer moment over the data axis on
+    the largest dim that is unsharded and divisible.  No-op when the spec
+    already uses the axis (FSDP'd params — a mesh axis may appear at most
+    once per spec)."""
+    if axis not in mesh.axis_names:
+        return spec
+    for part in spec:
+        axes = part if isinstance(part, tuple) else (part,)
+        if axis in axes:
+            return spec
+    n = mesh.shape[axis]
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    best, best_size = -1, 0
+    for i, (p, s) in enumerate(zip(parts, shape)):
+        if p is None and s % n == 0 and s > best_size:
+            best, best_size = i, s
+    if best < 0:
+        return spec
+    parts[best] = axis
+    return P(*parts)
+
+
+def zero_specs(param_specs: PyTree, params: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda spec, p: zero_extend_spec(spec, p.shape, mesh),
+        param_specs, params, is_leaf=lambda x: isinstance(x, P))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        for attr in ("key", "idx", "name"):
+            if hasattr(p, attr):
+                parts.append(str(getattr(p, attr)))
+                break
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def derive_state_specs(state_sds: PyTree, param_specs: PyTree,
+                       params_sds: PyTree, *, mesh: Optional[Mesh] = None,
+                       zero: bool = False) -> PyTree:
+    """PartitionSpecs for an optimizer/train state pytree.
+
+    Every optimizer moment inherits its parameter's spec by name matching:
+    a state leaf whose path ends with a parameter path gets that parameter's
+    spec; a trailing ``row``/``col`` component (Adafactor's factored second
+    moment) drops the corresponding trailing spec axis.  Scalars and
+    unmatched leaves are replicated.  With ``zero=True`` full-shape moments
+    are additionally sharded over the data axis (ZeRO)."""
+    by_name = {}
+    pflat, _ = jax.tree_util.tree_flatten_with_path(params_sds)
+    sflat = jax.tree_util.tree_leaves(param_specs,
+                                      is_leaf=lambda x: isinstance(x, P))
+    for (path, leaf), spec in zip(pflat, sflat):
+        by_name[_path_str(path)] = (spec, tuple(leaf.shape))
+
+    def visit(path, leaf):
+        parts = _path_str(path).split("/")
+        shape = tuple(getattr(leaf, "shape", ()))
+        for i in range(len(parts)):
+            cand = "/".join(parts[i:])
+            if cand in by_name:
+                spec, pshape = by_name[cand]
+                if shape == pshape:
+                    if zero and mesh is not None:
+                        return zero_extend_spec(spec, shape, mesh)
+                    return spec
+            if parts[-1] in ("row", "col"):
+                base = "/".join(parts[i:-1])
+                if base in by_name:
+                    spec, pshape = by_name[base]
+                    full = list(spec) + [None] * (len(pshape) - len(spec))
+                    if parts[-1] == "row" and shape == pshape[:-1]:
+                        return P(*full[:-1])
+                    if parts[-1] == "col" and shape == pshape[:-2] + pshape[-1:]:
+                        return P(*(full[:-2] + full[-1:]))
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(visit, state_sds)
+
+
+def fsdp_specs(param_specs: PyTree, params_sds: PyTree, mesh: Mesh) -> PyTree:
+    """FSDP: additionally shard every parameter over the data axis (largest
+    unsharded divisible dim) — required for the 400B-class archs whose
+    model-axis-only shards exceed one chip's HBM."""
+    return jax.tree_util.tree_map(
+        lambda spec, p: zero_extend_spec(spec, p.shape, mesh),
+        param_specs, params_sds, is_leaf=lambda x: isinstance(x, P))
+
+
+def count_sharded_bytes(tree: PyTree, specs: PyTree, mesh: Mesh) -> int:
+    """Per-device bytes of a sharded pytree (for memory budgeting)."""
+    total = 0
+    for leaf, spec in zip(jax.tree_util.tree_leaves(tree),
+                          jax.tree_util.tree_leaves(
+                              specs, is_leaf=lambda x: isinstance(x, P))):
+        size = np.prod(leaf.shape) * jax.numpy.dtype(leaf.dtype).itemsize
+        denom = 1
+        for ax in spec:
+            if ax is None:
+                continue
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                denom *= mesh.shape[a]
+        total += int(size / denom)
+    return total

@@ -1,0 +1,102 @@
+"""Logical-axis partitioning (MaxText-style logical→mesh axis rules).
+
+Models annotate intermediates with *logical* axis names
+(``logical_constraint(x, "batch", "seq", "model")``); the runtime installs a
+mapping from logical names to mesh axes before lowering.  Outside a rules
+context the annotations are no-ops, so the same model code runs unsharded
+on CPU tests and fully partitioned in the dry-run.
+
+Rules map a logical name to a mesh axis, a tuple of mesh axes, or None
+(replicated).  ``None`` logical names are always replicated.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Axis = Union[str, Tuple[str, ...], None]
+
+_state = threading.local()
+
+
+def current_rules() -> Optional[Dict[str, Axis]]:
+    return getattr(_state, "rules", None)
+
+
+@contextmanager
+def logical_rules(rules: Dict[str, Axis]):
+    prev = current_rules()
+    _state.rules = dict(rules)
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def resolve_spec(*names: Optional[str]) -> P:
+    """Map logical names to a PartitionSpec under the current rules."""
+    rules = current_rules() or {}
+    return P(*[rules.get(n) if n is not None else None for n in names])
+
+
+def logical_constraint(x, *names: Optional[str]):
+    """with_sharding_constraint if rules are installed; identity otherwise."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = resolve_spec(*names)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def maybe_constraint(x, spec):
+    """Raw-PartitionSpec constraint, applied only when a rules context is
+    installed (i.e. during distributed lowering; identity in CPU tests)."""
+    if current_rules() is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# Default rule sets --------------------------------------------------------
+
+def train_rules(multi_pod: bool) -> Dict[str, Axis]:
+    data = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "batch": data,          # batch / token-parallel
+        "seq": None,            # sequence kept whole in training
+        "model": "model",       # TP: heads / ffn hidden / vocab
+        "expert": "model",      # EP shares the model axis
+        "kv_seq": None,
+    }
+
+
+def decode_rules(multi_pod: bool, *, shard_kv: Optional[str] = None,
+                 ) -> Dict[str, Axis]:
+    """``shard_kv``:
+      * None         — cache replicated along seq, batch over data (small S)
+      * "model"      — cache seq over the model axis (decode_32k: batch is
+                       large enough for the data axis, heads too few to TP)
+      * "data_model" — cache seq over data+model (long_500k, batch=1): the
+                       attention softmax reduction lowers to an all-reduce —
+                       SPMD-derived flash-decoding.
+    """
+    data = ("pod", "data") if multi_pod else ("data",)
+    if shard_kv == "data_model":
+        kv: Axis = tuple(data) + ("model",)
+        batch: Axis = None
+    elif shard_kv == "model":
+        kv = "model"
+        batch = data
+    else:
+        kv = None
+        batch = data
+    return {
+        "batch": batch,
+        "seq": None,
+        "model": "model",
+        "expert": "model",
+        "kv_seq": kv,
+    }

@@ -1,0 +1,640 @@
+"""Step builders: one compiled program per (architecture × shape) cell.
+
+``build_cell_program(arch, cell)`` returns a :class:`CellProgram` whose
+``step_fn`` + ShapeDtypeStruct args + PartitionSpec trees are exactly what
+the multi-pod dry-run lowers::
+
+    with mesh, logical_rules(prog.rules):
+        jax.jit(prog.step_fn,
+                in_shardings=shardings(prog.in_specs),
+                donate_argnums=prog.donate).lower(*prog.args_sds).compile()
+
+The same ``step_fn`` executes eagerly on CPU for the reduced-config smoke
+tests (``build_cell_program(..., reduced=True)`` + ``init_state``).
+
+Cell kinds
+----------
+* ``train``   — forward + backward + optimizer update (+ microbatch
+                gradient accumulation via ``lax.scan`` when the cell says so)
+* ``prefill`` — LM full-sequence forward returning bf16 KV caches
+* ``decode``  — LM single-token serve step against a seq_len KV cache
+* ``gen``     — diffusion serve step: ONE denoising step of the sampler
+                (DDIM for eps-models, Euler for rectified flow).  The
+                sampler multiplies by ``cell.steps``; CacheGenius's routing
+                changes that multiplier (N → K → 0) on this same program.
+* ``infer``   — vision forward pass
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import ArchSpec
+from repro.configs.shapes import ShapeCell
+from repro.models.diffusion import dit as dit_mod
+from repro.models.diffusion import mmdit as mmdit_mod
+from repro.models.diffusion import unet as unet_mod
+from repro.models.diffusion import vae as vae_mod
+from repro.models.diffusion.sampler import ddim_step, ddpm_loss, rf_loss
+from repro.models.diffusion.schedule import DiffusionSchedule
+from repro.models.transformer import lm as lm_mod
+from repro.models.vision import convnext as cnx_mod
+from repro.models.vision import efficientnet as eff_mod
+from repro.optim.adafactor import (AdafactorConfig, adafactor_init,
+                                   adafactor_update)
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.runtime import partition
+from repro.runtime.pspec import decode_rules, maybe_constraint, train_rules
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# program container
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CellProgram:
+    arch: ArchSpec
+    cell: ShapeCell
+    step_fn: Callable
+    args_sds: Tuple[PyTree, ...]
+    in_specs: Tuple[PyTree, ...]
+    rules: Dict[str, Any]
+    donate: Tuple[int, ...] = ()
+    out_specs: Any = None            # None → infer
+    init_fn: Optional[Callable] = None   # key -> state (materialised)
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+
+# functional train state as a plain dict keeps checkpoint paths stable
+def _train_state_sds(params_sds, opt_init):
+    opt_sds = jax.eval_shape(opt_init, params_sds)
+    return {"params": params_sds, "opt": opt_sds,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def _optimizer(name: str):
+    if name == "adafactor":
+        cfg = AdafactorConfig(lr=1e-2)
+        return (lambda p: adafactor_init(p, cfg),
+                lambda g, s, p: adafactor_update(g, s, p, cfg))
+    cfg = AdamWConfig(lr=3e-4)
+    return (lambda p: adamw_init(p),
+            lambda g, s, p: adamw_update(g, s, p, cfg))
+
+
+def _dtype_of(arch: ArchSpec, options: Optional[Dict[str, Any]] = None):
+    if options and options.get("bf16_params"):
+        return jnp.bfloat16
+    return jnp.bfloat16 if arch.param_dtype == "bfloat16" else jnp.float32
+
+
+def _data_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def _data_size(mesh_shape: Dict[str, int], multi_pod: bool) -> int:
+    n = mesh_shape.get("data", 1)
+    if multi_pod:
+        n *= mesh_shape.get("pod", 1)
+    return n
+
+
+def _batch_spec(batch: int, dsize: int, multi_pod: bool,
+                mesh_shape: Dict[str, int], *, res: int = 0,
+                shard_spatial: bool = False, tail: int = 1):
+    """Spec for a (B, [res, res,] …) input: shard the batch over the data
+    axes when divisible; otherwise shard the first spatial dim; otherwise
+    split batch over 'data' and spatial over 'pod' (gen_fast multi-pod)."""
+    data = _data_axes(multi_pod)
+    none_tail = (None,) * tail
+    if not shard_spatial and batch % dsize == 0:
+        return P(data, *none_tail)
+    if res:
+        if batch % mesh_shape.get("data", 1) == 0 and multi_pod \
+                and res % mesh_shape.get("pod", 1) == 0 and not shard_spatial:
+            return P(("data",), ("pod",), *none_tail[1:])
+        if res % dsize == 0:
+            return P(None, data, *none_tail[1:])
+        if res % mesh_shape.get("data", 1) == 0:
+            return P(None, ("data",), *none_tail[1:])
+    return P(*((None,) + none_tail))
+
+
+# ---------------------------------------------------------------------------
+# microbatched grad accumulation
+# ---------------------------------------------------------------------------
+
+
+def _accumulate_grads(loss_fn, params, batches, n_micro: int,
+                      acc_dtype=jnp.float32):
+    """loss_fn(params, micro_batch) -> (loss, aux). ``batches`` is a pytree
+    whose leaves have a leading (n_micro, …) axis.  Returns (grads, loss,
+    aux) averaged over microbatches.  ``acc_dtype``: the 400B-class bf16
+    archs accumulate in bf16 — an fp32 accumulator alone costs 6.25 GB per
+    v5e chip at 400B/256."""
+    vg = jax.value_and_grad(loss_fn, has_aux=True)
+
+    if n_micro == 1:
+        mb = jax.tree_util.tree_map(lambda x: x[0], batches)
+        (loss, aux), grads = vg(params, mb)
+        return grads, loss, aux
+
+    def body(carry, mb):
+        acc, loss_sum = carry
+        (loss, _aux), g = vg(params, mb)
+        acc = jax.tree_util.tree_map(
+            lambda a, gg: a + gg.astype(a.dtype), acc, g)
+        return (acc, loss_sum + loss), None
+
+    acc0 = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, acc_dtype), params)
+    (grads, loss_sum), _ = jax.lax.scan(body, (acc0, 0.0), batches)
+    grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+    return grads, loss_sum / n_micro, {}
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+
+def _lm_programs(arch: ArchSpec, cell: ShapeCell, cfg, *, multi_pod: bool,
+                 mesh_shape: Dict[str, int], reduced: bool,
+                 options: Optional[Dict[str, Any]] = None) -> CellProgram:
+    options = options or {}
+    dt = jnp.float32 if reduced else _dtype_of(arch, options)
+    dsize = _data_size(mesh_shape, multi_pod)
+    data = _data_axes(multi_pod)
+    opt_init, opt_update = _optimizer(arch.optimizer)
+
+    params_sds = jax.eval_shape(
+        lambda k: lm_mod.init_lm(k, cfg, param_dtype=dt),
+        jax.random.key(0))
+    p_specs = partition.sanitize_specs(
+        partition.tree_specs(params_sds, partition.LM_RULES),
+        params_sds, mesh_shape)
+
+    if cell.kind == "train":
+        rules = train_rules(multi_pod)
+        if options.get("shard_heads"):
+            rules["heads"] = "model"
+        b, s = cell.global_batch, cell.seq_len
+        want_micro = arch.train_microbatches or cell.microbatches
+        n_micro = max(1, min(want_micro, b // max(dsize, 1)))
+        while b % n_micro or (b // n_micro) % dsize:
+            n_micro -= 1
+        mb = b // n_micro
+        acc_dtype = dt if dt == jnp.bfloat16 else jnp.float32
+        vocab_chunks = options.get("vocab_chunks", 1)
+
+        def loss_fn(p, mbatch):
+            return lm_mod.lm_loss(p, cfg, mbatch["tokens"], mbatch["labels"],
+                                  vocab_chunks=vocab_chunks)
+
+        def step_fn(state, batch):
+            toks = batch["tokens"]
+            micro = {
+                "tokens": maybe_constraint(
+                    toks[:, :-1].reshape(n_micro, mb, s), P(None, data, None)),
+                "labels": maybe_constraint(
+                    toks[:, 1:].reshape(n_micro, mb, s), P(None, data, None)),
+            }
+            grads, loss, _ = _accumulate_grads(loss_fn, state["params"],
+                                               micro, n_micro,
+                                               acc_dtype=acc_dtype)
+            params, opt, metrics = opt_update(grads, state["opt"],
+                                              state["params"])
+            new_state = {"params": params, "opt": opt,
+                         "step": state["step"] + 1}
+            return new_state, {"loss": loss, **metrics}
+
+        state_sds = _train_state_sds(params_sds, opt_init)
+        if arch.fsdp_params and not reduced:
+            p_specs_eff = partition.fsdp_specs(
+                p_specs, params_sds, _MeshShim(mesh_shape))
+        else:
+            p_specs_eff = p_specs
+        state_specs = {
+            "params": p_specs_eff,
+            "opt": partition.derive_state_specs(
+                state_sds["opt"], p_specs_eff, params_sds,
+                mesh=_MeshShim(mesh_shape), zero=not reduced),
+            "step": P(),
+        }
+        batch_sds = {"tokens": jax.ShapeDtypeStruct((b, s + 1), jnp.int32)}
+        batch_specs = {"tokens": P(data, None)}
+
+        def init_fn(key):
+            params = lm_mod.init_lm(key, cfg, param_dtype=dt)
+            return {"params": params, "opt": opt_init(params),
+                    "step": jnp.zeros((), jnp.int32)}
+
+        return CellProgram(arch, cell, step_fn, (state_sds, batch_sds),
+                           (state_specs, batch_specs), rules, donate=(0,),
+                           init_fn=init_fn,
+                           meta={"tokens": b * s, "n_micro": n_micro})
+
+    if cell.kind == "prefill":
+        rules = train_rules(multi_pod)
+        b, s = cell.global_batch, cell.seq_len
+
+        def step_fn(params, tokens):
+            logits, caches, _aux = lm_mod.apply_lm(params, cfg, tokens,
+                                                   return_kv=True)
+            caches = jax.tree_util.tree_map(
+                lambda x: x.astype(jnp.bfloat16), caches)
+            return logits[:, -1:], caches
+
+        tokens_sds = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        cache_spec = P(None, data, "model", None, None)
+        n_pat = len(cfg.pattern)
+        out_specs = (P(data, None, "model"),
+                     {pi: (cache_spec, cache_spec) for pi in range(n_pat)})
+        return CellProgram(arch, cell, step_fn, (params_sds, tokens_sds),
+                           (p_specs, P(data, None)), rules,
+                           out_specs=out_specs,
+                           init_fn=lambda k: lm_mod.init_lm(k, cfg, param_dtype=dt),
+                           meta={"tokens": b * s})
+
+    # decode ---------------------------------------------------------------
+    rules = decode_rules(multi_pod, shard_kv=cell.shard_kv)
+    b, s = cell.global_batch, cell.seq_len
+    batch_rule = rules["batch"]
+    kv_rule = rules["kv_seq"]
+
+    def step_fn(params, token, caches, cache_len):
+        return lm_mod.apply_lm_decode(params, cfg, token, caches, cache_len)
+
+    caches_sds = jax.eval_shape(
+        partial(lm_mod.init_kv_cache, cfg, b, s, jnp.bfloat16))
+    cache_spec = P(None, batch_rule, kv_rule, None, None)
+    caches_specs = jax.tree_util.tree_map(
+        lambda _: cache_spec, caches_sds,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    token_sds = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    len_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    out_specs = (P(batch_rule, None, "model"), caches_specs)
+
+    return CellProgram(
+        arch, cell, step_fn,
+        (params_sds, token_sds, caches_sds, len_sds),
+        (p_specs, P(batch_rule, None), caches_specs, P()),
+        rules, donate=(2,), out_specs=out_specs,
+        init_fn=lambda k: lm_mod.init_lm(k, cfg, param_dtype=dt),
+        meta={"tokens": b, "kv_len": s})
+
+
+# ---------------------------------------------------------------------------
+# diffusion family
+# ---------------------------------------------------------------------------
+
+
+def _diffusion_apply(dcfg):
+    if dcfg.backbone == "dit":
+        return dit_mod.init_dit, dit_mod.apply_dit, "eps"
+    if dcfg.backbone == "unet":
+        return unet_mod.init_unet, unet_mod.apply_unet, "eps"
+    if dcfg.backbone == "mmdit":
+        return mmdit_mod.init_mmdit, mmdit_mod.apply_mmdit, "v"
+    raise ValueError(dcfg.backbone)
+
+
+def _diffusion_rules_table(backbone: str):
+    return {"dit": partition.DIT_RULES, "unet": partition.UNET_RULES,
+            "mmdit": partition.MMDIT_RULES}[backbone]
+
+
+def _ctx_sds(dcfg, batch: int, dtype):
+    if dcfg.backbone == "dit":
+        return jax.ShapeDtypeStruct((batch, dcfg.net.ctx_dim), dtype)
+    if dcfg.backbone == "unet":
+        return jax.ShapeDtypeStruct((batch, dcfg.ctx_len, dcfg.ctx_dim), dtype)
+    return {"txt": jax.ShapeDtypeStruct((batch, dcfg.net.txt_len,
+                                         dcfg.net.txt_dim), dtype),
+            "vec": jax.ShapeDtypeStruct((batch, dcfg.net.vec_dim), dtype)}
+
+
+def _ctx_specs(dcfg, bspec_first):
+    if dcfg.backbone == "dit":
+        return P(bspec_first, None)
+    if dcfg.backbone == "unet":
+        return P(bspec_first, None, None)
+    return {"txt": P(bspec_first, None, None), "vec": P(bspec_first, None)}
+
+
+def _diffusion_programs(arch: ArchSpec, cell: ShapeCell, dcfg, *,
+                        multi_pod: bool, mesh_shape: Dict[str, int],
+                        reduced: bool,
+                        options: Optional[Dict[str, Any]] = None
+                        ) -> CellProgram:
+    options = options or {}
+    dt = jnp.float32 if reduced else _dtype_of(arch, options)
+    dsize = _data_size(mesh_shape, multi_pod)
+    data = _data_axes(multi_pod)
+    opt_init, opt_update = _optimizer(arch.optimizer)
+    init_net, apply_net, pred = _diffusion_apply(dcfg)
+    rules = train_rules(multi_pod)
+    sched = DiffusionSchedule.linear(1000)
+    if dcfg.backbone == "unet":
+        latent = 8 if reduced else (cell.img_res or 256) // dcfg.vae.downsample
+    else:
+        latent = dcfg.net.img_res
+    res = latent * dcfg.vae.downsample
+
+    net_sds = jax.eval_shape(
+        lambda k: init_net(k, dcfg.net, param_dtype=dt), jax.random.key(0))
+    vae_sds = jax.eval_shape(
+        lambda k: vae_mod.init_vae(k, dcfg.vae, param_dtype=dt),
+        jax.random.key(0))
+    net_specs = partition.sanitize_specs(
+        partition.tree_specs(net_sds, _diffusion_rules_table(dcfg.backbone)),
+        net_sds, mesh_shape)
+    vae_specs = partition.sanitize_specs(
+        partition.tree_specs(vae_sds, partition.VAE_RULES),
+        vae_sds, mesh_shape)
+    if options.get("dp_only"):
+        # §Perf variant: replicate params, shard the batch over BOTH mesh
+        # axes — for sub-1B models the per-conv TP collectives cost more
+        # than one gradient all-reduce.
+        repl = lambda t: jax.tree_util.tree_map(  # noqa: E731
+            lambda l: P(*([None] * len(l.shape))), t,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        net_specs, vae_specs = repl(net_sds), repl(vae_sds)
+
+    if cell.kind == "train":
+        b = cell.global_batch
+        n_micro = max(1, min(cell.microbatches, b // max(dsize, 1)))
+        while b % n_micro or (b // n_micro) % dsize:
+            n_micro -= 1
+        if options.get("dp_only"):
+            n_micro = 1
+        mb = b // n_micro
+        if options.get("dp_only"):
+            both = tuple(a for a in ("pod", "data", "model")
+                         if a in mesh_shape)
+            img_spec = P(both, None, None, None)
+        else:
+            img_spec = _batch_spec(mb, dsize, multi_pod, mesh_shape,
+                                   res=res, tail=3)
+
+        def loss_fn(vae_p, net_p, mbatch):
+            imgs = mbatch["images"].astype(dt)
+            mean, _logvar = vae_mod.encode(vae_p, dcfg.vae, imgs)
+            z = jax.lax.stop_gradient(mean) * 0.18215
+            key = jax.random.fold_in(jax.random.key(17), mbatch["idx"])
+            if pred == "eps":
+                fn = lambda x, t, c: apply_net(net_p, dcfg.net, x, t, c)  # noqa: E731
+                return ddpm_loss(fn, sched, z, mbatch["ctx"], key), {}
+            fn = lambda x, t, c: apply_net(net_p, dcfg.net, x, t, c)      # noqa: E731
+            ctx = {"txt": mbatch["ctx"]["txt"], "vec": mbatch["ctx"]["vec"]}
+            return rf_loss(fn, z, ctx, key), {}
+
+        micro_img_spec = P(None, *tuple(img_spec))
+        rules = dict(rules)
+        rules["batch"] = tuple(img_spec)[0]
+
+        def step_fn(state, batch):
+            micro = {
+                "images": maybe_constraint(
+                    batch["images"].reshape((n_micro, mb) +
+                                            batch["images"].shape[1:]),
+                    micro_img_spec),
+                "ctx": jax.tree_util.tree_map(
+                    lambda x: x.reshape((n_micro, mb) + x.shape[1:]),
+                    batch["ctx"]),
+                "idx": state["step"] * n_micro + jnp.arange(n_micro),
+            }
+            loss_p = partial(loss_fn, state["vae"])
+            grads, loss, _ = _accumulate_grads(loss_p, state["params"],
+                                               micro, n_micro)
+            params, opt, metrics = opt_update(grads, state["opt"],
+                                              state["params"])
+            return ({"params": params, "vae": state["vae"], "opt": opt,
+                     "step": state["step"] + 1},
+                    {"loss": loss, **metrics})
+
+        state_sds = {"params": net_sds, "vae": vae_sds,
+                     "opt": jax.eval_shape(opt_init, net_sds),
+                     "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        net_specs_eff = (partition.fsdp_specs(net_specs, net_sds,
+                                              _MeshShim(mesh_shape))
+                         if arch.fsdp_params and not reduced else net_specs)
+        state_specs = {
+            "params": net_specs_eff, "vae": vae_specs,
+            "opt": partition.derive_state_specs(
+                state_sds["opt"], net_specs_eff, net_sds,
+                mesh=_MeshShim(mesh_shape), zero=not reduced),
+            "step": P(),
+        }
+        batch_sds = {"images": jax.ShapeDtypeStruct((b, res, res, 3),
+                                                    jnp.float32),
+                     "ctx": _ctx_sds(dcfg, b, jnp.float32)}
+        bfirst = tuple(img_spec)[0]
+        batch_specs = {"images": img_spec,
+                       "ctx": _ctx_specs(dcfg, bfirst)}
+
+        def init_fn(key):
+            k1, k2 = jax.random.split(key)
+            params = init_net(k1, dcfg.net, param_dtype=dt)
+            return {"params": params,
+                    "vae": vae_mod.init_vae(k2, dcfg.vae, param_dtype=dt),
+                    "opt": opt_init(params),
+                    "step": jnp.zeros((), jnp.int32)}
+
+        return CellProgram(arch, cell, step_fn, (state_sds, batch_sds),
+                           (state_specs, batch_specs), rules, donate=(0,),
+                           init_fn=init_fn,
+                           meta={"latent": latent, "n_micro": n_micro})
+
+    # gen: one denoising step ------------------------------------------------
+    b = cell.global_batch
+    x_spec = _batch_spec(b, dsize, multi_pod, mesh_shape, res=latent,
+                         shard_spatial=cell.shard_spatial, tail=3)
+    bfirst = tuple(x_spec)[0]
+    # activation-constraint rules for the backbone's logical axes: the
+    # batch rule must match the input spec (gen batches may be indivisible
+    # → replicated); "seq" stays whole unless the sequence-parallel §Perf
+    # variant is on.
+    rules = dict(rules)
+    rules["batch"] = bfirst
+    if options.get("seq_shard"):
+        rules["seq"] = "model"
+
+    if pred == "eps":
+        def step_fn(net, x, t, t_prev, ctx):
+            eps = apply_net(net, dcfg.net, x, t, ctx)
+            tb = t[0].astype(jnp.int32)
+            return ddim_step(sched, x, eps, tb,
+                             t_prev.astype(jnp.int32)).astype(x.dtype)
+    else:
+        def step_fn(net, x, t, t_prev, ctx):
+            v = apply_net(net, dcfg.net, x, t.astype(x.dtype) / sched.T, ctx)
+            dt_ = (t_prev.astype(x.dtype) - t[0].astype(x.dtype)) / sched.T
+            return (x + dt_ * v).astype(x.dtype)
+
+    x_sds = jax.ShapeDtypeStruct((b, latent, latent, dcfg.vae.z_ch), dt)
+    t_sds = jax.ShapeDtypeStruct((b,), jnp.int32)
+    tp_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    ctx_sds = _ctx_sds(dcfg, b, dt)
+    return CellProgram(
+        arch, cell, step_fn,
+        (net_sds, x_sds, t_sds, tp_sds, ctx_sds),
+        (net_specs, x_spec, P(bfirst), P(), _ctx_specs(dcfg, bfirst)),
+        rules, donate=(1,), out_specs=x_spec,
+        init_fn=lambda k: init_net(k, dcfg.net, param_dtype=dt),
+        meta={"latent": latent, "steps": cell.steps})
+
+
+# ---------------------------------------------------------------------------
+# vision family
+# ---------------------------------------------------------------------------
+
+
+def _vision_programs(arch: ArchSpec, cell: ShapeCell, cfg, *,
+                     multi_pod: bool, mesh_shape: Dict[str, int],
+                     reduced: bool,
+                     options: Optional[Dict[str, Any]] = None) -> CellProgram:
+    options = options or {}
+    dt = jnp.float32 if reduced else _dtype_of(arch, options)
+    dsize = _data_size(mesh_shape, multi_pod)
+    data = _data_axes(multi_pod)
+    opt_init, opt_update = _optimizer(arch.optimizer)
+    rules = train_rules(multi_pod)
+    if arch.family == "vision-convnext":
+        init_net, apply_net = cnx_mod.init_convnext, cnx_mod.apply_convnext
+    else:
+        init_net, apply_net = eff_mod.init_effnet, eff_mod.apply_effnet
+
+    params_sds = jax.eval_shape(
+        lambda k: init_net(k, cfg, param_dtype=dt), jax.random.key(0))
+    p_specs = partition.sanitize_specs(
+        partition.tree_specs(params_sds, partition.VISION_RULES),
+        params_sds, mesh_shape)
+    b = cell.global_batch
+    res = cell.img_res if not reduced else 32
+    img_spec = _batch_spec(b, dsize, multi_pod, mesh_shape, res=res,
+                           shard_spatial=cell.shard_spatial, tail=3)
+    bfirst = tuple(img_spec)[0]
+
+    if cell.kind == "train":
+        def loss_fn(p, batch):
+            logits = apply_net(p, cfg, batch["images"].astype(dt))
+            logits = logits.astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            tgt = jnp.take_along_axis(logits, batch["labels"][:, None],
+                                      axis=-1)[:, 0]
+            return jnp.mean(lse - tgt), {}
+
+        def step_fn(state, batch):
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state["params"], batch)
+            params, opt, metrics = opt_update(grads, state["opt"],
+                                              state["params"])
+            return ({"params": params, "opt": opt,
+                     "step": state["step"] + 1},
+                    {"loss": loss, **metrics})
+
+        state_sds = _train_state_sds(params_sds, opt_init)
+        state_specs = {
+            "params": p_specs,
+            "opt": partition.derive_state_specs(
+                state_sds["opt"], p_specs, params_sds,
+                mesh=_MeshShim(mesh_shape), zero=not reduced),
+            "step": P(),
+        }
+        batch_sds = {"images": jax.ShapeDtypeStruct((b, res, res, 3),
+                                                    jnp.float32),
+                     "labels": jax.ShapeDtypeStruct((b,), jnp.int32)}
+        batch_specs = {"images": img_spec, "labels": P(bfirst)}
+
+        def init_fn(key):
+            params = init_net(key, cfg, param_dtype=dt)
+            return {"params": params, "opt": opt_init(params),
+                    "step": jnp.zeros((), jnp.int32)}
+
+        return CellProgram(arch, cell, step_fn, (state_sds, batch_sds),
+                           (state_specs, batch_specs), rules, donate=(0,),
+                           init_fn=init_fn, meta={})
+
+    def step_fn(params, images):
+        return apply_net(params, cfg, images.astype(dt))
+
+    img_sds = jax.ShapeDtypeStruct((b, res, res, 3), jnp.float32)
+    return CellProgram(arch, cell, step_fn, (params_sds, img_sds),
+                       (p_specs, img_spec), rules,
+                       init_fn=lambda k: init_net(k, cfg, param_dtype=dt),
+                       meta={})
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+
+class _MeshShim:
+    """Duck-typed stand-in so spec derivation needs only axis sizes, not a
+    real jax Mesh (the dry-run builds programs before devices exist)."""
+
+    def __init__(self, shape: Dict[str, int]):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+DEFAULT_MESH_SHAPE = {"data": 16, "model": 16}
+MULTIPOD_MESH_SHAPE = {"pod": 2, "data": 16, "model": 16}
+
+
+def _reduce_cell(cell: ShapeCell) -> ShapeCell:
+    """Shrink a cell's shapes for the CPU smoke tests (same kind/flow)."""
+    from dataclasses import replace
+    if cell.kind in ("train",) and cell.seq_len:
+        return replace(cell, seq_len=16, global_batch=8, microbatches=2)
+    if cell.kind == "prefill":
+        return replace(cell, seq_len=16, global_batch=2)
+    if cell.kind == "decode":
+        return replace(cell, seq_len=32, global_batch=2)
+    if cell.kind == "gen":
+        return replace(cell, global_batch=2, img_res=32, shard_spatial=False)
+    if cell.kind == "train":   # diffusion / vision train
+        return replace(cell, global_batch=4, img_res=32, microbatches=2)
+    return replace(cell, global_batch=2, img_res=32, shard_spatial=False)
+
+
+def build_cell_program(arch: ArchSpec, cell: ShapeCell, *,
+                       multi_pod: bool = False,
+                       mesh_shape: Optional[Dict[str, int]] = None,
+                       reduced: bool = False,
+                       options: Optional[Dict[str, Any]] = None) -> CellProgram:
+    """``options`` — §Perf variants (default None = paper-faithful baseline):
+      * ``vocab_chunks``: int — streaming chunked CE for LM train cells
+      * ``microbatches``: int — override the cell/arch microbatch count
+      * ``remat``: bool — toggle activation checkpointing
+    """
+    if mesh_shape is None:
+        mesh_shape = MULTIPOD_MESH_SHAPE if multi_pod else DEFAULT_MESH_SHAPE
+    cfg = arch.make_reduced() if reduced else arch.make_config(cell)
+    if reduced:
+        cell = _reduce_cell(cell)
+        mesh_shape = {"data": 1, "model": 1}
+    opts = dict(options or {})
+    if "microbatches" in opts:
+        from dataclasses import replace as _replace
+        cell = _replace(cell, microbatches=opts["microbatches"])
+        arch = _replace(arch, train_microbatches=None)
+    if "remat" in opts and hasattr(cfg, "remat"):
+        cfg = cfg._replace(remat=opts["remat"])
+    kw = dict(multi_pod=multi_pod, mesh_shape=mesh_shape, reduced=reduced,
+              options=opts)
+    if arch.family_group == "lm":
+        return _lm_programs(arch, cell, cfg, **kw)
+    if arch.family_group == "diffusion":
+        return _diffusion_programs(arch, cell, cfg, **kw)
+    return _vision_programs(arch, cell, cfg, **kw)

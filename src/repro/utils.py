@@ -1,0 +1,100 @@
+"""Small shared utilities: pytree param helpers, counting, dtype tools."""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def param_count(tree: PyTree) -> int:
+    """Total number of scalar parameters in a pytree of arrays/ShapeDtypeStructs."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(math.prod(l.shape) for l in leaves if hasattr(l, "shape")))
+
+
+def param_bytes(tree: PyTree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = 0
+    for l in leaves:
+        if hasattr(l, "shape") and hasattr(l, "dtype"):
+            total += math.prod(l.shape) * jnp.dtype(l.dtype).itemsize
+    return int(total)
+
+
+def tree_map_with_path_names(fn: Callable[[str, Any], Any], tree: PyTree) -> PyTree:
+    """tree_map where fn receives a '/'-joined string path."""
+
+    def _name(path) -> str:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        return "/".join(parts)
+
+    return jax.tree_util.tree_map_with_path(lambda p, x: fn(_name(p), x), tree)
+
+
+def cast_floating(tree: PyTree, dtype) -> PyTree:
+    """Cast floating leaves of a pytree to `dtype`, leaving ints alone."""
+
+    def _cast(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree_util.tree_map(_cast, tree)
+
+
+def split_key_like_tree(key: jax.Array, tree: PyTree) -> PyTree:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree_util.tree_unflatten(treedef, list(keys))
+
+
+def assert_no_nans(tree: PyTree, where: str = "") -> None:
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.floating):
+            if bool(jnp.any(jnp.isnan(leaf))):
+                raise AssertionError(f"NaN at {where}{jax.tree_util.keystr(path)}")
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024.0:
+            return f"{n:.2f}{unit}"
+        n /= 1024.0
+    return f"{n:.2f}PiB"
+
+
+def human_count(n: float) -> str:
+    for unit in ("", "K", "M", "B", "T"):
+        if abs(n) < 1000.0:
+            return f"{n:.2f}{unit}"
+        n /= 1000.0
+    return f"{n:.2f}Q"
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return ceil_div(a, b) * b
+
+
+def stable_hash(s: str, mod: int) -> int:
+    """Deterministic (process-independent) string hash into [0, mod)."""
+    h = 1469598103934665603  # FNV-1a 64-bit
+    for ch in s.encode("utf-8"):
+        h ^= ch
+        h = (h * 1099511628211) & 0xFFFFFFFFFFFFFFFF
+    return h % mod

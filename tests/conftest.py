@@ -1,0 +1,44 @@
+"""Shared fixtures: tiny synthetic corpus, proxy embedder, node VDB fleet.
+
+NOTE: no XLA_FLAGS here — tests run on the single real CPU device; only
+``repro.launch.dryrun`` (never imported by tests) forces 512 devices.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.embeddings import ProxyClipEmbedder
+from repro.core.storage_classifier import StorageClassifier
+from repro.core.vdb import BlobStore
+from repro.data.synthetic import make_corpus, render_caption
+
+
+@pytest.fixture(scope="session")
+def corpus():
+    images, captions, specs = make_corpus(240, res=32, seed=0)
+    return images, captions, specs
+
+
+@pytest.fixture(scope="session")
+def embedder(corpus):
+    images, _, _ = corpus
+    e = ProxyClipEmbedder(render_caption)
+    e.set_corpus_anchor(e.embed_image(images))
+    return e
+
+
+@pytest.fixture()
+def fleet(corpus, embedder):
+    """4-node VDB fleet built by the storage classifier + blob store."""
+    images, captions, _ = corpus
+    img_vecs = embedder.embed_image(images)
+    txt_vecs = embedder.embed_text(captions)
+    blob = BlobStore()
+    payloads = np.array([blob.put(im) for im in images], np.int64)
+    cls = StorageClassifier(4)
+    # capacity ≥ corpus so cluster imbalance never truncates (the LCU
+    # tests exercise capacity pressure explicitly)
+    dbs = cls.build_node_dbs(img_vecs, txt_vecs, payloads,
+                             capacity_per_node=240)
+    return dbs, blob, cls, img_vecs, txt_vecs, payloads

@@ -1,0 +1,179 @@
+"""Fault-tolerance contract: atomic checkpoints, bitwise resume, NaN
+rollback, failure injection + restart, elastic resharding."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_arch, get_shape
+from repro.data.pipeline import ShardedDataLoader
+from repro.launch.train import make_diffusion_loader
+from repro.runtime.elastic import parse_spec, reshard_checkpoint
+from repro.runtime.steps import build_cell_program
+from repro.runtime.train_loop import (LoopConfig, SimulatedFailure,
+                                      run_training)
+
+
+@pytest.fixture()
+def prog():
+    arch = get_arch("sd15-small")
+    cell = get_shape("diffusion", "train_256")
+    return build_cell_program(arch, cell, reduced=True)
+
+
+def _flat(tree):
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(tree)]
+
+
+# ---------------------------------------------------------------------------
+# manager basics
+# ---------------------------------------------------------------------------
+
+
+def test_save_restore_bitwise(tmp_path, prog):
+    state = prog.init_fn(jax.random.key(0))
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(7, state, extra={"step": 7, "data": {"seed": 0, "step": 7}})
+    restored, extra = mgr.restore(state)
+    assert extra["step"] == 7
+    for a, b in zip(_flat(state), _flat(restored)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_async_save_and_retention(tmp_path, prog):
+    state = prog.init_fn(jax.random.key(0))
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (10, 20, 30, 40):
+        mgr.save_async(s, state, extra={"step": s})
+    mgr.wait()
+    assert mgr.all_steps() == [30, 40]
+
+
+def test_atomic_publish_no_tmp_leftover(tmp_path, prog):
+    state = prog.init_fn(jax.random.key(0))
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, state, extra={})
+    assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"w": jnp.zeros((4, 4))}, extra={})
+    with pytest.raises(ValueError):
+        mgr.restore({"w": jnp.zeros((2, 2))})
+
+
+# ---------------------------------------------------------------------------
+# training loop: resume is bitwise-exact
+# ---------------------------------------------------------------------------
+
+
+def test_failure_injection_then_resume_bitwise(tmp_path, prog):
+    """Train 12 steps straight vs. crash-at-8 + restart: identical states."""
+    loader_a = make_diffusion_loader(prog, n_corpus=64)
+    state_a = prog.init_fn(jax.random.key(0))
+    mgr_a = CheckpointManager(str(tmp_path / "a"), keep=5)
+    cfg = LoopConfig(total_steps=12, ckpt_every=4, log_every=100)
+    state_a, rep_a = run_training(prog.step_fn, state_a, loader_a, mgr_a, cfg)
+
+    loader_b = make_diffusion_loader(prog, n_corpus=64)
+    state_b = prog.init_fn(jax.random.key(0))
+    mgr_b = CheckpointManager(str(tmp_path / "b"), keep=5)
+    cfg_fail = LoopConfig(total_steps=12, ckpt_every=4, log_every=100,
+                          fail_at=9)
+    with pytest.raises(SimulatedFailure):
+        run_training(prog.step_fn, state_b, loader_b, mgr_b, cfg_fail)
+    # restart from the checkpoint (fresh process simulation)
+    loader_b2 = make_diffusion_loader(prog, n_corpus=64)
+    state_b2 = prog.init_fn(jax.random.key(0))
+    state_b2, rep_b = run_training(prog.step_fn, state_b2, loader_b2, mgr_b,
+                                   LoopConfig(total_steps=12, ckpt_every=4,
+                                              log_every=100))
+    assert rep_b.restarts == 1
+    for a, b in zip(_flat(state_a), _flat(state_b2)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_nan_rollback(tmp_path, prog):
+    """A poisoned BATCH rolls the state back to the last checkpoint and
+    the data iterator skips past the poisonous window."""
+    loader = make_diffusion_loader(prog, n_corpus=64)
+    poisoned_step_idx = 5
+
+    orig_batch_at = loader.batch_at
+
+    def batch_at(state):
+        b = orig_batch_at(state)
+        if state.step == poisoned_step_idx:
+            b = dict(b)
+            b["images"] = np.full_like(b["images"], np.nan)
+        return b
+
+    loader.batch_at = batch_at
+    state = prog.init_fn(jax.random.key(0))
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    cfg = LoopConfig(total_steps=8, ckpt_every=2, log_every=100,
+                     skip_batches_on_rollback=1)
+    state, rep = run_training(prog.step_fn, state, loader, mgr, cfg)
+    assert rep.rollbacks == 1
+    assert rep.steps_done >= 8
+    assert np.isfinite(rep.final_loss)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline determinism (the property resume depends on)
+# ---------------------------------------------------------------------------
+
+
+def test_loader_batches_are_pure_function_of_step():
+    arrays = {"x": np.arange(100, dtype=np.float32)}
+    a = ShardedDataLoader(arrays, global_batch=8, seed=3)
+    b = ShardedDataLoader(arrays, global_batch=8, seed=3)
+    for _ in range(5):
+        next(b)
+    b.skip_to(0)
+    for _ in range(3):
+        np.testing.assert_array_equal(next(a)["x"], next(b)["x"])
+
+
+def test_loader_host_sharding_partitions_batch():
+    arrays = {"x": np.arange(64, dtype=np.int64)}
+    hosts = [ShardedDataLoader(arrays, global_batch=8, seed=0,
+                               host_index=i, host_count=4) for i in range(4)]
+    parts = [next(h)["x"] for h in hosts]
+    merged = np.concatenate(parts)
+    solo = ShardedDataLoader(arrays, global_batch=8, seed=0)
+    np.testing.assert_array_equal(merged, next(solo)["x"])
+
+
+# ---------------------------------------------------------------------------
+# elastic resharding
+# ---------------------------------------------------------------------------
+
+
+def test_parse_spec_roundtrip():
+    mesh = jax.make_mesh((1,), ("data",))
+    from jax.sharding import PartitionSpec as P
+    assert parse_spec("PartitionSpec('data', None)", mesh) == P("data", None)
+    # axes missing from the new mesh degrade to replication
+    assert parse_spec("PartitionSpec(('pod', 'data'),)", mesh) == P(("data",))
+    assert parse_spec("PartitionSpec('model',)", mesh) == P(None)
+    assert parse_spec("", mesh) == P()
+
+
+def test_reshard_checkpoint_onto_new_mesh(tmp_path, prog):
+    state = prog.init_fn(jax.random.key(0))
+    mgr = CheckpointManager(str(tmp_path))
+    from jax.sharding import PartitionSpec as P
+    specs = jax.tree_util.tree_map(lambda _: P(), state)
+    mgr.save(3, state, extra={"step": 3}, specs=specs)
+    mesh = jax.make_mesh((1,), ("data",))
+    restored, extra = reshard_checkpoint(mgr, state, mesh)
+    assert extra["step"] == 3
+    for a, b in zip(_flat(state), _flat(restored)):
+        np.testing.assert_array_equal(a, b)

@@ -1,0 +1,150 @@
+"""Data layer (synthetic corpus, tokenizer, embeddings) and the prompt
+optimizer — unit + hypothesis properties."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.prompt_optimizer import (PromptOptimizer, phrase_importance,
+                                         split_phrases)
+from repro.data.synthetic import (SceneSpec, caption_of, make_corpus,
+                                  parse_caption, render_caption, render_scene)
+from repro.data.tokenizer import HashTokenizer
+from repro.utils import stable_hash
+
+
+# ---------------------------------------------------------------------------
+# synthetic corpus
+# ---------------------------------------------------------------------------
+
+
+def test_caption_parse_roundtrip():
+    spec = SceneSpec("triangle", "blue", "navy", "large", "left")
+    assert parse_caption(caption_of(spec)) == spec
+
+
+def test_caption_parse_survives_phrase_reorder():
+    """The prompt optimizer permutes phrases; the proxy embedder must
+    still recover the scene (its cross-modal alignment depends on it)."""
+    spec = SceneSpec("ring", "orange", "teal", "small", "right")
+    cap = caption_of(spec)
+    opt = PromptOptimizer()
+    assert parse_caption(opt.optimize(cap)) == spec
+
+
+def test_render_deterministic_and_bounded():
+    spec = SceneSpec()
+    a = render_scene(spec, 32)
+    b = render_scene(spec, 32)
+    np.testing.assert_array_equal(a, b)
+    assert a.min() >= -1.0 and a.max() <= 1.0
+
+
+def test_corpus_deterministic():
+    im1, cap1, _ = make_corpus(16, res=16, seed=5)
+    im2, cap2, _ = make_corpus(16, res=16, seed=5)
+    np.testing.assert_array_equal(im1, im2)
+    assert cap1 == cap2
+
+
+def test_structural_similarity_property(embedder):
+    """The paper's §IV-C premise: same layout / different semantics scores
+    higher than different layout (bird vs airplane example)."""
+    same_shape_a = render_scene(SceneSpec("circle", "red", "black",
+                                          "large", "center"), 32)
+    same_shape_b = render_scene(SceneSpec("circle", "green", "black",
+                                          "large", "center"), 32)
+    diff = render_scene(SceneSpec("cross", "red", "black",
+                                  "small", "left"), 32)
+    va, vb, vd = embedder.embed_image(
+        np.stack([same_shape_a, same_shape_b, diff]))
+    assert float(va @ vb) > float(va @ vd)
+
+
+def test_embedder_cross_modal_alignment(embedder, corpus):
+    images, captions, _ = corpus
+    iv = embedder.embed_image(images[:32])
+    tv = embedder.embed_text(captions[:32])
+    diag = np.mean([iv[i] @ tv[i] for i in range(32)])
+    off = np.mean([iv[i] @ tv[(i + 7) % 32] for i in range(32)])
+    assert diag > off + 0.2     # CLIP-like: matched pairs score higher
+
+
+# ---------------------------------------------------------------------------
+# tokenizer
+# ---------------------------------------------------------------------------
+
+
+def test_tokenizer_shapes_and_reserved_ids():
+    tok = HashTokenizer(vocab_size=1000)
+    out = tok.encode("a small red circle", max_len=10)
+    assert out.shape == (10,)
+    assert out[0] == tok.BOS
+    assert (out >= 0).all() and (out < 1000).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(text=st.text(alphabet=st.characters(whitelist_categories=("Ll", "Zs")),
+                    min_size=0, max_size=60),
+       max_len=st.integers(4, 32))
+def test_tokenizer_total_function(text, max_len):
+    """Property: any text encodes to exactly max_len valid ids,
+    deterministically."""
+    tok = HashTokenizer(vocab_size=512)
+    a = tok.encode(text, max_len=max_len)
+    b = tok.encode(text, max_len=max_len)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (max_len,)
+    assert (a < 512).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(word=st.text(alphabet="abcdefghij", min_size=1, max_size=12),
+       mod=st.integers(2, 1 << 20))
+def test_stable_hash_range(word, mod):
+    h = stable_hash(word, mod)
+    assert 0 <= h < mod
+    assert h == stable_hash(word, mod)
+
+
+# ---------------------------------------------------------------------------
+# prompt optimizer (§IV-D)
+# ---------------------------------------------------------------------------
+
+
+def test_split_phrases():
+    parts = split_phrases("a car, parked, the street, the rain")
+    assert parts == ["a car", "parked", "the street", "the rain"]
+
+
+def test_optimizer_preserves_content():
+    opt = PromptOptimizer()
+    prompt = "the street, the rain, a car, parked"
+    out = opt.optimize(prompt)
+    assert sorted(split_phrases(out)) == sorted(split_phrases(prompt))
+
+
+def test_optimizer_orders_by_importance():
+    opt = PromptOptimizer(attention_fn=lambda ph: np.arange(len(ph))[::-1])
+    out = opt.optimize("first, second, third")
+    assert out == "first, second, third"
+    opt2 = PromptOptimizer(attention_fn=lambda ph: np.arange(len(ph)))
+    assert opt2.optimize("first, second, third") == "third, second, first"
+
+
+def test_stopwords_rank_low():
+    assert phrase_importance("of the") < phrase_importance("crimson dragon")
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.sampled_from(["red circle", "blue square", "the park",
+                                 "a storm", "golden ring"]),
+                min_size=1, max_size=5, unique=True))
+def test_optimizer_is_permutation(phrases):
+    """Property: optimize() is a permutation of the input phrases."""
+    opt = PromptOptimizer()
+    prompt = ", ".join(phrases)
+    out_parts = split_phrases(opt.optimize(prompt))
+    assert sorted(out_parts) == sorted(split_phrases(prompt))

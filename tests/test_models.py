@@ -1,0 +1,260 @@
+"""Model-family behaviour: prefill/decode parity, MoE invariants,
+diffusion backbones, samplers, VAE, chunked attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.common.attention import _chunked_sdpa, sdpa
+from repro.models.diffusion import dit as dit_mod
+from repro.models.diffusion import mmdit as mmdit_mod
+from repro.models.diffusion import unet as unet_mod
+from repro.models.diffusion import vae as vae_mod
+from repro.models.diffusion.sampler import (ddim_sample, ddpm_loss, rf_edit,
+                                            rf_loss, rf_sample, sdedit_sample)
+from repro.models.diffusion.schedule import DiffusionSchedule
+from repro.models.transformer.lm import (LMConfig, apply_lm, apply_lm_decode,
+                                         init_kv_cache, init_lm, lm_loss)
+from repro.models.transformer.moe import MoEConfig, init_moe, moe_ffn
+
+
+def tiny_lm(pattern=("dense",), **kw):
+    # capacity_factor high enough that prefill never drops tokens (decode
+    # uses a no-drop capacity), so prefill/decode parity is exact
+    moe = MoEConfig(n_experts=4, top_k=2, d_ff=32,
+                    capacity_factor=4.0) if "moe" in pattern else None
+    defaults = dict(vocab=97, n_layers=2 * len(pattern), d_model=32,
+                    n_heads=4, n_kv_heads=2, head_dim=8, d_ff=64,
+                    pattern=pattern, moe=moe, max_seq=64)
+    defaults.update(kw)
+    return LMConfig(**defaults)
+
+
+# ---------------------------------------------------------------------------
+# LM
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pattern", [("dense",), ("moe",), ("dense", "moe")])
+def test_prefill_decode_parity(pattern):
+    """Decoding token-by-token must reproduce the full-forward logits."""
+    cfg = tiny_lm(pattern)
+    params = init_lm(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (2, 10), 0, cfg.vocab)
+
+    full_logits, _aux = apply_lm(params, cfg, toks)
+
+    caches = init_kv_cache(cfg, 2, 16, dtype=jnp.float32)
+    got = []
+    for t in range(10):
+        logits, caches = apply_lm_decode(params, cfg, toks[:, t: t + 1],
+                                         caches, jnp.int32(t))
+        got.append(logits[:, 0])
+    got = jnp.stack(got, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full_logits),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_lm_loss_finite_and_improvable():
+    cfg = tiny_lm(("dense", "moe"))
+    params = init_lm(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (4, 12), 0, cfg.vocab)
+
+    def loss(p):
+        return lm_loss(p, cfg, toks[:, :-1], toks[:, 1:])[0]
+
+    l0, g = jax.value_and_grad(loss)(params)
+    assert np.isfinite(float(l0))
+    p1 = jax.tree_util.tree_map(lambda p, gg: p - 0.5 * gg, params, g)
+    assert float(loss(p1)) < float(l0)
+
+
+def test_qk_norm_and_bias_variants():
+    for kw in (dict(qk_norm=True), dict(qkv_bias=True),
+               dict(tie_embeddings=True)):
+        cfg = tiny_lm(**kw)
+        params = init_lm(jax.random.key(0), cfg)
+        toks = jax.random.randint(jax.random.key(1), (1, 8), 0, cfg.vocab)
+        logits, _ = apply_lm(params, cfg, toks)
+        assert logits.shape == (1, 8, cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+
+def test_moe_output_is_gated_combination():
+    cfg = MoEConfig(n_experts=4, top_k=2, d_ff=16)
+    p = init_moe(jax.random.key(0), 8, cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 6, 8))
+    y, aux = moe_ffn(p, cfg, x)
+    assert y.shape == x.shape
+    assert float(aux["lb_loss"]) > 0.0
+    assert 0.0 <= float(aux["dropped_frac"]) <= 1.0
+
+
+def test_moe_capacity_drops_tokens():
+    cfg = MoEConfig(n_experts=2, top_k=1, d_ff=8, capacity_factor=1.0)
+    p = init_moe(jax.random.key(0), 4, cfg)
+    x = jax.random.normal(jax.random.key(1), (1, 16, 4))
+    # capacity=1 forces drops whenever routing is imbalanced
+    y, aux = moe_ffn(p, cfg, x, capacity=1)
+    assert float(aux["dropped_frac"]) > 0.0
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_moe_respects_expert_permutation():
+    """Permuting experts (and gathering router rows) permutes nothing
+    observable: output must be identical."""
+    cfg = MoEConfig(n_experts=4, top_k=2, d_ff=16)
+    p = init_moe(jax.random.key(0), 8, cfg)
+    x = jax.random.normal(jax.random.key(1), (1, 5, 8))
+    y0, _ = moe_ffn(p, cfg, x)
+    perm = jnp.array([2, 0, 3, 1])
+    p2 = dict(p)
+    p2["router"] = {"w": p["router"]["w"][:, perm]}
+    p2["w_gate"] = p["w_gate"][perm]
+    p2["w_up"] = p["w_up"][perm]
+    p2["w_down"] = p["w_down"][perm]
+    y1, _ = moe_ffn(p2, cfg, x)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("causal", [False, True])
+def test_chunked_sdpa_matches_naive(causal):
+    key = jax.random.key(7)
+    q = jax.random.normal(key, (2, 64, 2, 16))
+    out_chunked = _chunked_sdpa(q, q, q, causal=causal, block_k=16)
+    # force the naive path (seq < threshold)
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, q).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((64, 64), bool))
+        logits = jnp.where(mask, logits, -1e30)
+    want = jnp.einsum("bhqk,bkhd->bqhd",
+                      jax.nn.softmax(logits, -1).astype(q.dtype), q)
+    np.testing.assert_allclose(np.asarray(out_chunked), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# diffusion
+# ---------------------------------------------------------------------------
+
+
+def test_dit_shapes_and_grad():
+    cfg = dit_mod.DiTConfig(img_res=8, in_ch=4, patch=2, n_layers=2,
+                            d_model=32, n_heads=4, ctx_dim=16)
+    p = dit_mod.init_dit(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 8, 8, 4))
+    t = jnp.array([3.0, 7.0])
+    ctx = jax.random.normal(jax.random.key(2), (2, 16))
+    eps = dit_mod.apply_dit(p, cfg, x, t, ctx)
+    assert eps.shape == x.shape
+
+    def loss(p):
+        return jnp.mean(jnp.square(dit_mod.apply_dit(p, cfg, x, t, ctx)))
+
+    g = jax.grad(loss)(p)
+    assert all(bool(jnp.all(jnp.isfinite(l)))
+               for l in jax.tree_util.tree_leaves(g))
+
+
+def test_unet_shapes():
+    cfg = unet_mod.UNetConfig(in_ch=4, ch=16, ch_mult=(1, 2), n_res=1,
+                              attn_factors=(2,), n_heads=2, ctx_dim=16,
+                              groups=8)
+    p = unet_mod.init_unet(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (1, 16, 16, 4))
+    ctx = jax.random.normal(jax.random.key(2), (1, 5, 16))
+    out = unet_mod.apply_unet(p, cfg, x, jnp.array([5.0]), ctx)
+    assert out.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_mmdit_shapes():
+    cfg = mmdit_mod.MMDiTConfig(img_res=8, in_ch=4, patch=2, n_double=1,
+                                n_single=1, d_model=32, n_heads=4,
+                                txt_len=6, txt_dim=16, vec_dim=8)
+    p = mmdit_mod.init_mmdit(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 8, 8, 4))
+    ctx = {"txt": jax.random.normal(jax.random.key(2), (2, 6, 16)),
+           "vec": jax.random.normal(jax.random.key(3), (2, 8))}
+    v = mmdit_mod.apply_mmdit(p, cfg, x, jnp.array([0.3, 0.9]), ctx)
+    assert v.shape == x.shape
+
+
+def test_vae_roundtrip_shapes():
+    cfg = vae_mod.VAEConfig(in_ch=3, base_ch=8, ch_mult=(1, 2), z_ch=4)
+    p = vae_mod.init_vae(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 16, 16, 3))
+    mean, logvar = vae_mod.encode(p, cfg, x)
+    assert mean.shape == (2, 4, 4, 4)
+    out = vae_mod.decode(p, cfg, mean)
+    assert out.shape == x.shape
+
+
+# ---------------------------------------------------------------------------
+# samplers — the paper's Figure 1 mechanism
+# ---------------------------------------------------------------------------
+
+
+def _identity_eps(x, t, ctx):
+    """eps_fn that predicts zero noise — DDIM then contracts toward x0."""
+    return jnp.zeros_like(x)
+
+
+def test_ddim_and_sdedit_shapes():
+    sched = DiffusionSchedule.linear(100)
+    ctx = jnp.zeros((2, 4))
+    out = ddim_sample(_identity_eps, sched, (2, 8, 8, 3), ctx,
+                      jax.random.key(0), steps=5)
+    assert out.shape == (2, 8, 8, 3)
+    ref = jnp.ones((2, 8, 8, 3)) * 0.5
+    out2 = sdedit_sample(_identity_eps, sched, ref, ctx, jax.random.key(1),
+                         steps=4, strength=0.5)
+    assert out2.shape == ref.shape
+
+
+def test_sdedit_preserves_reference_structure():
+    """Low strength keeps the output close to the reference — the paper's
+    reason img2img needs fewer steps (Fig. 1)."""
+    sched = DiffusionSchedule.linear(100)
+    ctx = jnp.zeros((1, 4))
+    ref = jnp.ones((1, 8, 8, 3)) * 0.8
+    weak = sdedit_sample(_identity_eps, sched, ref, ctx, jax.random.key(2),
+                         steps=5, strength=0.2)
+    strong = sdedit_sample(_identity_eps, sched, ref, ctx, jax.random.key(2),
+                           steps=5, strength=0.95)
+    d_weak = float(jnp.mean(jnp.abs(weak - ref)))
+    d_strong = float(jnp.mean(jnp.abs(strong - ref)))
+    assert d_weak < d_strong
+
+
+def test_rf_sampler_and_edit():
+    def v_fn(x, t, ctx):
+        return -x  # flow toward zero
+
+    out = rf_sample(v_fn, (1, 4, 4, 2), None, jax.random.key(0), steps=8)
+    assert out.shape == (1, 4, 4, 2)
+    ref = jnp.ones((1, 4, 4, 2))
+    out2 = rf_edit(v_fn, ref, None, jax.random.key(1), steps=4, strength=0.5)
+    assert out2.shape == ref.shape
+
+
+def test_losses_finite():
+    sched = DiffusionSchedule.cosine(50)
+    x0 = jax.random.normal(jax.random.key(0), (2, 8, 8, 3))
+    l1 = ddpm_loss(_identity_eps, sched, x0, None, jax.random.key(1))
+    l2 = rf_loss(lambda x, t, c: jnp.zeros_like(x), x0, None, jax.random.key(2))
+    assert np.isfinite(float(l1)) and np.isfinite(float(l2))

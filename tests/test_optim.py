@@ -1,0 +1,134 @@
+"""Optimizer stack: AdamW, Adafactor, schedules, int8 gradient compression
+(hypothesis property: error feedback keeps the quantisation unbiased)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.optim.adafactor import (AdafactorConfig, adafactor_init,
+                                   adafactor_update)
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.compression import (compress_grads, compression_init,
+                                     decompress_grads)
+from repro.optim.schedule import cosine_schedule, linear_warmup
+
+
+def _quadratic_params():
+    return {"w": jnp.array([3.0, -2.0, 1.5]), "b": jnp.array(0.5),
+            "m": jnp.ones((256, 8)) * 2.0}
+
+
+def _loss(p):
+    return (jnp.sum(jnp.square(p["w"])) + jnp.square(p["b"])
+            + jnp.sum(jnp.square(p["m"])) / p["m"].size)
+
+
+def test_adamw_descends_quadratic():
+    p = _quadratic_params()
+    st_ = adamw_init(p)
+    cfg = AdamWConfig(lr=5e-2, weight_decay=0.0)
+    l0 = float(_loss(p))
+    for _ in range(60):
+        g = jax.grad(_loss)(p)
+        p, st_, m = adamw_update(g, st_, p, cfg)
+    assert float(_loss(p)) < 0.2 * l0
+    assert np.isfinite(float(m["grad_norm"]))
+
+
+def test_adafactor_descends_quadratic():
+    p = _quadratic_params()
+    cfg = AdafactorConfig(lr=0.3)
+    st_ = adafactor_init(p, cfg)
+    l0 = float(_loss(p))
+    for _ in range(80):
+        g = jax.grad(_loss)(p)
+        p, st_, _ = adafactor_update(g, st_, p, cfg)
+    assert float(_loss(p)) < 0.3 * l0
+
+
+def test_adafactor_factors_large_matrices():
+    cfg = AdafactorConfig(min_dim_size_to_factor=4)
+    p = {"big": jnp.zeros((8, 16)), "vec": jnp.zeros((8,))}
+    st_ = adafactor_init(p, cfg)
+    from repro.optim.adafactor import _FactoredMoment
+    assert isinstance(st_.v["big"], _FactoredMoment)
+    assert st_.v["big"].row.shape == (8,)
+    assert st_.v["big"].col.shape == (16,)
+    assert st_.v["vec"].shape == (8,)          # too small → full moment
+
+
+def test_adafactor_memory_is_sublinear():
+    """The point of Adafactor at 400B: moment bytes ≪ 2×param bytes."""
+    cfg = AdafactorConfig()
+    p = {"w": jnp.zeros((512, 2048))}
+    st_ = adafactor_init(p, cfg)
+    moment_elems = sum(x.size for x in jax.tree_util.tree_leaves(st_.v))
+    assert moment_elems < 0.01 * p["w"].size
+
+
+def test_grad_clipping_bounds_update():
+    p = {"w": jnp.array([1.0])}
+    st_ = adamw_init(p)
+    cfg = AdamWConfig(lr=1.0, clip_norm=1.0, weight_decay=0.0)
+    g = {"w": jnp.array([1e6])}
+    p2, _, m = adamw_update(g, st_, p, cfg)
+    assert float(m["grad_norm"]) == pytest.approx(1e6)
+    assert abs(float(p2["w"][0] - p["w"][0])) < 10.0   # clipped step
+
+
+def test_schedules():
+    assert float(linear_warmup(0, 10)) == pytest.approx(0.1)
+    assert float(linear_warmup(99, 10)) == 1.0
+    s0 = float(cosine_schedule(0, total_steps=100, warmup_steps=10))
+    s_mid = float(cosine_schedule(50, total_steps=100, warmup_steps=10))
+    s_end = float(cosine_schedule(100, total_steps=100, warmup_steps=10,
+                                  final_frac=0.1))
+    assert s0 < s_mid < 1.01
+    assert s_end == pytest.approx(0.1, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# int8 gradient compression with error feedback
+# ---------------------------------------------------------------------------
+
+
+def test_compression_roundtrip_error_bounded():
+    g = {"w": jnp.linspace(-3, 3, 64).reshape(8, 8)}
+    st_ = compression_init(g)
+    q, scales, st_ = compress_grads(g, st_)
+    back = decompress_grads(q, scales)
+    err = float(jnp.max(jnp.abs(back["w"] - g["w"])))
+    assert err <= float(scales["w"]) * 0.5 + 1e-7
+    assert q["w"].dtype == jnp.int8
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 100), steps=st.integers(2, 12))
+def test_error_feedback_mean_converges(seed, steps):
+    """Property: with a CONSTANT gradient, error feedback makes the running
+    mean of dequantised gradients converge to the true gradient (the
+    carried residual corrects the bias)."""
+    rng = np.random.default_rng(seed)
+    g_true = {"w": jnp.asarray(rng.normal(size=(16,)).astype(np.float32))}
+    st_ = compression_init(g_true)
+    total = jnp.zeros((16,))
+    for _ in range(steps):
+        q, s, st_ = compress_grads(g_true, st_)
+        total = total + decompress_grads(q, s)["w"]
+    mean_err = float(jnp.max(jnp.abs(total / steps - g_true["w"])))
+    one_shot_scale = float(jnp.max(jnp.abs(g_true["w"]))) / 127.0
+    assert mean_err <= one_shot_scale * (1.0 / steps) + 1e-6
+
+
+def test_optimizers_match_shapes_with_tree_structure():
+    """Moments mirror the parameter tree exactly (checkpoint contract)."""
+    p = {"a": {"b": jnp.zeros((3, 3))}, "c": jnp.zeros((2,))}
+    s1 = adamw_init(p)
+    assert jax.tree_util.tree_structure(s1.m) == \
+        jax.tree_util.tree_structure(p)
+    s2 = adafactor_init(p)
+    assert set(jax.tree_util.tree_leaves(s2.v)[0].shape) <= {2, 3}

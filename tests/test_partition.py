@@ -1,0 +1,107 @@
+"""Partitioning rules, moment-spec derivation, ZeRO/FSDP extension, and
+the logical-axis constraint machinery."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.optim.adafactor import adafactor_init
+from repro.optim.adamw import adamw_init
+from repro.runtime import partition
+from repro.runtime.pspec import (decode_rules, logical_constraint,
+                                 logical_rules, resolve_spec, train_rules)
+from repro.runtime.steps import _MeshShim
+
+
+def test_lm_rules_hit_expected_paths():
+    assert partition.spec_for("embed", (1000, 64),
+                              partition.LM_RULES) == P("model", None)
+    assert partition.spec_for("group0/attn/wq/w", (64, 128),
+                              partition.LM_RULES) == P(None, "model")
+    # stacked (scan) params get the leading None automatically
+    assert partition.spec_for("group0/attn/wq/w", (24, 64, 128),
+                              partition.LM_RULES) == P(None, None, "model")
+    assert partition.spec_for("group0/moe/w_gate", (24, 8, 64, 128),
+                              partition.LM_RULES) == P(None, "model", None, None)
+    assert partition.spec_for("final_norm/scale", (64,),
+                              partition.LM_RULES) == P(None)
+
+
+def test_tree_specs_on_sds():
+    sds = {"attn": {"wq": {"w": jax.ShapeDtypeStruct((4, 32, 64),
+                                                     jnp.float32)}},
+           "other": jax.ShapeDtypeStruct((7,), jnp.float32)}
+    specs = partition.tree_specs(sds, partition.LM_RULES)
+    assert specs["attn"]["wq"]["w"] == P(None, None, "model")
+    assert specs["other"] == P(None)
+
+
+def test_zero_extend_spec():
+    mesh = _MeshShim({"data": 4, "model": 2})
+    spec = partition.zero_extend_spec(P(None, "model"), (8, 16), mesh)
+    assert spec == P("data", "model")
+    # indivisible dims stay unsharded
+    spec2 = partition.zero_extend_spec(P(None, "model"), (3, 16), mesh)
+    assert spec2 == P(None, "model")
+
+
+def test_fsdp_specs_shard_every_large_param():
+    mesh = _MeshShim({"data": 4, "model": 2})
+    sds = {"w": jax.ShapeDtypeStruct((8, 16), jnp.float32)}
+    specs = {"w": P(None, "model")}
+    out = partition.fsdp_specs(specs, sds, mesh)
+    assert out["w"] == P("data", "model")
+
+
+def test_derive_state_specs_adamw():
+    params = {"layer": {"w": jnp.zeros((8, 16)), "b": jnp.zeros((16,))}}
+    p_specs = {"layer": {"w": P("data", "model"), "b": P(None)}}
+    opt_sds = jax.eval_shape(adamw_init, params)
+    mesh = _MeshShim({"data": 4, "model": 2})
+    specs = partition.derive_state_specs(opt_sds, p_specs, params, mesh=mesh)
+    assert specs.m["layer"]["w"] == P("data", "model")
+    assert specs.v["layer"]["w"] == P("data", "model")
+    assert specs.count == P()
+
+
+def test_derive_state_specs_adafactor_factored():
+    params = {"w": jnp.zeros((256, 512))}
+    p_specs = {"w": P("data", "model")}
+    opt_sds = jax.eval_shape(adafactor_init, params)
+    mesh = _MeshShim({"data": 4, "model": 2})
+    specs = partition.derive_state_specs(opt_sds, p_specs, params, mesh=mesh)
+    # row drops the last axis, col drops the second-to-last
+    assert specs.v["w"].row == P("data")
+    assert specs.v["w"].col == P("model")
+
+
+def test_logical_constraint_is_noop_without_rules():
+    x = jnp.ones((4, 4))
+    y = logical_constraint(x, "batch", "model")
+    assert (y == x).all()
+
+
+def test_resolve_spec_under_rules():
+    with logical_rules(train_rules(multi_pod=True)):
+        spec = resolve_spec("batch", None, "model")
+        assert spec == P(("pod", "data"), None, "model")
+
+
+def test_decode_rules_variants():
+    r = decode_rules(False, shard_kv=None)
+    assert r["batch"] == ("data",) and r["kv_seq"] is None
+    r = decode_rules(False, shard_kv="model")
+    assert r["kv_seq"] == "model"
+    r = decode_rules(True, shard_kv="data_model")
+    assert r["batch"] is None
+    assert r["kv_seq"] == ("pod", "data", "model")
+
+
+def test_count_sharded_bytes():
+    mesh = _MeshShim({"data": 4, "model": 2})
+    tree = {"w": jnp.zeros((8, 16), jnp.float32)}
+    specs = {"w": P("data", "model")}
+    n = partition.count_sharded_bytes(tree, specs, mesh)
+    assert n == 8 * 16 * 4 // 8

@@ -1,0 +1,56 @@
+"""§Perf variants must be numerically faithful to the baseline."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.transformer.lm import LMConfig, init_lm, lm_loss
+from repro.runtime.steps import build_cell_program
+from repro.configs import get_arch, get_shape
+
+
+@pytest.mark.parametrize("tie", [False, True])
+@pytest.mark.parametrize("chunks", [2, 4])
+def test_chunked_ce_matches_reference(tie, chunks):
+    cfg = LMConfig(vocab=64, n_layers=2, d_model=32, n_heads=4,
+                   n_kv_heads=2, head_dim=8, d_ff=64, tie_embeddings=tie,
+                   max_seq=32)
+    params = init_lm(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (2, 12), 0, cfg.vocab)
+    ref, _ = lm_loss(params, cfg, toks[:, :-1], toks[:, 1:])
+    got, _ = lm_loss(params, cfg, toks[:, :-1], toks[:, 1:],
+                     vocab_chunks=chunks)
+    np.testing.assert_allclose(float(got), float(ref), rtol=1e-5)
+
+
+def test_chunked_ce_grads_match():
+    cfg = LMConfig(vocab=32, n_layers=1, d_model=16, n_heads=2,
+                   n_kv_heads=2, head_dim=8, d_ff=32, max_seq=16)
+    params = init_lm(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (1, 8), 0, cfg.vocab)
+
+    g_ref = jax.grad(lambda p: lm_loss(p, cfg, toks[:, :-1],
+                                       toks[:, 1:])[0])(params)
+    g_chk = jax.grad(lambda p: lm_loss(p, cfg, toks[:, :-1], toks[:, 1:],
+                                       vocab_chunks=4)[0])(params)
+    for a, b in zip(jax.tree_util.tree_leaves(g_ref),
+                    jax.tree_util.tree_leaves(g_chk)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_options_thread_through_builder():
+    arch = get_arch("qwen2-0.5b")
+    cell = get_shape("lm", "train_4k")
+    prog = build_cell_program(arch, cell, reduced=True,
+                              options={"vocab_chunks": 2,
+                                       "microbatches": 1})
+    state = prog.init_fn(jax.random.key(0))
+    batch = {"tokens": jax.random.randint(jax.random.key(1),
+                                          prog.args_sds[1]["tokens"].shape,
+                                          0, 32)}
+    new_state, metrics = jax.jit(prog.step_fn)(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert prog.meta["n_micro"] == 1

@@ -1,0 +1,157 @@
+"""Algorithm 1 routing, Eq. 7/8 models, and the end-to-end CacheGenius
+orchestrator over a request trace."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.latency_model import CostModel, LatencyModel
+from repro.core.policy import GenerationPolicy, Route, select_reference
+from repro.core.system import CacheGenius, GenerationBackend
+from repro.core.trace import RequestTrace
+from repro.data.synthetic import caption_of, render_caption
+from repro.launch.serve import build_system
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 policy
+# ---------------------------------------------------------------------------
+
+
+def test_route_thresholds_exact():
+    pol = GenerationPolicy(lo=0.4, hi=0.5)
+    assert pol.route(0.51) is Route.HIT_RETURN
+    assert pol.route(0.50) is Route.IMG2IMG     # inclusive upper band edge
+    assert pol.route(0.45) is Route.IMG2IMG
+    assert pol.route(0.40) is Route.IMG2IMG     # inclusive lower band edge
+    assert pol.route(0.39) is Route.TXT2IMG
+
+
+def test_steps_per_route():
+    pol = GenerationPolicy(steps_full=30, steps_ref=20)
+    assert pol.steps_for(Route.HIT_RETURN) == 0
+    assert pol.steps_for(Route.IMG2IMG) == 20
+    assert pol.steps_for(Route.TXT2IMG) == 30
+
+
+@settings(max_examples=50, deadline=None)
+@given(clip=st.floats(0, 1), pick=st.floats(0, 1))
+def test_composite_score_stays_in_unit_interval(clip, pick):
+    s = GenerationPolicy().composite_score(clip, pick)
+    assert 0.0 <= s <= 1.0
+
+
+def test_select_reference():
+    assert select_reference(np.array([])) == -1
+    assert select_reference(np.array([0.1, 0.9, 0.3])) == 1
+
+
+# ---------------------------------------------------------------------------
+# Eq. 8 latency + cost models
+# ---------------------------------------------------------------------------
+
+
+def test_latency_eq8_structure():
+    lm = LatencyModel(t_retrieve=0.05, t_return=0.02, t_noise=0.005,
+                      t_step=0.06)
+    base = lm.t_embed + lm.t_schedule + lm.t_retrieve
+    assert lm.latency(Route.HIT_RETURN, 0) == pytest.approx(base + 0.02)
+    assert lm.latency(Route.IMG2IMG, 20) == pytest.approx(
+        base + 0.005 + 20 * 0.06)
+    assert lm.latency(Route.TXT2IMG, 30) == pytest.approx(base + 30 * 0.06)
+    # K < N  ⇒  img2img strictly cheaper than txt2img (the paper's premise)
+    assert lm.latency(Route.IMG2IMG, 20) < lm.latency(Route.TXT2IMG, 30)
+
+
+def test_latency_node_speed_scaling():
+    lm = LatencyModel()
+    fast = lm.latency(Route.TXT2IMG, 30, node_speed=2.0)
+    slow = lm.latency(Route.TXT2IMG, 30, node_speed=0.5)
+    assert fast < slow
+
+
+def test_cost_model_accumulates():
+    cm = CostModel()
+    cm.charge(0, gpu_seconds=3600.0)          # 1 GPU-hour on the 4090D
+    cm.charge(3, gpu_seconds=3600.0)          # 1 GPU-hour on the 2070S
+    cost = cm.total_cost()
+    assert cost == pytest.approx(0.28 + 0.084, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end orchestrator
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def system():
+    sys_, _, _, _ = build_system(n_nodes=4, corpus_n=300,
+                                 capacity_per_node=200)
+    return sys_
+
+
+def test_serve_trace_routes_and_stats(system):
+    trace = RequestTrace(seed=3, n_specs=120)
+    for i, req in enumerate(trace.generate(120)):
+        res = system.serve(req.prompt, seed=i,
+                           quality_tier=req.quality_tier)
+        assert res.image is not None
+        assert res.latency > 0
+    st_ = system.stats
+    assert st_.requests == 120
+    # the corpus covers the trace: most requests must avoid full generation
+    assert st_.hit_rate > 0.5
+    assert len(st_.route_counts) >= 2
+
+
+def test_serve_latency_beats_always_full(system):
+    st_ = system.stats
+    full = system.latency_model.latency(Route.TXT2IMG,
+                                        system.policy.steps_full)
+    assert np.mean(st_.latencies) < full
+
+
+def test_node_failure_keeps_serving(system):
+    system.fail_node(0)
+    trace = RequestTrace(seed=9, n_specs=40)
+    for i, req in enumerate(trace.generate(30)):
+        res = system.serve(req.prompt, seed=i)
+        assert res.node != 0 or res.fast_path == "history"
+
+
+def test_maintenance_respects_capacity():
+    sys_, _, _, _ = build_system(n_nodes=3, corpus_n=150,
+                                 capacity_per_node=100)
+    sys_.cache_capacity = 100
+    evicted = sys_.maintain()
+    assert sys_.total_size <= 100
+    assert sum(len(v) for v in evicted.values()) == 150 - 100
+
+
+def test_blob_store_sync_with_eviction():
+    """Paper §IV-G: evicting a vector synchronously removes its image."""
+    sys_, _, _, _ = build_system(n_nodes=2, corpus_n=60,
+                                 capacity_per_node=60)
+    before = len(sys_.blob_store)
+    sys_.cache_capacity = 40
+    sys_.maintain()
+    assert len(sys_.blob_store) == before - (60 - 40)
+
+
+def test_history_cache_invalidated_on_eviction():
+    """Regression: a history-cache hit must never dereference a blob the
+    LCU sweep deleted (found by fig19 under drift + tight capacity)."""
+    sys_, _, _, _ = build_system(n_nodes=2, corpus_n=60,
+                                 capacity_per_node=60)
+    trace = RequestTrace(seed=21, n_specs=80, repeat_rate=0.3)
+    reqs = list(trace.generate(40))
+    for i, r in enumerate(reqs):
+        sys_.serve(r.prompt, seed=i)
+    sys_.cache_capacity = 30
+    sys_.maintain()
+    # replay the same prompts: history hits must still resolve
+    for i, r in enumerate(reqs):
+        res = sys_.serve(r.prompt, seed=100 + i)
+        assert res.image is not None

@@ -1,0 +1,130 @@
+"""HLO analyzers: collective parsing, loop-trip weighting, and the
+instruction-level flop/byte model — validated on synthetic HLO and on a
+real lowered program with known flop counts."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import roofline
+
+SYNTH_HLO = """
+HloModule test
+
+%cond.1 (p: (s32[])) -> pred[] {
+  %p = (s32[]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body.1 (p: (s32[])) -> (s32[]) {
+  %p = (s32[]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[128,64]{1,0} parameter(1)
+  %ar = f32[128,64]{1,0} all-reduce(%x), replica_groups=[2,4]<=[8], to_apply=%add
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[]) tuple(%ni)
+}
+
+ENTRY %main (a: f32[16,32], b: f32[32,8]) -> f32[16,8] {
+  %a = f32[16,32]{1,0} parameter(0)
+  %b = f32[32,8]{1,0} parameter(1)
+  %init = (s32[]) tuple(%zero)
+  %w = (s32[]) while(%init), condition=%cond.1, body=%body.1
+  %ag = f32[16,128]{1,0} all-gather(%a), replica_groups=[2,4]<=[8], dimensions={1}
+  ROOT %d = f32[16,8]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_collective_stats_loop_weighting():
+    st = roofline.collective_stats(SYNTH_HLO)
+    # all-reduce inside the 10-trip loop: 128*64*4 bytes × 10
+    # all-gather in entry: result 16*128*4, operand = result / group(4)
+    ar = 128 * 64 * 4 * 10
+    ag = 16 * 128 * 4 / 4
+    assert st.by_op["all-reduce"] == pytest.approx(ar)
+    assert st.by_op["all-gather"] == pytest.approx(ag)
+    assert st.count == 11
+
+
+def test_hlo_cost_dot_flops():
+    cost = roofline.hlo_cost(SYNTH_HLO)
+    # dot: 2 * 16*8 * 32
+    assert cost.dot_flops == pytest.approx(2 * 16 * 8 * 32)
+
+
+def test_shape_bytes_tuple_and_scalars():
+    assert roofline._shape_bytes("f32[4,4]{1,0}") == 64
+    assert roofline._shape_bytes("(f32[2], bf16[3,3])") == 8 + 18
+    assert roofline._shape_bytes("pred[]") == 1
+    assert roofline._shape_bytes("token[]") == 0
+
+
+def test_hlo_cost_matches_known_matmul():
+    """Real lowering: flops of a jitted matmul chain must match analytic."""
+    def f(a, b, c):
+        return (a @ b) @ c
+
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    c = jax.ShapeDtypeStruct((256, 32), jnp.float32)
+    hlo = jax.jit(f).lower(a, b, c).compile().as_text()
+    cost = roofline.hlo_cost(hlo)
+    want = 2 * 64 * 256 * 128 + 2 * 64 * 32 * 256
+    assert cost.dot_flops == pytest.approx(want, rel=1e-6)
+
+
+def test_hlo_cost_weights_scan_loops():
+    """A lax.scan of K matmuls must report K × the single-iteration flops
+    (this is exactly what XLA's own cost_analysis gets wrong)."""
+    K = 7
+
+    def f(x, ws):
+        def body(h, w):
+            return h @ w, None
+        out, _ = jax.lax.scan(body, x, ws)
+        return out
+
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    ws = jax.ShapeDtypeStruct((K, 32, 32), jnp.float32)
+    hlo = jax.jit(f).lower(x, ws).compile().as_text()
+    cost = roofline.hlo_cost(hlo)
+    want = K * 2 * 32 * 32 * 32
+    assert cost.dot_flops == pytest.approx(want, rel=0.01)
+
+
+def test_hlo_cost_convolution():
+    def f(x, k):
+        return jax.lax.conv_general_dilated(
+            x, k, (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+    x = jax.ShapeDtypeStruct((2, 16, 16, 8), jnp.float32)
+    k = jax.ShapeDtypeStruct((3, 3, 8, 4), jnp.float32)
+    hlo = jax.jit(f).lower(x, k).compile().as_text()
+    cost = roofline.hlo_cost(hlo)
+    want = 2 * (2 * 16 * 16 * 4) * (3 * 3 * 8)
+    # CPU may rewrite convs; accept either the conv counter or dot rewrite
+    got = cost.conv_flops + cost.dot_flops
+    assert got == pytest.approx(want, rel=0.35)
+
+
+def test_roofline_terms_dominance():
+    cost = {"flops": 197e12, "bytes accessed": 1.0}
+    coll = roofline.CollectiveStats()
+    t = roofline.roofline_terms(cost, coll, chips=256, model_flops=197e12)
+    assert t.dominant == "compute"
+    assert t.compute_s == pytest.approx(1.0)
+    cost2 = {"flops": 1.0, "bytes accessed": 819e9 * 2}
+    t2 = roofline.roofline_terms(cost2, coll, chips=256, model_flops=1.0)
+    assert t2.dominant == "memory"
+    assert t2.memory_s == pytest.approx(2.0)
+
+
+def test_group_size_parsing():
+    assert roofline._group_size("replica_groups=[16,16]<=[256]") == 16
+    assert roofline._group_size("replica_groups={{0,1,2,3}}") == 4

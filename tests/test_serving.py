@@ -1,0 +1,119 @@
+"""Serving engine: AOT-precompiled diffusion backend, batching queue,
+and the LM response cache (beyond-paper arch adaptation)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.policy import GenerationPolicy
+from repro.core.system import Route
+from repro.launch.serve import build_system
+from repro.models.diffusion import dit as dit_mod
+from repro.models.diffusion import vae as vae_mod
+from repro.runtime.serving import (DiffusionBackend, LMResponseCache,
+                                   Request, ServingEngine)
+
+
+@pytest.fixture(scope="module")
+def tiny_backend(embedder_mod):
+    dcfg = get_arch("sd15-small").make_config(None)
+    net = dit_mod.init_dit(jax.random.key(0), dcfg.net)
+    vae = vae_mod.init_vae(jax.random.key(1), dcfg.vae)
+    return DiffusionBackend(
+        net, dcfg.net, vae, dcfg.vae,
+        embed_prompt=lambda p: embedder_mod.embed_text([p])[0])
+
+
+@pytest.fixture(scope="module")
+def embedder_mod():
+    from repro.core.embeddings import ProxyClipEmbedder
+    from repro.data.synthetic import render_caption
+    return ProxyClipEmbedder(render_caption)
+
+
+def test_backend_generates_correct_shapes(tiny_backend):
+    img = tiny_backend.txt2img("a red circle", steps=3, seed=0)
+    res = tiny_backend.vae_cfg.downsample * tiny_backend.net_cfg.img_res
+    assert img.shape == (res, res, 3)
+    ref = np.zeros((res, res, 3), np.float32)
+    img2 = tiny_backend.img2img("a blue square", ref, steps=2, seed=1)
+    assert img2.shape == (res, res, 3)
+
+
+def test_backend_precompile_removes_cold_start(tiny_backend):
+    tiny_backend.precompile(step_buckets=(2,), batch_buckets=(1,))
+    keys = set(tiny_backend._compiled)
+    assert ("txt2img", 2, 1) in keys and ("img2img", 2, 1) in keys
+    # a precompiled call must not add a new bucket (no recompile)
+    tiny_backend.txt2img("anything", steps=2, seed=0)
+    assert set(tiny_backend._compiled) == keys
+
+
+def test_backend_deterministic_in_seed(tiny_backend):
+    a = tiny_backend.txt2img("a red circle", steps=2, seed=7)
+    b = tiny_backend.txt2img("a red circle", steps=2, seed=7)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_engine_drains_in_order():
+    system, _, _, _ = build_system(n_nodes=2, corpus_n=80,
+                                   capacity_per_node=60)
+    eng = ServingEngine(system, max_batch=4)
+    prompts = [f"a {c} circle" for c in ("red", "blue", "green")] * 3
+    for i, p in enumerate(prompts):
+        eng.submit(p, seed=i)
+    done = eng.drain()
+    assert len(done) == len(prompts)
+    assert [c.request.prompt for c in done] == prompts
+    assert all(c.queue_delay >= 0 for c in done)
+
+
+def test_engine_survives_node_failure():
+    system, _, _, _ = build_system(n_nodes=3, corpus_n=90,
+                                   capacity_per_node=60)
+    eng = ServingEngine(system)
+    eng.fail_node(1)
+    for i in range(6):
+        eng.submit(f"a small red circle {'x' * i}", seed=i)
+    done = eng.drain()
+    assert len(done) == 6
+
+
+# ---------------------------------------------------------------------------
+# LM response cache
+# ---------------------------------------------------------------------------
+
+
+def _bow_embed(text):
+    """Toy deterministic text embedding for the cache tests."""
+    v = np.zeros(64, np.float32)
+    for w in text.split():
+        v[hash(w) % 64] += 1.0
+    n = np.linalg.norm(v)
+    return v / n if n else v
+
+
+def test_lm_cache_hit_and_miss():
+    cache = LMResponseCache(embed=_bow_embed, hit_threshold=0.99)
+    assert cache.lookup("tell me about cats") is None
+    cache.insert("tell me about cats", "cats are great")
+    assert cache.lookup("tell me about cats") == "cats are great"
+    assert cache.lookup("explain quantum computing") is None
+    assert cache.hits == 1 and cache.misses == 2
+
+
+def test_lm_cache_semantic_threshold():
+    cache = LMResponseCache(embed=_bow_embed, hit_threshold=0.8)
+    cache.insert("the red fox jumps high", "resp")
+    # near-duplicate (shares most words) hits below-exact threshold
+    assert cache.lookup("the red fox jumps") == "resp"
+
+
+def test_lm_cache_capacity_eviction():
+    cache = LMResponseCache(embed=_bow_embed, capacity=3)
+    for i in range(5):
+        cache.insert(f"prompt number {i} unique words {i}", f"r{i}")
+    assert len(cache._responses) == 3
+    assert cache._vecs.shape[0] == 3

@@ -1,0 +1,76 @@
+"""Request-trace generator properties + the train CLI's restart path."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.trace import RequestTrace
+
+
+def test_trace_deterministic():
+    a = [r.prompt for r in RequestTrace(seed=5).generate(50)]
+    b = [r.prompt for r in RequestTrace(seed=5).generate(50)]
+    assert a == b
+
+
+def test_trace_zipf_concentration():
+    """Zipf law: the head of the popularity distribution dominates."""
+    reqs = [r.prompt for r in RequestTrace(seed=2, zipf_a=1.4,
+                                           repeat_rate=0.0).generate(400)]
+    from collections import Counter
+    counts = Counter(reqs).most_common()
+    top10 = sum(c for _, c in counts[:10])
+    assert top10 > 0.35 * len(reqs)
+
+
+def test_trace_repeats_marked():
+    reqs = list(RequestTrace(seed=3, repeat_rate=0.5).generate(200))
+    repeats = [r for r in reqs if r.is_repeat]
+    assert len(repeats) > 40
+    # a repeat echoes the previous prompt verbatim
+    for i, r in enumerate(reqs):
+        if r.is_repeat and i > 0:
+            assert r.prompt == reqs[i - 1].prompt
+            break
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 60), seed=st.integers(0, 20))
+def test_trace_total_function(n, seed):
+    reqs = list(RequestTrace(seed=seed, n_specs=50).generate(n))
+    assert len(reqs) == n
+    assert all(r.prompt for r in reqs)
+
+
+def test_trace_drift_changes_popularity():
+    """Topic drift rotates which scenes are popular across windows."""
+    trace = RequestTrace(seed=7, drift_every=100, repeat_rate=0.0)
+    reqs = [r.prompt for r in trace.generate(400)]
+    from collections import Counter
+    first = set(p for p, _ in Counter(reqs[:100]).most_common(5))
+    last = set(p for p, _ in Counter(reqs[300:]).most_common(5))
+    assert first != last
+
+
+def test_train_cli_failure_restart(tmp_path):
+    """The launch/train driver: inject a failure, restart, finish —
+    the operational fault-tolerance story end-to-end."""
+    import sys
+    from repro.launch import train as train_cli
+
+    ckpt = str(tmp_path / "ckpt")
+    argv = sys.argv
+    try:
+        sys.argv = ["train", "--arch", "sd15-small", "--steps", "8",
+                    "--ckpt-every", "4", "--ckpt-dir", ckpt,
+                    "--fail-at", "6", "--fresh"]
+        with pytest.raises(Exception):
+            train_cli.main()
+        # restart picks up from the step-4 checkpoint and completes
+        sys.argv = ["train", "--arch", "sd15-small", "--steps", "8",
+                    "--ckpt-every", "4", "--ckpt-dir", ckpt]
+        assert train_cli.main() == 0
+    finally:
+        sys.argv = argv
