@@ -37,11 +37,16 @@ from repro.models.diffusion.sampler import ddpm_loss
 from repro.models.diffusion.schedule import DiffusionSchedule
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 from repro.runtime.serving import DiffusionBackend
+from repro.utils import next_pow2
 
 CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", ".cache")
 IMG_RES = 32
 SCHED = DiffusionSchedule.linear(1000)
 LATENT_SCALE = 0.55
+
+# Micro-batch sizes swept by the serving-throughput benchmark; overridable
+# from the CLI (`benchmarks.run --batch-sizes 1,8,16`).
+BATCH_SIZES: Tuple[int, ...] = (1, 4, 8)
 
 
 def _vae_cfg():
@@ -440,6 +445,76 @@ def run_cachegenius(stack: TrainedStack, requests, *, n_nodes=4,
         prompts.append(prompt)
     return (MethodResult(prompts, np.stack(out_imgs), np.array(lats),
                          np.array(scores), np.array(steps_used)), system)
+
+
+def run_serving_throughput(stack: TrainedStack, *, n_requests: int = 96,
+                           batch_sizes: Optional[Sequence[int]] = None,
+                           steps_full: int = 6, steps_ref: int = 4,
+                           ) -> Dict:
+    """Wall-clock requests/sec through ``ServingEngine`` at each micro-batch
+    size, tiny-DiT backend on this host.
+
+    Every configuration replays the SAME Zipf trace through a freshly built
+    fleet, with all (workflow, steps, batch-bucket) samplers AOT-compiled
+    before the timer starts — so the measurement isolates the serving path
+    (embed/schedule/retrieve + denoise), not XLA compile time.
+
+    Prefer power-of-two batch sizes: generation groups pad to the next
+    power-of-two AOT bucket, so e.g. batch 6 pays for 8-wide denoiser
+    calls and the padding waste is measured (honestly) against it.
+    """
+    from repro.core.trace import RequestTrace
+    from repro.launch.serve import build_system
+    from repro.runtime.serving import ServingEngine
+
+    sizes = tuple(batch_sizes if batch_sizes is not None else BATCH_SIZES)
+    reqs = list(RequestTrace(seed=3).generate(n_requests))
+    out: Dict = {"n_requests": n_requests}
+    rps: Dict[int, float] = {}
+    # one backend for the whole sweep: it is stateless apart from its AOT
+    # compile cache, so smaller configs' buckets are reused by larger ones
+    dbe = stack.backend(tiny=True)
+    for bs in sizes:
+        policy = GenerationPolicy(steps_full=steps_full, steps_ref=steps_ref)
+        system, _, _, _ = build_system(
+            n_nodes=2, corpus_n=150, capacity_per_node=150, policy=policy,
+            backend=dbe.as_generation_backend())
+        engine = ServingEngine(system, max_batch=bs)
+        # groups of any size n <= bs pad to next_pow2(n), so precompile
+        # every pow2 up to AND INCLUDING the bucket covering bs; each
+        # workflow only ever runs at its own step count
+        buckets, b = [], 1
+        while True:
+            buckets.append(b)
+            if b >= next_pow2(bs):
+                break
+            b *= 2
+        dbe.precompile(step_buckets=(steps_full,), kinds=("txt2img",),
+                       batch_buckets=tuple(buckets))
+        dbe.precompile(step_buckets=(steps_ref,), kinds=("img2img",),
+                       batch_buckets=tuple(buckets))
+        # warm the retrieval-scan jit cache for every query bucket too —
+        # otherwise the first micro-batch of each shape compiles inside
+        # the timed window
+        for bucket in buckets:
+            for db in system.dbs:
+                db.search_batch(np.zeros((bucket, db.dim), np.float32),
+                                system.topk)
+        for i, r in enumerate(reqs):
+            engine.submit(r.prompt, seed=i, quality_tier=r.quality_tier)
+        t0 = time.perf_counter()
+        done = engine.drain()
+        secs = time.perf_counter() - t0
+        assert len(done) == n_requests
+        rps[bs] = n_requests / secs
+        out[f"rps_batch{bs}"] = rps[bs]
+        out[f"hit_rate_batch{bs}"] = system.stats.hit_rate
+    if 1 in rps and len(rps) > 1:
+        best = max((b for b in rps if b != 1), key=rps.get)
+        out["best_batch"] = best
+        out["speedup_best_vs_1"] = rps[best] / rps[1]
+        out["batched_faster"] = bool(rps[best] > rps[1])
+    return out
 
 
 def trace_prompts(n: int, *, seed=1, n_specs=1500) -> List[str]:

@@ -318,6 +318,19 @@ def fig18_throughput(n_requests: int = 120) -> Dict:
 
 
 # ---------------------------------------------------------------------------
+# Serving throughput vs micro-batch size (beyond-paper: batched serve path)
+# ---------------------------------------------------------------------------
+
+
+def serving_batch_throughput() -> Dict:
+    """Measured requests/sec of the batched end-to-end path: the queue
+    drains through ``CacheGenius.serve_batch``, so same-route requests in a
+    micro-batch share one retrieval scan and one padded denoiser call."""
+    stack = C.get_stack()
+    return C.run_serving_throughput(stack, batch_sizes=C.BATCH_SIZES)
+
+
+# ---------------------------------------------------------------------------
 # Fig. 19 — LCU vs LRU/LFU/FIFO hit rate across cache updates
 # ---------------------------------------------------------------------------
 
@@ -464,6 +477,7 @@ ALL_BENCHMARKS = {
     "table3_prompt_opt": table3_prompt_opt,
     "fig17_cost": fig17_cost,
     "fig18_throughput": fig18_throughput,
+    "serving_batch_throughput": serving_batch_throughput,
     "fig19_lcu": fig19_lcu,
     "table4_reference": table4_reference,
     "table5_embeddings": table5_embeddings,

@@ -26,15 +26,32 @@ def _summarize(name: str, result: dict, secs: float) -> str:
     return f"{name},{secs:.1f}s," + ",".join(keys[:6])
 
 
+def _batch_sizes(text: str):
+    try:
+        sizes = tuple(int(b) for b in text.split(","))
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"expected comma-separated ints (e.g. 1,4,8), got {text!r}")
+    if not sizes or any(b < 1 for b in sizes):
+        raise argparse.ArgumentTypeError("batch sizes must be >= 1")
+    return sizes
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--out", default="experiments/results.json")
     ap.add_argument("--with-roofline", action="store_true")
+    ap.add_argument("--batch-sizes", type=_batch_sizes, default=None,
+                    help="comma-separated micro-batch sizes for the "
+                         "serving-throughput benchmark (default: 1,4,8)")
     args = ap.parse_args()
 
     from benchmarks.paper_figures import ALL_BENCHMARKS
     from benchmarks import common as C
+
+    if args.batch_sizes:
+        C.BATCH_SIZES = args.batch_sizes
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     t0 = time.time()

@@ -23,6 +23,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.vdb import VectorDB
+from repro.utils import l2n
 
 
 @dataclass
@@ -98,6 +99,68 @@ class RequestScheduler:
         self.nodes[node].queue_depth += 1
         return ScheduleDecision(node=node, match_score=float(sims[node]))
 
+    def schedule_batch(self, prompt_vecs: np.ndarray, dbs: Sequence[VectorDB],
+                       *, quality_tiers: Optional[Sequence[bool]] = None,
+                       prompt_keys: Optional[Sequence[Optional[int]]] = None,
+                       ) -> List[ScheduleDecision]:
+        """Embed-and-route a whole micro-batch in one shot.
+
+        The expensive vector math is amortised: ONE matmul against the
+        historical-query cache, ONE node-representation build, ONE
+        similarity matmul — then the per-request fast-path / priority /
+        load logic runs over the precomputed rows in submission order,
+        mutating ``_prompt_counts`` exactly like sequential calls.
+
+        Batch semantics: the micro-batch is treated as scheduled-and-
+        completed atomically, so queue depths are read (for the load
+        penalty) but not left incremented — mirroring the sequential
+        serve loop, where every request completes before the next one
+        schedules.  History decisions carry the true match similarity in
+        ``match_score`` so callers can arbitrate against in-flight
+        (not-yet-archived) batch members.
+        """
+        P = np.atleast_2d(np.asarray(prompt_vecs, np.float32))
+        b = P.shape[0]
+        tiers = list(quality_tiers) if quality_tiers is not None else [False] * b
+        keys = list(prompt_keys) if prompt_keys is not None else [None] * b
+        Qn = l2n(P)
+        hist_sims = (Qn @ self._hist_vecs.T
+                     if self._hist_vecs.shape[0] else None)      # (b, H)
+        reps = self.node_vectors(dbs)                            # built once
+        base_sims = Qn @ reps.T                                  # (b, N)
+        decisions: List[ScheduleDecision] = []
+        for i in range(b):
+            # fast path 1: historical query cache
+            if hist_sims is not None:
+                j = int(np.argmax(hist_sims[i]))
+                if hist_sims[i, j] >= self.dedup_threshold:
+                    self._hist_hits += 1
+                    decisions.append(ScheduleDecision(
+                        node=-1, fast_path="history",
+                        history_payload=self._hist_payloads[j],
+                        match_score=float(hist_sims[i, j])))
+                    continue
+            # fast path 2: quality-aware priority for repeated prompts
+            if keys[i] is not None:
+                c = self._prompt_counts.get(keys[i], 0)
+                self._prompt_counts[keys[i]] = c + 1
+                if tiers[i] and c > 0:
+                    fastest = max((n for n in self.nodes if n.alive),
+                                  key=lambda n: n.speed)
+                    decisions.append(ScheduleDecision(node=fastest.index,
+                                                      fast_path="priority"))
+                    continue
+            sims = base_sims[i].copy()
+            for n in self.nodes:
+                if not n.alive:
+                    sims[n.index] = -np.inf
+                else:
+                    sims[n.index] -= self.balance_weight * n.queue_depth
+            node = int(np.argmax(sims))
+            decisions.append(ScheduleDecision(node=node,
+                                              match_score=float(sims[node])))
+        return decisions
+
     def complete(self, node: int) -> None:
         if 0 <= node < len(self.nodes):
             self.nodes[node].queue_depth = max(0, self.nodes[node].queue_depth - 1)
@@ -113,6 +176,22 @@ class RequestScheduler:
         if sims[i] >= self.dedup_threshold:
             return self._hist_payloads[i]
         return None
+
+    def count_history_hit(self) -> None:
+        """Book a history hit resolved outside `schedule` — the batched
+        serve path detects near-duplicates of *in-flight* batch members
+        (whose results are not yet archived) and must keep the counter in
+        lockstep with the sequential loop."""
+        self._hist_hits += 1
+
+    def uncount_prompt(self, prompt_key: int) -> None:
+        """Roll back one `_prompt_counts` increment.  Sequential serve
+        never counts a request that history-hits; when the batched path
+        retroactively turns a scheduled request into an in-flight history
+        hit, it undoes the count `schedule_batch` already applied."""
+        c = self._prompt_counts.get(prompt_key)
+        if c is not None:
+            self._prompt_counts[prompt_key] = max(0, c - 1)
 
     def record_result(self, prompt_vec: np.ndarray, payload_id: int) -> None:
         q = prompt_vec / max(np.linalg.norm(prompt_vec), 1e-12)

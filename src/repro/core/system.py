@@ -25,16 +25,25 @@ from repro.core.prompt_optimizer import PromptOptimizer
 from repro.core.scheduler import NodeInfo, RequestScheduler, ScheduleDecision
 from repro.core.storage_classifier import StorageClassifier
 from repro.core.vdb import BlobStore, VectorDB
-from repro.utils import stable_hash
+from repro.utils import l2n, stable_hash
 
 
 @dataclass
 class GenerationBackend:
     """txt2img(prompt, steps, seed) / img2img(prompt, reference, steps, seed)
-    both return an (H, W, 3) float image in [-1, 1]."""
+    both return an (H, W, 3) float image in [-1, 1].
+
+    The optional batched entry points take parallel lists and return a
+    stacked (B, H, W, 3) array; when absent, the batched serve path falls
+    back to a per-request loop (scheduling/retrieval amortisation still
+    applies, only the denoiser runs unbatched)."""
 
     txt2img: Callable[[str, int, int], np.ndarray]
     img2img: Callable[[str, np.ndarray, int, int], np.ndarray]
+    txt2img_batch: Optional[Callable[[Sequence[str], int, Sequence[int]],
+                                     np.ndarray]] = None
+    img2img_batch: Optional[Callable[[Sequence[str], np.ndarray, int,
+                                      Sequence[int]], np.ndarray]] = None
 
 
 @dataclass
@@ -182,14 +191,213 @@ class CacheGenius:
             self.maintain()
         return self._finish(img, route, node, best_score, t_wall0, steps=steps)
 
+    # ------------------------------------------------------- batched serve
+
+    def serve_batch(self, prompts: Sequence[str], *,
+                    seeds: Optional[Sequence[int]] = None,
+                    quality_tiers: Optional[Sequence[bool]] = None,
+                    ) -> List[ServeResult]:
+        """Serve a micro-batch of requests through one pass of the stack.
+
+        Amortisation vs. the sequential loop:
+
+        * ONE ``embed_text`` call for every prompt in the batch;
+        * ONE ``RequestScheduler.schedule_batch`` (single history matmul,
+          single node-representation similarity);
+        * ONE ``VectorDB.search_batch`` per node touched by the batch;
+        * denoiser calls grouped by (node, workflow, steps) and executed
+          as single padded batched backend calls when the backend exposes
+          ``txt2img_batch`` / ``img2img_batch``.
+
+        Semantics: scheduling and retrieval see the cache state at batch
+        entry (snapshot), and archives land after generation.  Requests
+        whose prompt near-duplicates an earlier in-batch request that will
+        archive are coalesced onto that request's result — exactly the
+        history fast path the sequential loop takes once the earlier
+        result is recorded.  A batched drain therefore matches the
+        sequential loop whenever distinct in-batch prompts do not interact
+        through freshly archived images (the parity tests pin this on a
+        fixed Zipf trace).  Results come back in submission order.
+        """
+        n = len(prompts)
+        if n == 0:
+            return []
+        t_wall0 = time.perf_counter()
+        seeds = list(seeds) if seeds is not None else [0] * n
+        tiers = list(quality_tiers) if quality_tiers is not None else [False] * n
+        clocks = [self.clock + i + 1 for i in range(n)]
+        self.clock += n
+        raw = [str(p) for p in prompts]
+        opt = ([self.prompt_optimizer.optimize(p) for p in raw]
+               if self.use_prompt_optimizer else raw)
+        pvecs = self.embedder.embed_text(raw)          # one batched call
+        qn = l2n(pvecs)
+        pkeys = [stable_hash(p, 1 << 62) for p in raw]
+
+        if self.use_scheduler:
+            decisions = self.scheduler.schedule_batch(
+                pvecs, self.dbs, quality_tiers=tiers, prompt_keys=pkeys)
+        else:
+            decisions = [ScheduleDecision(node=int(c) % len(self.dbs))
+                         for c in clocks]
+
+        # one batched VDB scan per node touched by normal-path requests
+        by_node: Dict[int, List[int]] = {}
+        for i, d in enumerate(decisions):
+            if d.fast_path is None:
+                by_node.setdefault(d.node, []).append(i)
+        retrieved: Dict[int, tuple] = {}
+        for node, idxs in by_node.items():
+            rows = self.dbs[node].search_batch(pvecs[idxs], self.topk)
+            for i, r in zip(idxs, rows):
+                retrieved[i] = r
+
+        # in-order planning: route each request, coalescing near-duplicates
+        # of in-flight (will-archive) batch members onto one generation
+        plans: List[dict] = [None] * n  # type: ignore[list-item]
+        pending_vecs: List[np.ndarray] = []
+        pending_req: List[int] = []
+        for i in range(n):
+            d = decisions[i]
+            pend_sim, pend_j = -np.inf, -1
+            if pending_vecs:
+                sims = np.stack(pending_vecs) @ qn[i]
+                pj = int(np.argmax(sims))
+                pend_sim, pend_j = float(sims[pj]), pending_req[pj]
+            if d.fast_path == "history":
+                if pend_sim > d.match_score:  # later history entry wins argmax
+                    plans[i] = {"kind": "alias", "target": pend_j}
+                else:
+                    plans[i] = {"kind": "history",
+                                "image": self.blob_store.get(d.history_payload)}
+                continue
+            if self.use_scheduler and pend_sim >= self.scheduler.dedup_threshold:
+                # sequential serve would history-hit the in-flight record
+                self.scheduler.count_history_hit()
+                self.scheduler.uncount_prompt(pkeys[i])
+                plans[i] = {"kind": "alias", "target": pend_j}
+                continue
+            node = d.node
+            if d.fast_path == "priority":
+                plans[i] = {"kind": "gen", "node": node, "route": Route.TXT2IMG,
+                            "steps": self.policy.steps_full, "fast": "priority",
+                            "score": 0.0, "ref": None}
+                pending_vecs.append(qn[i])
+                pending_req.append(i)
+                continue
+            db = self.dbs[node]
+            scores, slots = retrieved[i]
+            best_slot, best_score = -1, -1.0
+            for sc, sl in zip(scores, slots):
+                ivec = db.img_vecs[sl]
+                clip_s = self.embedder.clip_score(pvecs[i], ivec)
+                pick_s = self.embedder.pick_score(pvecs[i], ivec)
+                s = self.policy.composite_score(clip_s, pick_s)
+                if s > best_score:
+                    best_score, best_slot = s, int(sl)
+            route = (self.policy.route(best_score) if best_slot >= 0
+                     else Route.TXT2IMG)
+            steps = self.policy.steps_for(route)
+            if route is Route.HIT_RETURN:
+                db.mark_access(np.array([best_slot]), clocks[i])
+                plans[i] = {"kind": "cached", "node": node, "score": best_score,
+                            "image": self.blob_store.get(
+                                int(db.payload_ids[best_slot]))}
+            elif route is Route.IMG2IMG:
+                db.mark_access(np.array([best_slot]), clocks[i])
+                plans[i] = {"kind": "gen", "node": node, "route": route,
+                            "steps": steps, "fast": None, "score": best_score,
+                            "ref": self.blob_store.get(
+                                int(db.payload_ids[best_slot]))}
+                pending_vecs.append(qn[i])
+                pending_req.append(i)
+            else:
+                plans[i] = {"kind": "gen", "node": node, "route": route,
+                            "steps": steps, "fast": None, "score": best_score,
+                            "ref": None}
+                pending_vecs.append(qn[i])
+                pending_req.append(i)
+
+        # grouped generation: one padded backend call per (node, kind, steps)
+        images: Dict[int, np.ndarray] = {}
+        txt_groups: Dict[tuple, List[int]] = {}
+        img_groups: Dict[tuple, List[int]] = {}
+        for i in range(n):
+            p = plans[i]
+            if p["kind"] != "gen":
+                continue
+            grp = img_groups if p["ref"] is not None else txt_groups
+            grp.setdefault((p["node"], p["steps"]), []).append(i)
+        for (node, steps), idxs in txt_groups.items():
+            g_prompts = [opt[i] for i in idxs]
+            g_seeds = [seeds[i] for i in idxs]
+            if self.backend.txt2img_batch is not None:
+                out = np.asarray(self.backend.txt2img_batch(
+                    g_prompts, steps, g_seeds))
+                for j, i in enumerate(idxs):
+                    images[i] = np.asarray(out[j])
+            else:
+                for i in idxs:
+                    images[i] = self.backend.txt2img(opt[i], steps, seeds[i])
+        for (node, steps), idxs in img_groups.items():
+            refs = np.stack([plans[i]["ref"] for i in idxs])
+            if self.backend.img2img_batch is not None:
+                out = np.asarray(self.backend.img2img_batch(
+                    [opt[i] for i in idxs], refs, steps,
+                    [seeds[i] for i in idxs]))
+                for j, i in enumerate(idxs):
+                    images[i] = np.asarray(out[j])
+            else:
+                for i in idxs:
+                    images[i] = self.backend.img2img(
+                        opt[i], plans[i]["ref"], steps, seeds[i])
+
+        # archive in submission order (blob ids / history order match the
+        # sequential loop exactly)
+        for i in range(n):
+            if plans[i]["kind"] == "gen":
+                self._archive(raw[i], pvecs[i], images[i], plans[i]["node"],
+                              t=clocks[i])
+
+        # finish in submission order: stats, latency model, maintenance
+        results: List[ServeResult] = []
+        for i in range(n):
+            p = plans[i]
+            if p["kind"] == "alias":
+                results.append(self._finish(
+                    images[p["target"]], Route.HIT_RETURN, -1, 1.0, t_wall0,
+                    steps=0, retrieved=False, fast="history"))
+            elif p["kind"] == "history":
+                results.append(self._finish(
+                    p["image"], Route.HIT_RETURN, -1, 1.0, t_wall0,
+                    steps=0, retrieved=False, fast="history"))
+            elif p["kind"] == "gen" and p["fast"] == "priority":
+                results.append(self._finish(
+                    images[i], Route.TXT2IMG, p["node"], 0.0, t_wall0,
+                    steps=p["steps"], retrieved=False, fast="priority"))
+            else:
+                if (self.stats.requests % self.maintenance_interval
+                        == self.maintenance_interval - 1):
+                    self.maintain()
+                if p["kind"] == "cached":
+                    results.append(self._finish(
+                        p["image"], Route.HIT_RETURN, p["node"], p["score"],
+                        t_wall0, steps=0))
+                else:
+                    results.append(self._finish(
+                        images[i], p["route"], p["node"], p["score"],
+                        t_wall0, steps=p["steps"]))
+        return results
+
     # ------------------------------------------------------------- internals
 
     def _archive(self, prompt: str, pvec: np.ndarray, img: np.ndarray,
-                 node: int) -> None:
+                 node: int, *, t: Optional[float] = None) -> None:
         """Store the generated image to NFS (blob store) + insert into VDB."""
         pid = self.blob_store.put(img)
         ivec = self.embedder.embed_image(img[None])[0]
-        self.dbs[node].add(ivec[None], pvec[None], np.array([pid]), self.clock)
+        self.dbs[node].add(ivec[None], pvec[None], np.array([pid]),
+                           self.clock if t is None else t)
         self.scheduler.record_result(pvec, pid)
 
     def _finish(self, img, route, node, score, t_wall0, *, steps, retrieved=True,

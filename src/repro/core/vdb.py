@@ -16,11 +16,17 @@ paper's NFS layer).
 from __future__ import annotations
 
 from functools import partial
-from typing import Dict, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.utils import next_pow2
+
+# The Pallas kernel uses a large-negative sentinel instead of -inf; treat
+# anything at or below it as "masked" when unioning candidate sets.
+_SCORE_FLOOR = -1e29
 
 
 class BlobStore:
@@ -67,6 +73,26 @@ def _masked_topk_batch(queries, db, valid, k: int):
 def _l2n(x: np.ndarray) -> np.ndarray:
     n = np.linalg.norm(x, axis=-1, keepdims=True)
     return x / np.maximum(n, 1e-12)
+
+
+def _union_topk(score_rows: Sequence[np.ndarray],
+                slot_rows: Sequence[np.ndarray],
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    """De-duplicate the union of per-index top-k rows, keeping the best
+    score per slot and dropping masked candidates (±inf or the Pallas
+    large-negative sentinel)."""
+    best: Dict[int, float] = {}
+    for scores, slots in zip(score_rows, slot_rows):
+        for sc, sl in zip(scores, slots):
+            if not np.isfinite(sc) or sc <= _SCORE_FLOOR:
+                continue
+            if sl not in best or sc > best[sl]:
+                best[int(sl)] = float(sc)
+    if not best:
+        return np.empty((0,), np.float32), np.empty((0,), np.int64)
+    slots_u = np.array(sorted(best, key=best.get, reverse=True), np.int64)
+    scores_u = np.array([best[s] for s in slots_u], np.float32)
+    return scores_u, slots_u
 
 
 class VectorDB:
@@ -159,20 +185,57 @@ class VectorDB:
                 s, i = _masked_topk(jnp.asarray(q), jnp.asarray(self.txt_vecs),
                                     jnp.asarray(self.valid), k)
                 out.append((np.asarray(s), np.asarray(i)))
-        scores = np.concatenate([o[0] for o in out])
-        slots = np.concatenate([o[1] for o in out])
-        # de-duplicate the union, keep best score per slot
-        best: Dict[int, float] = {}
-        for sc, sl in zip(scores, slots):
-            if not np.isfinite(sc):
-                continue
-            if sl not in best or sc > best[sl]:
-                best[int(sl)] = float(sc)
-        if not best:
-            return np.empty((0,), np.float32), np.empty((0,), np.int64)
-        slots_u = np.array(sorted(best, key=best.get, reverse=True), np.int64)
-        scores_u = np.array([best[s] for s in slots_u], np.float32)
-        return scores_u, slots_u
+        return _union_topk([o[0] for o in out], [o[1] for o in out])
+
+    def search_batch(self, query_vecs: np.ndarray, k: int,
+                     *, index: str = "both",
+                     ) -> List[Tuple[np.ndarray, np.ndarray]]:
+        """Multi-query dual ANN retrieval — one device scan for the whole
+        micro-batch.
+
+        The jnp oracle routes through :func:`_masked_topk_batch` (a single
+        (Q, cap) masked matmul + top-k); the Pallas path feeds the full
+        (Q, D) query block to ``repro.kernels.ops.vdb_topk``, whose grid
+        already streams the database once for all queries.
+
+        Returns one ``(scores, slots)`` pair per query, each identical in
+        meaning to :meth:`search` (deduped union across indexes, invalid
+        slots dropped, scores descending).
+        """
+        Q = np.atleast_2d(np.asarray(query_vecs, np.float32))
+        b = Q.shape[0]
+        self.query_count += b
+        if b == 0:
+            return []
+        Qn = _l2n(Q)
+        # pad the query block to a power-of-two bucket: micro-batch sizes
+        # vary per node per drain, and an unpadded (Q, D) shape would
+        # re-trace/compile the scan for every distinct Q
+        bucket = next_pow2(b)
+        if bucket != b:
+            Qn = np.concatenate(
+                [Qn, np.zeros((bucket - b, Qn.shape[1]), np.float32)])
+        k = min(k, self.capacity)
+        indexes = []
+        if index in ("img", "both"):
+            indexes.append(self.img_vecs)
+        if index in ("txt", "both"):
+            indexes.append(self.txt_vecs)
+        per_index = []
+        if self.use_pallas:
+            from repro.kernels import ops as kops
+            for vecs in indexes:
+                s, i = kops.vdb_topk(jnp.asarray(Qn), jnp.asarray(vecs),
+                                     jnp.asarray(self.valid), k)
+                per_index.append((np.asarray(s), np.asarray(i)))
+        else:
+            for vecs in indexes:
+                s, i = _masked_topk_batch(jnp.asarray(Qn), jnp.asarray(vecs),
+                                          jnp.asarray(self.valid), k)
+                per_index.append((np.asarray(s), np.asarray(i)))
+        return [_union_topk([s[row] for s, _ in per_index],
+                            [i[row] for _, i in per_index])
+                for row in range(b)]
 
     # -- stats -------------------------------------------------------------
 

@@ -1,3 +1,18 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels + version-compat shims.
+
+JAX renamed ``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams`` across
+releases; the installed version may carry either name.  Every kernel in
+this package imports :data:`CompilerParams` from here so the rename never
+breaks the suite again.
+"""
+from jax.experimental.pallas import tpu as _pltpu
+
+try:  # newer JAX
+    CompilerParams = _pltpu.CompilerParams
+except AttributeError:  # older JAX (e.g. 0.4.x)
+    CompilerParams = _pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

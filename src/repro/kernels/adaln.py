@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import CompilerParams
+
 
 def _adaln_kernel(x_ref, shift_ref, scale_ref, o_ref, *, eps: float):
     x = x_ref[0].astype(jnp.float32)               # (block_t, D)
@@ -46,7 +48,7 @@ def adaln_modulate(x, shift, scale, *, block_t: int = 256, eps: float = 1e-5,
         ],
         out_specs=pl.BlockSpec((1, block_t, d), lambda bi, ti: (bi, ti, 0)),
         out_shape=jax.ShapeDtypeStruct((b, t + pad_t, d), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(x, shift.reshape(b, 1, d), scale.reshape(b, 1, d))

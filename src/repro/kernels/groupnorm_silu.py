@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import CompilerParams
+
 
 def _gn_kernel(x_ref, scale_ref, bias_ref, o_ref, *, groups: int, eps: float):
     x = x_ref[0].astype(jnp.float32)               # (H, W, C)
@@ -49,7 +51,7 @@ def groupnorm_silu(x, scale, bias, *, groups: int = 32, eps: float = 1e-5,
         ],
         out_specs=pl.BlockSpec((1, h, w, c), lambda bi: (bi, 0, 0, 0)),
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x, scale, bias)

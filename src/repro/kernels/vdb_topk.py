@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -106,7 +108,7 @@ def vdb_topk(queries, db, valid, k: int, *, block_n: int = 512,
             pltpu.VMEM((qn, k), jnp.float32),
             pltpu.VMEM((qn, k), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(queries, db, valid_i)

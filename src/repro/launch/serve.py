@@ -71,7 +71,18 @@ def _null_backend(corpus_images):
         target = rc(prompt, res=corpus_images.shape[1])
         return 0.75 * target + 0.25 * ref[: target.shape[0], : target.shape[1]]
 
-    return GenerationBackend(txt2img=txt2img, img2img=img2img)
+    # loop-based batch entry points: bit-identical per element, so the
+    # grouped serve_batch path stays exactly comparable to sequential serve
+    def txt2img_batch(prompts, steps, seeds):
+        return np.stack([txt2img(p, steps, s) for p, s in zip(prompts, seeds)])
+
+    def img2img_batch(prompts, refs, steps, seeds):
+        return np.stack([img2img(p, r, steps, s)
+                         for p, r, s in zip(prompts, refs, seeds)])
+
+    return GenerationBackend(txt2img=txt2img, img2img=img2img,
+                             txt2img_batch=txt2img_batch,
+                             img2img_batch=img2img_batch)
 
 
 def main() -> int:

@@ -61,6 +61,21 @@ def ddim_sample(eps_fn: Callable, sched: DiffusionSchedule, shape, ctx, key,
     return x
 
 
+def sdedit_start(sched: DiffusionSchedule, reference, noise, *,
+                 strength: float, dtype=jnp.float32):
+    """The SDEdit noising map (Eq. 4), shared by :func:`sdedit_sample` and
+    the serving backend's batched img2img core: noise ``reference`` to
+    t = strength·(T-1) with the given ``noise`` draw.
+
+    Returns ``(x_init, t_start)`` where ``t_start`` is the (static int)
+    truncation point for the DDIM chain — keeping the two strength→time
+    conversions in ONE place so callers cannot drift apart."""
+    t_noise = jnp.int32(strength * (sched.T - 1))
+    x_init = sched.q_sample(reference.astype(dtype),
+                            jnp.full((reference.shape[0],), t_noise), noise)
+    return x_init.astype(dtype), int(strength * sched.T)
+
+
 def sdedit_sample(eps_fn: Callable, sched: DiffusionSchedule, reference, ctx,
                   key, *, steps: int, strength: float = 0.6,
                   dtype=jnp.float32):
@@ -70,13 +85,11 @@ def sdedit_sample(eps_fn: Callable, sched: DiffusionSchedule, reference, ctx,
     ``strength`` trades reference fidelity against prompt flexibility — the
     paper's t ("noise injection strength")."""
     k1, k2 = jax.random.split(key)
-    t_start = jnp.int32(strength * (sched.T - 1))
     noise = jax.random.normal(k1, reference.shape, dtype)
-    x_init = sched.q_sample(reference.astype(dtype),
-                            jnp.full((reference.shape[0],), t_start), noise)
+    x_init, t_start = sdedit_start(sched, reference, noise,
+                                   strength=strength, dtype=dtype)
     return ddim_sample(eps_fn, sched, reference.shape, ctx, k2, steps=steps,
-                       x_init=x_init.astype(dtype), t_start=int(strength * sched.T),
-                       dtype=dtype)
+                       x_init=x_init, t_start=t_start, dtype=dtype)
 
 
 # ---------------------------------------------------------------------------

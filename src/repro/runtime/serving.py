@@ -28,8 +28,9 @@ import numpy as np
 from repro.core.system import CacheGenius, GenerationBackend, ServeResult
 from repro.models.diffusion import dit as dit_mod
 from repro.models.diffusion import vae as vae_mod
-from repro.models.diffusion.sampler import ddim_sample, sdedit_sample
+from repro.models.diffusion.sampler import ddim_sample, sdedit_start
 from repro.models.diffusion.schedule import DiffusionSchedule
+from repro.utils import next_pow2
 
 
 # ---------------------------------------------------------------------------
@@ -60,22 +61,41 @@ class DiffusionBackend:
         self.compile_seconds: Dict[Tuple[str, int, int], float] = {}
 
     # -- jittable cores -----------------------------------------------------
+    #
+    # Both cores take a VECTOR of per-request seeds: each batch element's
+    # initial noise is drawn exactly as the sequential batch=1 path draws
+    # it (vmap of split+normal over the element's own PRNGKey), so batching
+    # requests never changes any individual request's sample trajectory.
 
-    def _txt2img_core(self, net, vae, ctx, seed, steps: int, batch: int):
+    def _txt2img_core(self, net, vae, ctx, seeds, steps: int, batch: int):
         eps = dit_mod.make_eps_fn(net, self.net_cfg)
-        shape = (batch, self.net_cfg.img_res, self.net_cfg.img_res,
-                 self.net_cfg.in_ch)
-        z = ddim_sample(eps, self.sched, shape, ctx,
-                        jax.random.PRNGKey(seed), steps=steps)
+        el_shape = (self.net_cfg.img_res, self.net_cfg.img_res,
+                    self.net_cfg.in_ch)
+
+        def _noise(seed):
+            k_noise, _ = jax.random.split(jax.random.PRNGKey(seed))
+            return jax.random.normal(k_noise, (1,) + el_shape)[0]
+
+        x_init = jax.vmap(_noise)(seeds)
+        z = ddim_sample(eps, self.sched, (batch,) + el_shape, ctx,
+                        jax.random.PRNGKey(0), steps=steps, x_init=x_init)
         return vae_mod.decode(vae, self.vae_cfg, z / self.latent_scale)
 
-    def _img2img_core(self, net, vae, ref_img, ctx, seed, steps: int):
+    def _img2img_core(self, net, vae, ref_img, ctx, seeds, steps: int):
         eps = dit_mod.make_eps_fn(net, self.net_cfg)
         mean, _ = vae_mod.encode(vae, self.vae_cfg, ref_img)
         z_ref = mean * self.latent_scale
-        z = sdedit_sample(eps, self.sched, z_ref, ctx,
-                          jax.random.PRNGKey(seed), steps=steps,
-                          strength=self.strength)
+
+        def _noise(seed, z1):
+            k1, _ = jax.random.split(jax.random.PRNGKey(seed))
+            return jax.random.normal(k1, (1,) + z1.shape)[0]
+
+        noise = jax.vmap(_noise)(seeds, z_ref)
+        x_init, t_start = sdedit_start(self.sched, z_ref, noise,
+                                       strength=self.strength)
+        z = ddim_sample(eps, self.sched, z_ref.shape, ctx,
+                        jax.random.PRNGKey(0), steps=steps,
+                        x_init=x_init, t_start=t_start)
         return vae_mod.decode(vae, self.vae_cfg, z / self.latent_scale)
 
     # -- AOT bucket management -----------------------------------------------
@@ -91,7 +111,7 @@ class DiffusionBackend:
                 args = (self.net_params, self.vae_params,
                         jax.ShapeDtypeStruct((batch, self.net_cfg.ctx_dim),
                                              jnp.float32),
-                        jax.ShapeDtypeStruct((), jnp.int32))
+                        jax.ShapeDtypeStruct((batch,), jnp.int32))
             else:
                 fn = jax.jit(lambda n, v, r, c, s: self._img2img_core(
                     n, v, r, c, s, steps))
@@ -99,21 +119,24 @@ class DiffusionBackend:
                         jax.ShapeDtypeStruct((batch, res, res, 3), jnp.float32),
                         jax.ShapeDtypeStruct((batch, self.net_cfg.ctx_dim),
                                              jnp.float32),
-                        jax.ShapeDtypeStruct((), jnp.int32))
+                        jax.ShapeDtypeStruct((batch,), jnp.int32))
             self._compiled[key] = fn.lower(
                 *jax.tree_util.tree_map(_to_sds, args)).compile()
             self.compile_seconds[key] = time.perf_counter() - t0
         return self._compiled[key]
 
     def precompile(self, *, step_buckets: Sequence[int] = (20, 30),
-                   batch_buckets: Sequence[int] = (1,)) -> float:
+                   batch_buckets: Sequence[int] = (1,),
+                   kinds: Sequence[str] = ("txt2img", "img2img")) -> float:
         """Compile every serving bucket up front; returns total seconds.
-        This removes generation-path cold starts entirely."""
+        This removes generation-path cold starts entirely.  ``kinds``
+        restricts the workflow sweep when a policy pins each workflow to
+        one step count (txt2img at steps_full, img2img at steps_ref)."""
         t0 = time.perf_counter()
         for b in batch_buckets:
             for s in step_buckets:
-                self._get("txt2img", s, b)
-                self._get("img2img", s, b)
+                for kind in kinds:
+                    self._get(kind, s, b)
         return time.perf_counter() - t0
 
     # -- GenerationBackend interface ------------------------------------------
@@ -122,7 +145,7 @@ class DiffusionBackend:
         ctx = jnp.asarray(self.embed_prompt(prompt), jnp.float32)[None]
         fn = self._get("txt2img", steps, 1)
         out = fn(self.net_params, self.vae_params, ctx,
-                 jnp.int32(seed))
+                 jnp.asarray([seed], jnp.int32))
         return np.asarray(out[0])
 
     def img2img(self, prompt: str, reference: np.ndarray, steps: int,
@@ -131,11 +154,64 @@ class DiffusionBackend:
         fn = self._get("img2img", steps, 1)
         out = fn(self.net_params, self.vae_params,
                  jnp.asarray(reference, jnp.float32)[None], ctx,
-                 jnp.int32(seed))
+                 jnp.asarray([seed], jnp.int32))
         return np.asarray(out[0])
 
+    # -- batched entry points --------------------------------------------------
+
+    @staticmethod
+    def _bucket(n: int) -> int:
+        """Pad a group to the next power-of-two AOT bucket so a handful of
+        compiled programs covers every batch size."""
+        return next_pow2(n)
+
+    def _pad_ctx_seeds(self, prompts: Sequence[str], seeds: Sequence[int],
+                       bucket: int):
+        ctx = np.stack([np.asarray(self.embed_prompt(p), np.float32)
+                        for p in prompts])
+        pad = bucket - len(prompts)
+        if pad:
+            ctx = np.concatenate([ctx, np.repeat(ctx[-1:], pad, axis=0)])
+        seeds_arr = np.asarray(list(seeds) + [0] * pad, np.int32)
+        return jnp.asarray(ctx), jnp.asarray(seeds_arr)
+
+    def txt2img_batch(self, prompts: Sequence[str], steps: int,
+                      seeds: Sequence[int]) -> np.ndarray:
+        """Batched text-to-image: one padded AOT call for the whole group.
+        Element i equals ``txt2img(prompts[i], steps, seeds[i])`` up to XLA
+        batching numerics (identical noise trajectories by construction)."""
+        n = len(prompts)
+        if n == 0:
+            res = self.vae_cfg.downsample * self.net_cfg.img_res
+            return np.zeros((0, res, res, 3), np.float32)
+        bucket = self._bucket(n)
+        ctx, seeds_arr = self._pad_ctx_seeds(prompts, seeds, bucket)
+        fn = self._get("txt2img", steps, bucket)
+        out = fn(self.net_params, self.vae_params, ctx, seeds_arr)
+        return np.asarray(out[:n])
+
+    def img2img_batch(self, prompts: Sequence[str], references: np.ndarray,
+                      steps: int, seeds: Sequence[int]) -> np.ndarray:
+        """Batched SDEdit img2img over stacked references (B, H, W, 3)."""
+        n = len(prompts)
+        if n == 0:
+            res = self.vae_cfg.downsample * self.net_cfg.img_res
+            return np.zeros((0, res, res, 3), np.float32)
+        bucket = self._bucket(n)
+        ctx, seeds_arr = self._pad_ctx_seeds(prompts, seeds, bucket)
+        refs = np.asarray(references, np.float32)
+        pad = bucket - n
+        if pad:
+            refs = np.concatenate([refs, np.repeat(refs[-1:], pad, axis=0)])
+        fn = self._get("img2img", steps, bucket)
+        out = fn(self.net_params, self.vae_params, jnp.asarray(refs), ctx,
+                 seeds_arr)
+        return np.asarray(out[:n])
+
     def as_generation_backend(self) -> GenerationBackend:
-        return GenerationBackend(txt2img=self.txt2img, img2img=self.img2img)
+        return GenerationBackend(txt2img=self.txt2img, img2img=self.img2img,
+                                 txt2img_batch=self.txt2img_batch,
+                                 img2img_batch=self.img2img_batch)
 
 
 def _to_sds(x):
@@ -165,8 +241,10 @@ class Completed:
 
 
 class ServingEngine:
-    """Asynchronous-queue semantics (paper §V "asynchronous task queue"),
-    processed in submission order with micro-batching by route."""
+    """Asynchronous-queue semantics (paper §V "asynchronous task queue"):
+    the queue drains in submission order through ``CacheGenius.serve_batch``
+    in micro-batches of ``max_batch``, so retrieval scans and same-route
+    denoiser calls amortise across queued requests."""
 
     def __init__(self, system: CacheGenius, *, max_batch: int = 8):
         self.system = system
@@ -186,11 +264,13 @@ class ServingEngine:
         while self.queue:
             batch, self.queue = (self.queue[: self.max_batch],
                                  self.queue[self.max_batch:])
-            for req in batch:
-                res = self.system.serve(req.prompt, seed=req.seed,
-                                        quality_tier=req.quality_tier)
-                out.append(Completed(req, res,
-                                     queue_delay=self._clock - req.submitted_at))
+            results = self.system.serve_batch(
+                [r.prompt for r in batch],
+                seeds=[r.seed for r in batch],
+                quality_tiers=[r.quality_tier for r in batch])
+            out.extend(Completed(req, res,
+                                 queue_delay=self._clock - req.submitted_at)
+                       for req, res in zip(batch, results))
         self.completed.extend(out)
         return out
 

@@ -91,6 +91,23 @@ def round_up(a: int, b: int) -> int:
     return ceil_div(a, b) * b
 
 
+def l2n(x, axis: int = -1):
+    """L2-normalise along ``axis`` with the project-wide 1e-12 floor."""
+    x = np.asarray(x, np.float32)
+    n = np.linalg.norm(x, axis=axis, keepdims=True)
+    return x / np.maximum(n, 1e-12)
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (>= 1).  The batched serving path pads
+    query blocks and generation groups to these buckets so a handful of
+    compiled shapes covers every micro-batch size."""
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
 def stable_hash(s: str, mod: int) -> int:
     """Deterministic (process-independent) string hash into [0, mod)."""
     h = 1469598103934665603  # FNV-1a 64-bit

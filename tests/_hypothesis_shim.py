@@ -1,0 +1,133 @@
+"""Minimal stand-in for `hypothesis` when it is not installed.
+
+The tier-1 suite must collect and run inside the offline container, which
+ships no `hypothesis`.  This shim implements exactly the surface the test
+modules use — ``@settings(max_examples=..., deadline=...)``, ``@given`` with
+positional or keyword strategies, and the handful of strategies below —
+driven by seeded pseudo-random examples (deterministic per test function).
+
+It is NOT a replacement for real property testing: there is no shrinking,
+no example database, and only light edge-case bias.  When the real
+`hypothesis` is importable, test modules prefer it (see the try/except at
+their import sites).
+"""
+from __future__ import annotations
+
+import hashlib
+import random
+
+
+class Strategy:
+    """A strategy is just a seeded example generator."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+# Small deterministic character pools per unicode category — enough to
+# exercise tokenizer/text properties without a full unicodedata scan.
+_CATEGORY_POOLS = {
+    "Ll": "abcdefghijklmnopqrstuvwxyzßàéñαω",
+    "Zs": "    ",
+}
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (imported ``as st``)."""
+
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 0) -> Strategy:
+        return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float = 0.0, max_value: float = 1.0) -> Strategy:
+        def draw(rng):
+            roll = rng.random()
+            if roll < 0.05:        # bias toward the boundary values
+                return float(min_value)
+            if roll < 0.10:
+                return float(max_value)
+            return min_value + rng.random() * (max_value - min_value)
+        return Strategy(draw)
+
+    @staticmethod
+    def sampled_from(elements) -> Strategy:
+        pool = list(elements)
+        return Strategy(lambda rng: pool[rng.randrange(len(pool))])
+
+    @staticmethod
+    def characters(whitelist_categories=()) -> Strategy:
+        pool = "".join(_CATEGORY_POOLS.get(c, "") for c in whitelist_categories)
+        pool = pool or "abcdefghijklmnopqrstuvwxyz"
+        return Strategy(lambda rng: pool[rng.randrange(len(pool))])
+
+    @staticmethod
+    def text(alphabet=None, min_size: int = 0, max_size: int = 10) -> Strategy:
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            if alphabet is None:
+                return "".join(chr(rng.randint(97, 122)) for _ in range(n))
+            if isinstance(alphabet, Strategy):
+                return "".join(alphabet.example(rng) for _ in range(n))
+            return "".join(alphabet[rng.randrange(len(alphabet))]
+                           for _ in range(n))
+        return Strategy(draw)
+
+    @staticmethod
+    def lists(elements: Strategy, min_size: int = 0, max_size: int = 10,
+              unique: bool = False) -> Strategy:
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            if not unique:
+                return [elements.example(rng) for _ in range(n)]
+            out, seen, tries = [], set(), 0
+            while len(out) < n and tries < 50 * (n + 1):
+                v = elements.example(rng)
+                tries += 1
+                if v not in seen:
+                    seen.add(v)
+                    out.append(v)
+            return out
+        return Strategy(draw)
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    """Records max_examples on the (possibly already @given-wrapped) test."""
+
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Runs the test once per example with values drawn from the strategies.
+
+    The RNG seed derives from the test's qualified name, so example streams
+    are stable across runs and processes (no flaky property tests).
+    """
+
+    def deco(fn):
+        def wrapper():
+            n = getattr(wrapper, "_shim_max_examples", 20)
+            digest = hashlib.sha256(fn.__qualname__.encode()).hexdigest()
+            rng = random.Random(int(digest[:16], 16))
+            for _ in range(n):
+                drawn = [s.example(rng) for s in arg_strategies]
+                drawn_kw = {k: s.example(rng) for k, s in kw_strategies.items()}
+                fn(*drawn, **drawn_kw)
+        # NOT functools.wraps: copying __wrapped__ would make pytest
+        # introspect the original signature and hunt fixtures named after
+        # the strategy parameters.  The test takes no fixtures.
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__dict__.update(getattr(fn, "__dict__", {}))
+        return wrapper
+
+    return deco

@@ -4,8 +4,11 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # offline container: seeded-random shim
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.kmeans import cluster_sizes, kmeans_assign, kmeans_fit
 from repro.core.lcu import (FIFOPolicy, LCUPolicy, LFUPolicy, LRUPolicy,
@@ -58,6 +61,32 @@ def test_vdb_overwrite_oldest_when_full():
     db.add(b, b, np.array([100, 101]), t=1.0)
     assert db.size == 4
     assert set([100, 101]).issubset(set(db.payload_ids[db.valid].tolist()))
+
+
+def test_vdb_overwrite_targets_exactly_the_oldest():
+    """FIFO pressure valve: when full, inserts overwrite the entries with
+    the OLDEST insert_time, never newer ones."""
+    rng = np.random.default_rng(12)
+    db = VectorDB(dim=8, capacity=4)
+    for i in range(4):                       # distinct insert times 0..3
+        v = _unit(rng, 1, 8)
+        db.add(v, v, np.array([i]), t=float(i))
+    nv = _unit(rng, 2, 8)
+    db.add(nv, nv, np.array([100, 101]), t=10.0)
+    alive = set(db.payload_ids[db.valid].tolist())
+    assert alive == {2, 3, 100, 101}         # payloads 0 and 1 (oldest) gone
+    assert db.size == 4
+
+
+def test_vdb_add_batch_larger_than_capacity():
+    """A single insert bigger than the slab keeps size == capacity and the
+    newest entries win the collided slots."""
+    rng = np.random.default_rng(13)
+    db = VectorDB(dim=8, capacity=4)
+    v = _unit(rng, 6, 8)
+    db.add(v, v, np.arange(6), t=0.0)
+    assert db.size == 4
+    assert set(db.payload_ids[db.valid].tolist()) == {2, 3, 4, 5}
 
 
 def test_vdb_evict_returns_payloads():
@@ -267,6 +296,49 @@ def test_policies_always_reach_capacity(seed, cmax, policy):
         assert after == cmax
         n_evicted = sum(len(v) for v in evicted.values())
         assert n_evicted == before - cmax
+
+
+def test_scheduler_invalidate_payloads_drops_history_entries():
+    rng = np.random.default_rng(14)
+    sched = RequestScheduler(nodes=[NodeInfo(0)])
+    vecs = _unit(rng, 3, 512)
+    for i, v in enumerate(vecs):
+        sched.record_result(v, payload_id=100 + i)
+    sched.invalidate_payloads([101])
+    assert sched._hist_payloads == [100, 102]
+    assert sched._hist_vecs.shape[0] == 2
+    # the evicted entry no longer fast-paths; the survivors still do
+    assert sched._history_lookup(vecs[1]) is None
+    assert sched._history_lookup(vecs[0]) == 100
+    assert sched._history_lookup(vecs[2]) == 102
+
+
+def test_maintain_keeps_history_cache_consistent():
+    """CacheGenius.maintain (Algorithm 2 + §IV-G sync deletion): after an
+    eviction sweep, every surviving history entry must still resolve in the
+    blob store, and evicted payloads must be gone from the history cache —
+    otherwise a later near-duplicate prompt would dereference a deleted
+    image."""
+    from repro.launch.serve import build_system
+    from repro.core.trace import RequestTrace
+
+    system, _, _, _ = build_system(n_nodes=2, corpus_n=40,
+                                   capacity_per_node=40, seed=0)
+    system.maintenance_interval = 10 ** 9          # manual maintain only
+    reqs = list(RequestTrace(seed=4).generate(40))
+    for i, r in enumerate(reqs):
+        system.serve(r.prompt, seed=i)
+    assert len(system.scheduler._hist_payloads) > 0
+    system.cache_capacity = system.total_size - 10  # force eviction
+    evicted = system.maintain()
+    assert sum(len(v) for v in evicted.values()) >= 10
+    blob_ids = set(system.blob_store._blobs)
+    evicted_ids = {int(p) for v in evicted.values() for p in v}
+    assert not (set(system.scheduler._hist_payloads) & evicted_ids)
+    assert all(p in blob_ids for p in system.scheduler._hist_payloads)
+    # replaying the whole trace must not dereference a deleted blob
+    for i, r in enumerate(reqs):
+        system.serve(r.prompt, seed=1000 + i)
 
 
 def test_blob_store_consistency():

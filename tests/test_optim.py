@@ -6,8 +6,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # offline container: seeded-random shim
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.optim.adafactor import (AdafactorConfig, adafactor_init,
                                    adafactor_update)

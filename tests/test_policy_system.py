@@ -4,8 +4,11 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # offline container: seeded-random shim
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.latency_model import CostModel, LatencyModel
 from repro.core.policy import GenerationPolicy, Route, select_reference
