@@ -431,7 +431,7 @@ def run_cachegenius(stack: TrainedStack, requests, *, n_nodes=4,
         capacity_per_node=capacity_per_node, policy=policy,
         eviction=eviction, use_scheduler=use_scheduler,
         use_prompt_optimizer=use_prompt_optimizer,
-        backend=stack.backend().as_generation_backend())
+        backend=stack.backend())     # DiffusionBackend IS a GenerationBackend
     out_imgs, lats, scores, steps_used, prompts = [], [], [], [], []
     for i, prompt in enumerate(requests):
         r = system.serve(prompt, seed=i)
@@ -478,7 +478,7 @@ def run_serving_throughput(stack: TrainedStack, *, n_requests: int = 96,
         policy = GenerationPolicy(steps_full=steps_full, steps_ref=steps_ref)
         system, _, _, _ = build_system(
             n_nodes=2, corpus_n=150, capacity_per_node=150, policy=policy,
-            backend=dbe.as_generation_backend())
+            backend=dbe)
         engine = ServingEngine(system, max_batch=bs)
         # groups of any size n <= bs pad to next_pow2(n), so precompile
         # every pow2 up to AND INCLUDING the bucket covering bs; each

@@ -368,7 +368,7 @@ def fig19_lcu(n_requests: int = 400, updates: int = 5) -> Dict:
         system, _, _, _ = build_system(
             n_nodes=4, corpus_n=len(stack.corpus_images),
             capacity_per_node=60, eviction=policy,
-            backend=stack.backend().as_generation_backend())
+            backend=stack.backend())
         system.cache_capacity = 120           # tight: eviction is binding
         system.maintenance_interval = n_requests // updates
         hit_curve = []

@@ -30,6 +30,10 @@ def main() -> None:
     st = system.stats
     print(f"  routes={st.route_counts}  hit_rate={st.hit_rate:.2f}  "
           f"mean_latency={np.mean(st.latencies):.3f}s")
+    print(f"  wall: p50={np.percentile(st.wall_latencies, 50) * 1e3:.1f}ms "
+          f"p95={np.percentile(st.wall_latencies, 95) * 1e3:.1f}ms "
+          f"(batch-amortised over {len(st.batch_wall_latencies)} "
+          f"micro-batches)")
 
     print("phase 2: node 2 (RTX 3090) fails — traffic reroutes")
     engine.fail_node(2)

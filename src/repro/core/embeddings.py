@@ -138,18 +138,33 @@ class ProxyClipEmbedder:
     def clip_score(self, txt_vec: np.ndarray, img_vec: np.ndarray) -> float:
         """Raw cosine clipped to [0, 1] — the paper's CLIPScore is 100·cos;
         we keep [0,1] so Eq. 7 thresholds (0.4/0.5) compare directly."""
-        return float(np.clip(txt_vec @ img_vec, 0.0, 1.0))
+        return float(self.score_candidates(txt_vec,
+                                           np.asarray(img_vec)[None])[0][0])
 
     def pick_score(self, txt_vec: np.ndarray, img_vec: np.ndarray,
                    image: Optional[np.ndarray] = None) -> float:
         """Preference proxy: prompt alignment blended with closeness to the
         corpus aesthetic anchor (stands in for the learned PickScore)."""
-        align = np.clip(txt_vec @ img_vec, 0.0, 1.0)
-        if self._anchor is not None:
-            aesthetic = np.clip(img_vec @ self._anchor, 0.0, 1.0)
+        return float(self.score_candidates(txt_vec,
+                                           np.asarray(img_vec)[None])[1][0])
+
+    def score_candidates(self, txt_vec: np.ndarray, img_vecs: np.ndarray,
+                         ) -> tuple:
+        """Vectorised serve-path scoring: CLIPScore and PickScore for a
+        whole candidate set in one matmul (ROADMAP: batched composite
+        scoring).  Returns ``(clip_scores, pick_scores)``, each ``(K,)``.
+        This is the single home of the Eq. 7 score math — the scalar
+        ``clip_score`` / ``pick_score`` entry points are K=1 wrappers."""
+        img_vecs = np.atleast_2d(np.asarray(img_vecs, np.float32))
+        txt_vec = np.asarray(txt_vec, np.float32)
+        align = np.clip(img_vecs @ txt_vec, 0.0, 1.0)
+        anchor = getattr(self, "_anchor", None)
+        if anchor is not None:
+            aesthetic = np.clip(img_vecs @ anchor, 0.0, 1.0)
         else:
             aesthetic = align
-        return float(np.clip(0.8 * align + 0.2 * aesthetic, 0.0, 1.0))
+        pick = np.clip(0.8 * align + 0.2 * aesthetic, 0.0, 1.0)
+        return align, pick
 
 
 class BertProxyEmbedder:
@@ -207,6 +222,7 @@ class BertProxyEmbedder:
 
     clip_score = ProxyClipEmbedder.clip_score
     pick_score = ProxyClipEmbedder.pick_score
+    score_candidates = ProxyClipEmbedder.score_candidates
 
 
 class TowerEmbedder:
@@ -232,3 +248,4 @@ class TowerEmbedder:
 
     clip_score = ProxyClipEmbedder.clip_score
     pick_score = ProxyClipEmbedder.pick_score
+    score_candidates = ProxyClipEmbedder.score_candidates

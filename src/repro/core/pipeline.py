@@ -1,0 +1,508 @@
+"""Staged serving pipeline — the Fig. 5 request path as explicit stages.
+
+Every request batch flows through the same eight named, batch-first stages:
+
+    Embed -> Schedule -> Retrieve -> Score -> Plan -> Generate
+          -> Archive -> Finish
+
+with a typed :class:`RequestState` carried per request (prompt, embedding,
+schedule decision, retrieval rows, :class:`Plan`, image, result).  This is
+the ONLY request path: ``CacheGenius.serve`` is a batch of one, so the
+sequential and batched behaviours agree by construction.
+
+Stage contracts (each stage sees the whole micro-batch):
+
+* **Embed**     — prompt optimisation + ONE ``embed_text`` call.
+* **Schedule**  — ONE ``RequestScheduler.schedule_batch`` (single history
+  matmul, single node-representation similarity).
+* **Retrieve**  — ONE ``VectorDB.search_batch`` per node touched.
+* **Score**     — composite Eq. 7 scoring of every request's candidate set
+  via ``Embedder.score_candidates`` — one vectorised matmul per request,
+  never per-candidate Python ``clip_score``/``pick_score`` calls; lazily
+  evaluated so requests the Plan stage coalesces never pay for it.
+* **Plan**      — Algorithm 1 routing in submission order, coalescing
+  near-duplicates of in-flight batch members onto one generation.
+* **Generate**  — denoiser calls grouped by (node, workflow, steps) and
+  issued through the batch-first :class:`GenerationBackend` protocol.
+* **Archive**   — blob-store put + VDB insert in submission order.
+* **Finish**    — stats, Eq. 8 latency, maintenance, ``ServeResult``.
+
+Semantics (pinned by the parity tests): scheduling and retrieval see the
+cache state at batch entry (snapshot), archives land after generation in
+submission order, and a batch of one is exactly the sequential loop.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.policy import Route
+from repro.core.scheduler import ScheduleDecision
+from repro.utils import l2n, stable_hash
+
+
+# ---------------------------------------------------------------------------
+# generation backend — batch-first protocol
+# ---------------------------------------------------------------------------
+
+
+class GenerationBackend:
+    """Batch-first generation protocol.
+
+    Subclasses implement the two REQUIRED batched entry points:
+
+    ``txt2img_batch(prompts, steps, seeds) -> (B, H, W, 3)``
+        One denoiser call for a whole same-step group.
+    ``img2img_batch(prompts, references, steps, seeds) -> (B, H, W, 3)``
+        Batched SDEdit over stacked references ``(B, H, W, 3)``.
+
+    The scalar ``txt2img`` / ``img2img`` entry points derive automatically
+    as a batch of one — override them only when a dedicated scalar path is
+    cheaper (``DiffusionBackend`` does, to skip the batch plumbing).  A
+    subclass that overrides ONLY the scalar methods (the old per-request
+    surface) still works: the batched entry points fall back to a
+    per-request loop over them.
+
+    Migration note for pre-redesign callers: ``GenerationBackend`` used to
+    be a dataclass of four optional callables.  Constructing
+    ``GenerationBackend(txt2img=f, img2img=g, ...)`` still works — the
+    callables are wrapped (see :class:`CallableBackend`), with missing
+    batch callables falling back to a per-request loop, exactly the old
+    serve-path fallback.
+    """
+
+    # legacy (txt2img, img2img, txt2img_batch, img2img_batch) callables;
+    # the class-level default covers subclasses that skip __init__
+    _fns: Tuple = (None, None, None, None)
+
+    def __init__(self, txt2img=None, img2img=None, txt2img_batch=None,
+                 img2img_batch=None):
+        self._fns = (txt2img, img2img, txt2img_batch, img2img_batch)
+
+    # -- required batched surface -------------------------------------------
+
+    def txt2img_batch(self, prompts: Sequence[str], steps: int,
+                      seeds: Sequence[int]) -> np.ndarray:
+        fn_scalar, _, fn_batch, _ = self._fns
+        if fn_batch is not None:
+            return np.asarray(fn_batch(prompts, steps, seeds))
+        if fn_scalar is None and type(self).txt2img is not \
+                GenerationBackend.txt2img:
+            # subclass migrated only the scalar surface: loop over it
+            fn_scalar = self.txt2img
+        if fn_scalar is not None:
+            return np.stack([np.asarray(fn_scalar(p, steps, s))
+                             for p, s in zip(prompts, seeds)])
+        raise NotImplementedError(
+            "GenerationBackend subclasses must implement txt2img_batch")
+
+    def img2img_batch(self, prompts: Sequence[str], references: np.ndarray,
+                      steps: int, seeds: Sequence[int]) -> np.ndarray:
+        _, fn_scalar, _, fn_batch = self._fns
+        if fn_batch is not None:
+            return np.asarray(fn_batch(prompts, references, steps, seeds))
+        if fn_scalar is None and type(self).img2img is not \
+                GenerationBackend.img2img:
+            fn_scalar = self.img2img
+        if fn_scalar is not None:
+            return np.stack([np.asarray(fn_scalar(p, r, steps, s))
+                             for p, r, s in zip(prompts, references, seeds)])
+        raise NotImplementedError(
+            "GenerationBackend subclasses must implement img2img_batch")
+
+    # -- derived scalar surface ---------------------------------------------
+
+    def txt2img(self, prompt: str, steps: int, seed: int) -> np.ndarray:
+        fn_scalar = self._fns[0]
+        if fn_scalar is not None:
+            return np.asarray(fn_scalar(prompt, steps, seed))
+        return np.asarray(self.txt2img_batch([prompt], steps, [seed]))[0]
+
+    def img2img(self, prompt: str, reference: np.ndarray, steps: int,
+                seed: int) -> np.ndarray:
+        fn_scalar = self._fns[1]
+        if fn_scalar is not None:
+            return np.asarray(fn_scalar(prompt, reference, steps, seed))
+        return np.asarray(self.img2img_batch(
+            [prompt], np.asarray(reference)[None], steps, [seed]))[0]
+
+
+class CallableBackend(GenerationBackend):
+    """Adapter: legacy per-request callables (plus optional batch callables)
+    wrapped into the batch-first protocol.  Identical to constructing
+    ``GenerationBackend`` with callables directly; the explicit name marks
+    migration sites."""
+
+
+# ---------------------------------------------------------------------------
+# per-request state
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Plan:
+    """Typed per-request execution plan (replaces the old anonymous dicts).
+
+    ``kind`` is one of:
+
+    * ``"alias"``   — coalesce onto in-flight batch member ``target``;
+    * ``"history"`` — historical-query fast path, ``image`` already fetched;
+    * ``"cached"``  — Algorithm 1 HIT_RETURN, ``image`` already fetched;
+    * ``"gen"``     — run the denoiser (txt2img, or img2img when ``ref``
+      is set); ``fast`` marks the quality-priority fast path.
+    """
+
+    kind: str
+    node: int = -1
+    route: Optional[Route] = None
+    steps: int = 0
+    score: float = 0.0
+    fast: Optional[str] = None
+    ref: Optional[np.ndarray] = None
+    target: int = -1
+    image: Optional[np.ndarray] = None
+
+
+@dataclass
+class RequestState:
+    """One request's state as it flows through the stages."""
+
+    index: int                 # position in the micro-batch
+    raw_prompt: str
+    prompt: str                # optimised prompt (Generate conditions on it)
+    seed: int
+    quality_tier: bool
+    clock: float               # logical arrival tick
+    pkey: int = 0              # stable prompt hash (priority fast path)
+    pvec: Optional[np.ndarray] = None    # text embedding
+    qvec: Optional[np.ndarray] = None    # L2-normalised pvec
+    decision: Optional[ScheduleDecision] = None
+    ret_scores: np.ndarray = field(default_factory=lambda: np.empty(0))
+    ret_slots: np.ndarray = field(
+        default_factory=lambda: np.empty(0, np.int64))
+    best_slot: int = -1
+    best_score: float = -1.0
+    score_thunk: Optional[Callable[[], None]] = None
+    plan: Optional[Plan] = None
+    image: Optional[np.ndarray] = None
+    result: Optional[object] = None      # ServeResult (set by Finish)
+
+
+@dataclass
+class BatchContext:
+    """Shared per-micro-batch scratch handed to every stage."""
+
+    system: object             # CacheGenius
+    states: List[RequestState]
+    t_wall0: float
+    pvecs: Optional[np.ndarray] = None   # (B, 512) stacked text embeddings
+
+
+# ---------------------------------------------------------------------------
+# stages
+# ---------------------------------------------------------------------------
+
+
+class EmbedStage:
+    name = "Embed"
+
+    def run(self, ctx: BatchContext) -> None:
+        system = ctx.system
+        raw = [s.raw_prompt for s in ctx.states]
+        if system.use_prompt_optimizer:
+            for s in ctx.states:
+                s.prompt = system.prompt_optimizer.optimize(s.raw_prompt)
+        ctx.pvecs = system.embedder.embed_text(raw)     # one batched call
+        qn = l2n(ctx.pvecs)
+        for s, pv, qv in zip(ctx.states, ctx.pvecs, qn):
+            s.pvec = pv
+            s.qvec = qv
+            s.pkey = stable_hash(s.raw_prompt, 1 << 62)
+
+
+class ScheduleStage:
+    name = "Schedule"
+
+    def run(self, ctx: BatchContext) -> None:
+        system = ctx.system
+        if system.use_scheduler:
+            decisions = system.scheduler.schedule_batch(
+                ctx.pvecs, system.dbs,
+                quality_tiers=[s.quality_tier for s in ctx.states],
+                prompt_keys=[s.pkey for s in ctx.states])
+        else:
+            decisions = [ScheduleDecision(node=int(s.clock) % len(system.dbs))
+                         for s in ctx.states]
+        for s, d in zip(ctx.states, decisions):
+            s.decision = d
+
+
+class RetrieveStage:
+    name = "Retrieve"
+
+    def run(self, ctx: BatchContext) -> None:
+        system = ctx.system
+        by_node: Dict[int, List[RequestState]] = {}
+        for s in ctx.states:
+            if s.decision.fast_path is None:
+                by_node.setdefault(s.decision.node, []).append(s)
+        for node, members in by_node.items():
+            idxs = [m.index for m in members]
+            rows = system.dbs[node].search_batch(ctx.pvecs[idxs], system.topk)
+            for m, (scores, slots) in zip(members, rows):
+                m.ret_scores, m.ret_slots = scores, slots
+
+
+class ScoreStage:
+    """Attach a lazy, vectorised Eq. 7 scorer to every retrieval-path
+    request.  Evaluation is ONE ``score_candidates`` matmul per request —
+    never per-candidate Python ``clip_score``/``pick_score`` calls — and
+    is deferred to the Plan walk: whether a request coalesces onto an
+    in-flight batch member is only decidable there, and coalesced
+    requests must not pay for scoring (the pre-pipeline loop checked
+    dedup before scoring too).  The candidate snapshot is unchanged by
+    the deferral: Plan only touches access stats, archives land later."""
+
+    name = "Score"
+
+    def run(self, ctx: BatchContext) -> None:
+        system = ctx.system
+        score_fn = getattr(system.embedder, "score_candidates", None)
+        for s in ctx.states:
+            if s.decision.fast_path is not None or len(s.ret_slots) == 0:
+                continue
+            s.score_thunk = self._make_thunk(system, s, score_fn)
+
+    @staticmethod
+    def _make_thunk(system, s: RequestState, score_fn):
+        def evaluate() -> None:
+            db = system.dbs[s.decision.node]
+            ivecs = db.img_vecs[s.ret_slots]
+            if score_fn is not None:
+                clips, picks = score_fn(s.pvec, ivecs)
+            else:   # custom embedders without the vectorised entry point
+                clips = np.array([system.embedder.clip_score(s.pvec, v)
+                                  for v in ivecs])
+                picks = np.array([system.embedder.pick_score(s.pvec, v)
+                                  for v in ivecs])
+            comp = system.policy.composite_scores(clips, picks)
+            j = int(np.argmax(comp))
+            s.best_slot = int(s.ret_slots[j])
+            s.best_score = float(comp[j])
+            s.score_thunk = None
+
+        return evaluate
+
+
+class PlanStage:
+    """Algorithm 1 routing in submission order.  Near-duplicates of
+    in-flight (will-archive) batch members coalesce onto that member's
+    generation — exactly the history fast path the sequential loop takes
+    once the earlier result is recorded."""
+
+    name = "Plan"
+
+    def run(self, ctx: BatchContext) -> None:
+        system = ctx.system
+        pending_vecs: List[np.ndarray] = []
+        pending_req: List[int] = []
+        for s in ctx.states:
+            d = s.decision
+            pend_sim, pend_j = -np.inf, -1
+            if pending_vecs:
+                sims = np.stack(pending_vecs) @ s.qvec
+                pj = int(np.argmax(sims))
+                pend_sim, pend_j = float(sims[pj]), pending_req[pj]
+            if d.fast_path == "history":
+                if pend_sim > d.match_score:   # later history entry wins
+                    s.plan = Plan(kind="alias", target=pend_j)
+                else:
+                    s.plan = Plan(kind="history", image=system.blob_store.get(
+                        d.history_payload))
+                continue
+            if (system.use_scheduler
+                    and pend_sim >= system.scheduler.dedup_threshold):
+                # sequential serve would history-hit the in-flight record
+                system.scheduler.count_history_hit()
+                system.scheduler.uncount_prompt(s.pkey)
+                s.plan = Plan(kind="alias", target=pend_j)
+                continue
+            node = d.node
+            if d.fast_path == "priority":
+                s.plan = Plan(kind="gen", node=node, route=Route.TXT2IMG,
+                              steps=system.policy.steps_full,
+                              fast="priority", score=0.0)
+                pending_vecs.append(s.qvec)
+                pending_req.append(s.index)
+                continue
+            if s.score_thunk is not None:
+                s.score_thunk()
+            db = system.dbs[node]
+            route = (system.policy.route(s.best_score) if s.best_slot >= 0
+                     else Route.TXT2IMG)
+            steps = system.policy.steps_for(route)
+            if route is Route.HIT_RETURN:
+                db.mark_access(np.array([s.best_slot]), s.clock)
+                s.plan = Plan(kind="cached", node=node, score=s.best_score,
+                              image=system.blob_store.get(
+                                  int(db.payload_ids[s.best_slot])))
+            elif route is Route.IMG2IMG:
+                db.mark_access(np.array([s.best_slot]), s.clock)
+                s.plan = Plan(kind="gen", node=node, route=route, steps=steps,
+                              score=s.best_score,
+                              ref=system.blob_store.get(
+                                  int(db.payload_ids[s.best_slot])))
+                pending_vecs.append(s.qvec)
+                pending_req.append(s.index)
+            else:
+                s.plan = Plan(kind="gen", node=node, route=route, steps=steps,
+                              score=s.best_score)
+                pending_vecs.append(s.qvec)
+                pending_req.append(s.index)
+
+
+class GenerateStage:
+    """One padded backend call per (node, workflow, steps) group."""
+
+    name = "Generate"
+
+    def run(self, ctx: BatchContext) -> None:
+        system = ctx.system
+        txt_groups: Dict[tuple, List[RequestState]] = {}
+        img_groups: Dict[tuple, List[RequestState]] = {}
+        for s in ctx.states:
+            if s.plan.kind != "gen":
+                continue
+            grp = img_groups if s.plan.ref is not None else txt_groups
+            grp.setdefault((s.plan.node, s.plan.steps), []).append(s)
+        for (node, steps), members in txt_groups.items():
+            out = np.asarray(system.backend.txt2img_batch(
+                [m.prompt for m in members], steps,
+                [m.seed for m in members]))
+            for j, m in enumerate(members):
+                m.image = np.asarray(out[j])
+        for (node, steps), members in img_groups.items():
+            refs = np.stack([m.plan.ref for m in members])
+            out = np.asarray(system.backend.img2img_batch(
+                [m.prompt for m in members], refs, steps,
+                [m.seed for m in members]))
+            for j, m in enumerate(members):
+                m.image = np.asarray(out[j])
+
+
+class ArchiveStage:
+    """Blob-store put + VDB insert in submission order (blob ids / history
+    order match the sequential loop exactly)."""
+
+    name = "Archive"
+
+    def run(self, ctx: BatchContext) -> None:
+        system = ctx.system
+        for s in ctx.states:
+            if s.plan.kind == "gen":
+                system._archive(s.raw_prompt, s.pvec, s.image, s.plan.node,
+                                t=s.clock)
+
+
+class FinishStage:
+    """Stats, Eq. 8 latency, periodic maintenance, ``ServeResult``.
+
+    Wall-clock accounting: each request reports the micro-batch's total
+    wall time divided by the batch size (batch-amortised per-request
+    cost); the batch total itself is appended to
+    ``ServeStats.batch_wall_latencies``.  The total is taken AFTER the
+    result loop so maintenance sweeps triggered mid-batch stay inside the
+    measurement; results and stats are back-filled with the final share.
+    """
+
+    name = "Finish"
+
+    def run(self, ctx: BatchContext) -> None:
+        system = ctx.system
+        n = len(ctx.states)
+        wall = 0.0          # back-filled once the batch total is known
+        for s in ctx.states:
+            p = s.plan
+            if p.kind == "alias":
+                s.image = ctx.states[p.target].image
+                s.result = system._finish(
+                    s.image, Route.HIT_RETURN, -1, 1.0, wall,
+                    steps=0, retrieved=False, fast="history")
+            elif p.kind == "history":
+                s.image = p.image
+                s.result = system._finish(
+                    s.image, Route.HIT_RETURN, -1, 1.0, wall,
+                    steps=0, retrieved=False, fast="history")
+            elif p.kind == "gen" and p.fast == "priority":
+                s.result = system._finish(
+                    s.image, Route.TXT2IMG, p.node, 0.0, wall,
+                    steps=p.steps, retrieved=False, fast="priority")
+            else:
+                if (system.stats.requests % system.maintenance_interval
+                        == system.maintenance_interval - 1):
+                    system.maintain()
+                if p.kind == "cached":
+                    s.image = p.image
+                    s.result = system._finish(
+                        s.image, Route.HIT_RETURN, p.node, p.score, wall,
+                        steps=0)
+                else:
+                    s.result = system._finish(
+                        s.image, p.route, p.node, p.score, wall,
+                        steps=p.steps)
+        t_batch = time.perf_counter() - ctx.t_wall0
+        wall = t_batch / n
+        system.stats.batch_wall_latencies.append(t_batch)
+        system.stats.wall_latencies[-n:] = [wall] * n
+        for s in ctx.states:
+            s.result.wall_latency = wall
+
+
+# ---------------------------------------------------------------------------
+# the pipeline
+# ---------------------------------------------------------------------------
+
+
+DEFAULT_STAGES = (EmbedStage, ScheduleStage, RetrieveStage, ScoreStage,
+                  PlanStage, GenerateStage, ArchiveStage, FinishStage)
+
+
+class ServePipeline:
+    """Ordered stage list + the micro-batch driver.
+
+    ``run`` admits the batch (ticks the system clock, builds one
+    :class:`RequestState` per request), pushes the whole batch through
+    every stage in order, and returns the states with ``result`` set.
+    """
+
+    def __init__(self, stages: Optional[Sequence] = None):
+        self.stages = list(stages) if stages is not None else \
+            [cls() for cls in DEFAULT_STAGES]
+
+    @property
+    def stage_names(self) -> List[str]:
+        return [st.name for st in self.stages]
+
+    def run(self, system, prompts: Sequence[str], *,
+            seeds: Optional[Sequence[int]] = None,
+            quality_tiers: Optional[Sequence[bool]] = None,
+            ) -> List[RequestState]:
+        n = len(prompts)
+        if n == 0:
+            return []
+        t0 = time.perf_counter()
+        seeds = list(seeds) if seeds is not None else [0] * n
+        tiers = (list(quality_tiers) if quality_tiers is not None
+                 else [False] * n)
+        states = [RequestState(index=i, raw_prompt=str(p), prompt=str(p),
+                               seed=seeds[i], quality_tier=tiers[i],
+                               clock=system.clock + i + 1)
+                  for i, p in enumerate(prompts)]
+        system.clock += n
+        ctx = BatchContext(system=system, states=states, t_wall0=t0)
+        for stage in self.stages:
+            stage.run(ctx)
+        return states

@@ -36,6 +36,14 @@ class GenerationPolicy:
         """Eq. 7 with both terms mapped to [0,1]; mean keeps S in [0,1]."""
         return 0.5 * (float(clip_score) + float(pick_score))
 
+    def composite_scores(self, clip_scores: np.ndarray,
+                         pick_scores: np.ndarray) -> np.ndarray:
+        """Vectorised Eq. 7 over a candidate set — the serve pipeline's
+        Score stage pairs this with ``Embedder.score_candidates`` so no
+        per-candidate Python call survives on the hot path."""
+        return 0.5 * (np.asarray(clip_scores, np.float64)
+                      + np.asarray(pick_scores, np.float64))
+
     def route(self, score: float) -> Route:
         if score > self.hi:
             return Route.HIT_RETURN

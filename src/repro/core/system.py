@@ -1,49 +1,57 @@
-"""CacheGenius orchestrator — the end-to-end request path of Fig. 5.
+"""CacheGenius orchestrator — one staged, batch-first request path (Fig. 5).
 
-request -> prompt-optimizer -> embedding-generator -> request-scheduler
-        -> VDB dual retrieval on the chosen node -> Algorithm 1 routing
-        -> {return cached | SDEdit img2img (K steps) | txt2img (N steps)}
-        -> archive result to blob store + VDB insert -> periodic LCU sweep
+Every request — sequential or batched — flows through the SAME explicit
+pipeline (``repro.core.pipeline.ServePipeline``):
 
-The denoising backends are injected (``GenerationBackend``) so the same
-orchestrator drives the tiny CPU DiT in benchmarks, the SD1.5-class UNet in
-the examples, and a ShapeDtypeStruct-only stub in the dry-run.
+    Embed -> Schedule -> Retrieve -> Score -> Plan -> Generate
+          -> Archive -> Finish
+
+``serve`` is a batch of one; ``serve_batch`` is the same pipeline over a
+micro-batch, so sequential/batched parity holds by construction.  Per
+request the pipeline carries a typed ``RequestState``:
+
+    index, raw_prompt, prompt (optimised), seed, quality_tier, clock,
+    pkey, pvec/qvec (text embedding), decision (ScheduleDecision),
+    ret_scores/ret_slots (dual-retrieval rows), best_slot/best_score,
+    plan (typed Plan: alias | history | cached | gen), image, result.
+
+Stage map onto the paper: Embed = prompt-optimizer + embedding-generator
+(§IV-B/C), Schedule = request scheduler with history/priority fast paths
+(§IV-E), Retrieve+Score+Plan = dual ANN retrieval and Algorithm 1 routing
+(Eq. 7), Generate = {cached | SDEdit img2img K steps | txt2img N steps},
+Archive = blob store + VDB insert, Finish = Eq. 8 latency/cost accounting
+and the periodic LCU sweep (Algorithm 2).
+
+Backend protocol migration (for external callers of ``GenerationBackend``):
+it is no longer a dataclass of four optional callables but a batch-first
+base class — subclass it and implement ``txt2img_batch`` /
+``img2img_batch``; scalar ``txt2img`` / ``img2img`` derive automatically
+as a batch of one.  Constructing ``GenerationBackend(txt2img=f, ...)``
+with the old callables still works: they are wrapped by the
+``CallableBackend`` adapter (missing batch callables fall back to a
+per-request loop).  ``DiffusionBackend`` now IS a ``GenerationBackend``;
+its ``as_generation_backend()`` survives as a no-op compatibility shim.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.embeddings import ProxyClipEmbedder
 from repro.core.latency_model import CostModel, LatencyModel
 from repro.core.lcu import EvictionPolicy, LCUPolicy
+from repro.core.pipeline import (CallableBackend, GenerationBackend, Plan,
+                                 RequestState, ServePipeline)
 from repro.core.policy import GenerationPolicy, Route
 from repro.core.prompt_optimizer import PromptOptimizer
-from repro.core.scheduler import NodeInfo, RequestScheduler, ScheduleDecision
+from repro.core.scheduler import NodeInfo, RequestScheduler
 from repro.core.storage_classifier import StorageClassifier
 from repro.core.vdb import BlobStore, VectorDB
-from repro.utils import l2n, stable_hash
 
-
-@dataclass
-class GenerationBackend:
-    """txt2img(prompt, steps, seed) / img2img(prompt, reference, steps, seed)
-    both return an (H, W, 3) float image in [-1, 1].
-
-    The optional batched entry points take parallel lists and return a
-    stacked (B, H, W, 3) array; when absent, the batched serve path falls
-    back to a per-request loop (scheduling/retrieval amortisation still
-    applies, only the denoiser runs unbatched)."""
-
-    txt2img: Callable[[str, int, int], np.ndarray]
-    img2img: Callable[[str, np.ndarray, int, int], np.ndarray]
-    txt2img_batch: Optional[Callable[[Sequence[str], int, Sequence[int]],
-                                     np.ndarray]] = None
-    img2img_batch: Optional[Callable[[Sequence[str], np.ndarray, int,
-                                      Sequence[int]], np.ndarray]] = None
+__all__ = ["CacheGenius", "CallableBackend", "GenerationBackend", "Plan",
+           "RequestState", "Route", "ServePipeline", "ServeResult",
+           "ServeStats"]
 
 
 @dataclass
@@ -53,7 +61,7 @@ class ServeResult:
     node: int
     score: float
     latency: float            # Eq. 8 modelled latency
-    wall_latency: float       # measured wall-clock on this host
+    wall_latency: float       # batch-amortised measured wall-clock on this host
     steps: int
     fast_path: Optional[str] = None
 
@@ -63,6 +71,10 @@ class ServeStats:
     route_counts: Dict[str, int] = field(default_factory=dict)
     latencies: List[float] = field(default_factory=list)
     wall_latencies: List[float] = field(default_factory=list)
+    # one entry per served micro-batch: that batch's TOTAL wall-clock.
+    # Per-request ``wall_latencies`` are batch-amortised (total / batch
+    # size), so sum(wall_latencies) ~= sum(batch_wall_latencies).
+    batch_wall_latencies: List[float] = field(default_factory=list)
     scores: List[float] = field(default_factory=list)
     requests: int = 0
     cache_hits: int = 0        # HIT_RETURN + history fast path
@@ -101,7 +113,8 @@ class CacheGenius:
                  maintenance_interval: int = 200,
                  topk: int = 8,
                  use_scheduler: bool = True,
-                 use_prompt_optimizer: bool = True):
+                 use_prompt_optimizer: bool = True,
+                 pipeline: Optional[ServePipeline] = None):
         self.embedder = embedder
         self.dbs = list(dbs)
         self.blob_store = blob_store
@@ -120,6 +133,7 @@ class CacheGenius:
         self.topk = topk
         self.use_scheduler = use_scheduler
         self.use_prompt_optimizer = use_prompt_optimizer
+        self.pipeline = pipeline or ServePipeline()
         self.stats = ServeStats()
         self.clock = 0.0
 
@@ -127,267 +141,42 @@ class CacheGenius:
 
     def serve(self, prompt: str, *, seed: int = 0, quality_tier: bool = False,
               ) -> ServeResult:
-        t_wall0 = time.perf_counter()
-        self.clock += 1.0
-        raw_prompt = prompt
-        if self.use_prompt_optimizer:
-            prompt = self.prompt_optimizer.optimize(prompt)
-        pvec = self.embedder.embed_text([raw_prompt])[0]
-        pkey = stable_hash(raw_prompt, 1 << 62)
-
-        if self.use_scheduler:
-            decision = self.scheduler.schedule(
-                pvec, self.dbs, quality_tier=quality_tier, prompt_key=pkey)
-        else:
-            decision = ScheduleDecision(node=int(self.clock) % len(self.dbs))
-
-        # fast path: historical query cache — reuse the archived image
-        if decision.fast_path == "history":
-            img = self.blob_store.get(decision.history_payload)
-            res = self._finish(img, Route.HIT_RETURN, -1, 1.0, t_wall0,
-                               steps=0, retrieved=False, fast="history")
-            return res
-
-        node = decision.node
-        db = self.dbs[node]
-
-        # quality-priority fast path: forced full-quality txt2img, no retrieval
-        if decision.fast_path == "priority":
-            steps = self.policy.steps_full
-            img = self.backend.txt2img(prompt, steps, seed)
-            self._archive(raw_prompt, pvec, img, node)
-            self.scheduler.complete(node)
-            return self._finish(img, Route.TXT2IMG, node, 0.0, t_wall0,
-                                steps=steps, retrieved=False, fast="priority")
-
-        # dual ANN retrieval + composite scoring (Algorithm 1)
-        scores, slots = db.search(pvec, self.topk)
-        best_slot, best_score = -1, -1.0
-        for sc, sl in zip(scores, slots):
-            ivec = db.img_vecs[sl]
-            clip_s = self.embedder.clip_score(pvec, ivec)
-            pick_s = self.embedder.pick_score(pvec, ivec)
-            s = self.policy.composite_score(clip_s, pick_s)
-            if s > best_score:
-                best_score, best_slot = s, int(sl)
-
-        route = self.policy.route(best_score) if best_slot >= 0 else Route.TXT2IMG
-        steps = self.policy.steps_for(route)
-
-        if route is Route.HIT_RETURN:
-            db.mark_access(np.array([best_slot]), self.clock)
-            img = self.blob_store.get(int(db.payload_ids[best_slot]))
-        elif route is Route.IMG2IMG:
-            db.mark_access(np.array([best_slot]), self.clock)
-            ref = self.blob_store.get(int(db.payload_ids[best_slot]))
-            img = self.backend.img2img(prompt, ref, steps, seed)
-            self._archive(raw_prompt, pvec, img, node)
-        else:
-            img = self.backend.txt2img(prompt, steps, seed)
-            self._archive(raw_prompt, pvec, img, node)
-
-        self.scheduler.complete(node)
-        if self.stats.requests % self.maintenance_interval == self.maintenance_interval - 1:
-            self.maintain()
-        return self._finish(img, route, node, best_score, t_wall0, steps=steps)
-
-    # ------------------------------------------------------- batched serve
+        """Serve one request: a batch of one through the staged pipeline
+        (pre-pipeline compatibility signature)."""
+        return self.serve_batch([prompt], seeds=[seed],
+                                quality_tiers=[quality_tier])[0]
 
     def serve_batch(self, prompts: Sequence[str], *,
                     seeds: Optional[Sequence[int]] = None,
                     quality_tiers: Optional[Sequence[bool]] = None,
                     ) -> List[ServeResult]:
-        """Serve a micro-batch of requests through one pass of the stack.
+        """Serve a micro-batch through one pass of the staged pipeline.
 
-        Amortisation vs. the sequential loop:
+        Amortisation vs. a request-at-a-time loop (see
+        ``repro.core.pipeline`` for the per-stage contracts):
 
         * ONE ``embed_text`` call for every prompt in the batch;
         * ONE ``RequestScheduler.schedule_batch`` (single history matmul,
           single node-representation similarity);
         * ONE ``VectorDB.search_batch`` per node touched by the batch;
+        * ONE vectorised ``score_candidates`` matmul per request (no
+          per-candidate Python scoring calls);
         * denoiser calls grouped by (node, workflow, steps) and executed
-          as single padded batched backend calls when the backend exposes
-          ``txt2img_batch`` / ``img2img_batch``.
+          as single batched ``GenerationBackend`` calls.
 
         Semantics: scheduling and retrieval see the cache state at batch
         entry (snapshot), and archives land after generation.  Requests
         whose prompt near-duplicates an earlier in-batch request that will
         archive are coalesced onto that request's result — exactly the
         history fast path the sequential loop takes once the earlier
-        result is recorded.  A batched drain therefore matches the
+        result is recorded.  A batched drain therefore matches a
         sequential loop whenever distinct in-batch prompts do not interact
         through freshly archived images (the parity tests pin this on a
         fixed Zipf trace).  Results come back in submission order.
         """
-        n = len(prompts)
-        if n == 0:
-            return []
-        t_wall0 = time.perf_counter()
-        seeds = list(seeds) if seeds is not None else [0] * n
-        tiers = list(quality_tiers) if quality_tiers is not None else [False] * n
-        clocks = [self.clock + i + 1 for i in range(n)]
-        self.clock += n
-        raw = [str(p) for p in prompts]
-        opt = ([self.prompt_optimizer.optimize(p) for p in raw]
-               if self.use_prompt_optimizer else raw)
-        pvecs = self.embedder.embed_text(raw)          # one batched call
-        qn = l2n(pvecs)
-        pkeys = [stable_hash(p, 1 << 62) for p in raw]
-
-        if self.use_scheduler:
-            decisions = self.scheduler.schedule_batch(
-                pvecs, self.dbs, quality_tiers=tiers, prompt_keys=pkeys)
-        else:
-            decisions = [ScheduleDecision(node=int(c) % len(self.dbs))
-                         for c in clocks]
-
-        # one batched VDB scan per node touched by normal-path requests
-        by_node: Dict[int, List[int]] = {}
-        for i, d in enumerate(decisions):
-            if d.fast_path is None:
-                by_node.setdefault(d.node, []).append(i)
-        retrieved: Dict[int, tuple] = {}
-        for node, idxs in by_node.items():
-            rows = self.dbs[node].search_batch(pvecs[idxs], self.topk)
-            for i, r in zip(idxs, rows):
-                retrieved[i] = r
-
-        # in-order planning: route each request, coalescing near-duplicates
-        # of in-flight (will-archive) batch members onto one generation
-        plans: List[dict] = [None] * n  # type: ignore[list-item]
-        pending_vecs: List[np.ndarray] = []
-        pending_req: List[int] = []
-        for i in range(n):
-            d = decisions[i]
-            pend_sim, pend_j = -np.inf, -1
-            if pending_vecs:
-                sims = np.stack(pending_vecs) @ qn[i]
-                pj = int(np.argmax(sims))
-                pend_sim, pend_j = float(sims[pj]), pending_req[pj]
-            if d.fast_path == "history":
-                if pend_sim > d.match_score:  # later history entry wins argmax
-                    plans[i] = {"kind": "alias", "target": pend_j}
-                else:
-                    plans[i] = {"kind": "history",
-                                "image": self.blob_store.get(d.history_payload)}
-                continue
-            if self.use_scheduler and pend_sim >= self.scheduler.dedup_threshold:
-                # sequential serve would history-hit the in-flight record
-                self.scheduler.count_history_hit()
-                self.scheduler.uncount_prompt(pkeys[i])
-                plans[i] = {"kind": "alias", "target": pend_j}
-                continue
-            node = d.node
-            if d.fast_path == "priority":
-                plans[i] = {"kind": "gen", "node": node, "route": Route.TXT2IMG,
-                            "steps": self.policy.steps_full, "fast": "priority",
-                            "score": 0.0, "ref": None}
-                pending_vecs.append(qn[i])
-                pending_req.append(i)
-                continue
-            db = self.dbs[node]
-            scores, slots = retrieved[i]
-            best_slot, best_score = -1, -1.0
-            for sc, sl in zip(scores, slots):
-                ivec = db.img_vecs[sl]
-                clip_s = self.embedder.clip_score(pvecs[i], ivec)
-                pick_s = self.embedder.pick_score(pvecs[i], ivec)
-                s = self.policy.composite_score(clip_s, pick_s)
-                if s > best_score:
-                    best_score, best_slot = s, int(sl)
-            route = (self.policy.route(best_score) if best_slot >= 0
-                     else Route.TXT2IMG)
-            steps = self.policy.steps_for(route)
-            if route is Route.HIT_RETURN:
-                db.mark_access(np.array([best_slot]), clocks[i])
-                plans[i] = {"kind": "cached", "node": node, "score": best_score,
-                            "image": self.blob_store.get(
-                                int(db.payload_ids[best_slot]))}
-            elif route is Route.IMG2IMG:
-                db.mark_access(np.array([best_slot]), clocks[i])
-                plans[i] = {"kind": "gen", "node": node, "route": route,
-                            "steps": steps, "fast": None, "score": best_score,
-                            "ref": self.blob_store.get(
-                                int(db.payload_ids[best_slot]))}
-                pending_vecs.append(qn[i])
-                pending_req.append(i)
-            else:
-                plans[i] = {"kind": "gen", "node": node, "route": route,
-                            "steps": steps, "fast": None, "score": best_score,
-                            "ref": None}
-                pending_vecs.append(qn[i])
-                pending_req.append(i)
-
-        # grouped generation: one padded backend call per (node, kind, steps)
-        images: Dict[int, np.ndarray] = {}
-        txt_groups: Dict[tuple, List[int]] = {}
-        img_groups: Dict[tuple, List[int]] = {}
-        for i in range(n):
-            p = plans[i]
-            if p["kind"] != "gen":
-                continue
-            grp = img_groups if p["ref"] is not None else txt_groups
-            grp.setdefault((p["node"], p["steps"]), []).append(i)
-        for (node, steps), idxs in txt_groups.items():
-            g_prompts = [opt[i] for i in idxs]
-            g_seeds = [seeds[i] for i in idxs]
-            if self.backend.txt2img_batch is not None:
-                out = np.asarray(self.backend.txt2img_batch(
-                    g_prompts, steps, g_seeds))
-                for j, i in enumerate(idxs):
-                    images[i] = np.asarray(out[j])
-            else:
-                for i in idxs:
-                    images[i] = self.backend.txt2img(opt[i], steps, seeds[i])
-        for (node, steps), idxs in img_groups.items():
-            refs = np.stack([plans[i]["ref"] for i in idxs])
-            if self.backend.img2img_batch is not None:
-                out = np.asarray(self.backend.img2img_batch(
-                    [opt[i] for i in idxs], refs, steps,
-                    [seeds[i] for i in idxs]))
-                for j, i in enumerate(idxs):
-                    images[i] = np.asarray(out[j])
-            else:
-                for i in idxs:
-                    images[i] = self.backend.img2img(
-                        opt[i], plans[i]["ref"], steps, seeds[i])
-
-        # archive in submission order (blob ids / history order match the
-        # sequential loop exactly)
-        for i in range(n):
-            if plans[i]["kind"] == "gen":
-                self._archive(raw[i], pvecs[i], images[i], plans[i]["node"],
-                              t=clocks[i])
-
-        # finish in submission order: stats, latency model, maintenance
-        results: List[ServeResult] = []
-        for i in range(n):
-            p = plans[i]
-            if p["kind"] == "alias":
-                results.append(self._finish(
-                    images[p["target"]], Route.HIT_RETURN, -1, 1.0, t_wall0,
-                    steps=0, retrieved=False, fast="history"))
-            elif p["kind"] == "history":
-                results.append(self._finish(
-                    p["image"], Route.HIT_RETURN, -1, 1.0, t_wall0,
-                    steps=0, retrieved=False, fast="history"))
-            elif p["kind"] == "gen" and p["fast"] == "priority":
-                results.append(self._finish(
-                    images[i], Route.TXT2IMG, p["node"], 0.0, t_wall0,
-                    steps=p["steps"], retrieved=False, fast="priority"))
-            else:
-                if (self.stats.requests % self.maintenance_interval
-                        == self.maintenance_interval - 1):
-                    self.maintain()
-                if p["kind"] == "cached":
-                    results.append(self._finish(
-                        p["image"], Route.HIT_RETURN, p["node"], p["score"],
-                        t_wall0, steps=0))
-                else:
-                    results.append(self._finish(
-                        images[i], p["route"], p["node"], p["score"],
-                        t_wall0, steps=p["steps"]))
-        return results
+        states = self.pipeline.run(self, prompts, seeds=seeds,
+                                   quality_tiers=quality_tiers)
+        return [s.result for s in states]
 
     # ------------------------------------------------------------- internals
 
@@ -400,7 +189,7 @@ class CacheGenius:
                            self.clock if t is None else t)
         self.scheduler.record_result(pvec, pid)
 
-    def _finish(self, img, route, node, score, t_wall0, *, steps, retrieved=True,
+    def _finish(self, img, route, node, score, wall, *, steps, retrieved=True,
                 fast=None) -> ServeResult:
         speed = (self.scheduler.nodes[node].speed if 0 <= node < len(self.dbs)
                  else max(n.speed for n in self.scheduler.nodes))
@@ -411,7 +200,7 @@ class CacheGenius:
         self.cost_model.charge(max(node, 0), gpu_s,
                                vdb_seconds=self.latency_model.t_retrieve if retrieved else 0.0)
         res = ServeResult(image=img, route=route, node=node, score=score,
-                          latency=lat, wall_latency=time.perf_counter() - t_wall0,
+                          latency=lat, wall_latency=wall,
                           steps=steps, fast_path=fast)
         self.stats.record(res)
         return res

@@ -110,6 +110,38 @@ def test_engine_survives_node_failure():
     assert len(done) == 6
 
 
+def test_fail_node_mid_trace_reroutes_batched_path():
+    """Node failure in the middle of a batched drain sequence: every
+    subsequent request must route off the dead node, and its VDB must
+    never be touched again (no searches, no inserts, no access marks)."""
+    from repro.core.trace import RequestTrace
+
+    system, _, _, _ = build_system(n_nodes=3, corpus_n=120,
+                                   capacity_per_node=120, seed=0)
+    engine = ServingEngine(system, max_batch=8)
+    reqs = list(RequestTrace(seed=1).generate(64))
+    for i, r in enumerate(reqs[:32]):
+        engine.submit(r.prompt, seed=i, quality_tier=r.quality_tier)
+    engine.drain()
+
+    dead = 1
+    engine.fail_node(dead)
+    db = system.dbs[dead]
+    # failure recovery reassigns the dead shard to the survivors
+    assert db.size == 0
+    qc, ac = db.query_count, db.access_count.copy()
+
+    for i, r in enumerate(reqs[32:]):
+        engine.submit(r.prompt, seed=32 + i, quality_tier=r.quality_tier)
+    done = engine.drain()
+    assert len(done) == 32
+    for c in done:
+        assert c.result.node != dead        # history fast path reports -1
+    assert db.query_count == qc             # no retrieval scans
+    assert db.size == 0                     # no archives landed on it
+    np.testing.assert_array_equal(db.access_count, ac)
+
+
 # ---------------------------------------------------------------------------
 # LM response cache
 # ---------------------------------------------------------------------------
@@ -146,3 +178,56 @@ def test_lm_cache_capacity_eviction():
         cache.insert(f"prompt number {i} unique words {i}", f"r{i}")
     assert len(cache._responses) == 3
     assert cache._vecs.shape[0] == 3
+
+
+def test_lm_cache_hit_miss_accounting_and_rate():
+    cache = LMResponseCache(embed=_bow_embed, hit_threshold=0.99)
+    assert cache.hit_rate == 0.0                      # no traffic yet
+    assert cache.lookup("alpha beta gamma") is None   # miss on empty
+    cache.insert("alpha beta gamma", "r0")
+    assert cache.lookup("alpha beta gamma") == "r0"   # hit
+    assert cache.lookup("delta epsilon zeta") is None  # miss below threshold
+    assert (cache.hits, cache.misses) == (1, 2)
+    assert cache.hit_rate == pytest.approx(1 / 3)
+    # inserts never change the accounting
+    cache.insert("delta epsilon zeta", "r1")
+    assert (cache.hits, cache.misses) == (1, 2)
+
+
+def _keyed_embed(table):
+    def embed(text):
+        return table.get(text, np.zeros(next(iter(table.values())).shape,
+                                        np.float32))
+    return embed
+
+
+def test_lm_cache_threshold_boundary_is_inclusive():
+    """The hit test is ``sim >= threshold``: a similarity EXACTLY at the
+    threshold returns the cached response."""
+    table = {"one": np.array([1.0, 0.0], np.float32),
+             "two": np.array([0.0, 1.0], np.float32)}
+    # orthogonal pair: cos = 0.0 == threshold -> hit
+    cache = LMResponseCache(embed=_keyed_embed(table), hit_threshold=0.0)
+    cache.insert("one", "r")
+    assert cache.lookup("two") == "r"
+    # identical pair: cos = 1.0 == threshold -> hit; below -> miss
+    cache = LMResponseCache(embed=_keyed_embed(table), hit_threshold=1.0)
+    cache.insert("one", "r")
+    assert cache.lookup("one") == "r"
+    assert cache.lookup("two") is None
+
+
+def test_lm_cache_capacity_ring_keeps_newest():
+    """The capacity ring drops the OLDEST entries; vectors and responses
+    stay parallel so a surviving hit returns its own response."""
+    dim = 8
+    table = {f"p{i}": np.eye(dim, dtype=np.float32)[i] for i in range(dim)}
+    cache = LMResponseCache(embed=_keyed_embed(table), capacity=3,
+                            hit_threshold=0.99)
+    for i in range(5):
+        cache.insert(f"p{i}", f"r{i}")
+    assert cache._vecs.shape[0] == 3 and len(cache._responses) == 3
+    for i in (0, 1):                      # evicted: oldest two
+        assert cache.lookup(f"p{i}") is None
+    for i in (2, 3, 4):                   # survivors map to THEIR responses
+        assert cache.lookup(f"p{i}") == f"r{i}"
