@@ -48,6 +48,10 @@ LATENT_SCALE = 0.55
 # from the CLI (`benchmarks.run --batch-sizes 1,8,16`).
 BATCH_SIZES: Tuple[int, ...] = (1, 4, 8)
 
+# Offered loads (requests/second on the virtual serving clock) swept by the
+# latency-curve benchmark; overridable via `benchmarks.run --arrival-rates`.
+ARRIVAL_RATES: Tuple[float, ...] = (10.0, 40.0, 160.0)
+
 
 def _vae_cfg():
     return vae_mod.VAEConfig(in_ch=3, base_ch=16, ch_mult=(1, 2), z_ch=4,
@@ -480,26 +484,9 @@ def run_serving_throughput(stack: TrainedStack, *, n_requests: int = 96,
             n_nodes=2, corpus_n=150, capacity_per_node=150, policy=policy,
             backend=dbe)
         engine = ServingEngine(system, max_batch=bs)
-        # groups of any size n <= bs pad to next_pow2(n), so precompile
-        # every pow2 up to AND INCLUDING the bucket covering bs; each
-        # workflow only ever runs at its own step count
-        buckets, b = [], 1
-        while True:
-            buckets.append(b)
-            if b >= next_pow2(bs):
-                break
-            b *= 2
-        dbe.precompile(step_buckets=(steps_full,), kinds=("txt2img",),
-                       batch_buckets=tuple(buckets))
-        dbe.precompile(step_buckets=(steps_ref,), kinds=("img2img",),
-                       batch_buckets=tuple(buckets))
-        # warm the retrieval-scan jit cache for every query bucket too —
-        # otherwise the first micro-batch of each shape compiles inside
-        # the timed window
-        for bucket in buckets:
-            for db in system.dbs:
-                db.search_batch(np.zeros((bucket, db.dim), np.float32),
-                                system.topk)
+        _precompile_serving_buckets(dbe, system, max_batch=bs,
+                                    steps_full=steps_full,
+                                    steps_ref=steps_ref)
         for i, r in enumerate(reqs):
             engine.submit(r.prompt, seed=i, quality_tier=r.quality_tier)
         t0 = time.perf_counter()
@@ -514,6 +501,89 @@ def run_serving_throughput(stack: TrainedStack, *, n_requests: int = 96,
         out["best_batch"] = best
         out["speedup_best_vs_1"] = rps[best] / rps[1]
         out["batched_faster"] = bool(rps[best] > rps[1])
+    return out
+
+
+def _precompile_serving_buckets(dbe, system, *, max_batch: int,
+                                steps_full: int, steps_ref: int) -> None:
+    """AOT-compile every (workflow, steps, pow2-batch) bucket a run with
+    groups of size <= max_batch can touch, and warm the retrieval-scan jit
+    cache for every query bucket — so the timed window measures serving,
+    not XLA compiles."""
+    buckets, b = [], 1
+    while True:
+        buckets.append(b)
+        if b >= next_pow2(max_batch):
+            break
+        b *= 2
+    dbe.precompile(step_buckets=(steps_full,), kinds=("txt2img",),
+                   batch_buckets=tuple(buckets))
+    dbe.precompile(step_buckets=(steps_ref,), kinds=("img2img",),
+                   batch_buckets=tuple(buckets))
+    for bucket in buckets:
+        for db in system.dbs:
+            db.search_batch(np.zeros((bucket, db.dim), np.float32),
+                            system.topk)
+
+
+def run_serving_latency_curve(stack: TrainedStack, *, n_requests: int = 96,
+                              arrival_rates: Optional[Sequence[float]] = None,
+                              steps_full: int = 6, steps_ref: int = 4,
+                              max_batch: int = 8) -> Dict:
+    """The latency-vs-offered-load curve (NIRVANA / DiffusionX's headline
+    axis): p50/p95 TRUE queue delay and throughput of continuous batching
+    vs the fixed-drain baseline, same Poisson trace at each arrival rate,
+    tiny-DiT backend with every bucket AOT-compiled before the clock runs.
+
+    Arrival gaps live on the engine's virtual clock (they cost no real
+    time); service advances the same clock by measured wall time, so the
+    curve composes simulated load with real CPU compute.  A bursty trace
+    (bursts wider than ``max_batch``, idle gaps between them) is appended
+    as the fixed-drain worst case.
+    """
+    from repro.core.trace import RequestTrace, bursty_arrivals, poisson_arrivals
+    from repro.launch.serve import build_system
+    from repro.runtime.serving import ServingEngine
+
+    rates = tuple(arrival_rates if arrival_rates is not None
+                  else ARRIVAL_RATES)
+    reqs = list(RequestTrace(seed=3).generate(n_requests))
+    dbe = stack.backend(tiny=True)
+
+    def run_mode(arrivals, mode):
+        policy = GenerationPolicy(steps_full=steps_full, steps_ref=steps_ref)
+        system, _, _, _ = build_system(
+            n_nodes=2, corpus_n=150, capacity_per_node=150, policy=policy,
+            backend=dbe)
+        _precompile_serving_buckets(dbe, system, max_batch=max_batch,
+                                    steps_full=steps_full,
+                                    steps_ref=steps_ref)
+        engine = ServingEngine(system, max_batch=max_batch)
+        done = engine.run(arrivals, mode=mode)
+        assert len(done) == len(arrivals)
+        qd = np.array([c.queue_delay for c in done])
+        makespan = max(c.finished_at for c in done)
+        return {"qd_p50": float(np.percentile(qd, 50)),
+                "qd_p95": float(np.percentile(qd, 95)),
+                "rps": len(done) / makespan}
+
+    out: Dict = {"n_requests": n_requests, "max_batch": max_batch}
+    for rate in rates:
+        arrivals = poisson_arrivals(reqs, rate, seed=5)
+        for mode, tag in (("continuous", "cont"), ("drain", "drain")):
+            r = run_mode(arrivals, mode)
+            for k, v in r.items():
+                out[f"{k}_{tag}_rate{rate:g}"] = v
+    bursty = bursty_arrivals(reqs, burst_size=max_batch + max_batch // 2,
+                             burst_gap=2.0)
+    cont = run_mode(bursty, "continuous")
+    drain = run_mode(bursty, "drain")
+    for k, v in cont.items():
+        out[f"{k}_cont_bursty"] = v
+    for k, v in drain.items():
+        out[f"{k}_drain_bursty"] = v
+    out["bursty_p95_speedup"] = drain["qd_p95"] / max(cont["qd_p95"], 1e-9)
+    out["cont_beats_drain_bursty"] = bool(cont["qd_p95"] < drain["qd_p95"])
     return out
 
 

@@ -330,6 +330,14 @@ def serving_batch_throughput() -> Dict:
     return C.run_serving_throughput(stack, batch_sizes=C.BATCH_SIZES)
 
 
+def serving_latency_curve() -> Dict:
+    """Latency vs offered load: p50/p95 true queue delay + throughput of
+    continuous batching vs fixed-drain on the same Poisson arrival trace
+    at each rate, plus the bursty-trace worst case."""
+    stack = C.get_stack()
+    return C.run_serving_latency_curve(stack, arrival_rates=C.ARRIVAL_RATES)
+
+
 # ---------------------------------------------------------------------------
 # Fig. 19 — LCU vs LRU/LFU/FIFO hit rate across cache updates
 # ---------------------------------------------------------------------------
@@ -478,6 +486,7 @@ ALL_BENCHMARKS = {
     "fig17_cost": fig17_cost,
     "fig18_throughput": fig18_throughput,
     "serving_batch_throughput": serving_batch_throughput,
+    "serving_latency_curve": serving_latency_curve,
     "fig19_lcu": fig19_lcu,
     "table4_reference": table4_reference,
     "table5_embeddings": table5_embeddings,

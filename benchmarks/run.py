@@ -37,6 +37,17 @@ def _batch_sizes(text: str):
     return sizes
 
 
+def _arrival_rates(text: str):
+    try:
+        rates = tuple(float(r) for r in text.split(","))
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"expected comma-separated floats (e.g. 10,40,160), got {text!r}")
+    if not rates or any(r <= 0 for r in rates):
+        raise argparse.ArgumentTypeError("arrival rates must be > 0")
+    return rates
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
@@ -45,6 +56,9 @@ def main() -> int:
     ap.add_argument("--batch-sizes", type=_batch_sizes, default=None,
                     help="comma-separated micro-batch sizes for the "
                          "serving-throughput benchmark (default: 1,4,8)")
+    ap.add_argument("--arrival-rates", type=_arrival_rates, default=None,
+                    help="comma-separated offered loads (req/s) for the "
+                         "serving latency-vs-load curve (default: 10,40,160)")
     args = ap.parse_args()
 
     from benchmarks.paper_figures import ALL_BENCHMARKS
@@ -52,6 +66,8 @@ def main() -> int:
 
     if args.batch_sizes:
         C.BATCH_SIZES = args.batch_sizes
+    if args.arrival_rates:
+        C.ARRIVAL_RATES = args.arrival_rates
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     t0 = time.time()

@@ -1,6 +1,7 @@
-"""Edge-cluster serving scenario: heterogeneous nodes, node failure,
-cache maintenance, and the historical-query fast path — the operational
-story of §V/§VI, runnable on one CPU.
+"""Edge-cluster serving scenario: heterogeneous nodes, continuous batching
+under a timestamped arrival process, node failure, cache maintenance, and
+the historical-query fast path — the operational story of §V/§VI, runnable
+on one CPU.
 
     PYTHONPATH=src python examples/edge_cluster_serve.py
 """
@@ -8,9 +9,15 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.trace import RequestTrace
-from repro.launch.serve import build_system
+from repro.core.trace import RequestTrace, bursty_arrivals, poisson_arrivals
+from repro.launch.serve import _stage_wall_arrays, build_system
 from repro.runtime.serving import ServingEngine
+
+
+def _queue_stats(done):
+    qd = np.array([c.queue_delay for c in done])
+    return (f"queue delay p50={np.percentile(qd, 50) * 1e3:.1f}ms "
+            f"p95={np.percentile(qd, 95) * 1e3:.1f}ms")
 
 
 def main() -> None:
@@ -23,27 +30,29 @@ def main() -> None:
     trace = RequestTrace(seed=2, repeat_rate=0.15, quality_rate=0.1)
     reqs = list(trace.generate(240))
 
-    print("phase 1: normal operation (120 requests)")
-    for i, r in enumerate(reqs[:120]):
-        engine.submit(r.prompt, seed=i, quality_tier=r.quality_tier)
-    engine.drain()
+    print("phase 1: steady Poisson traffic (120 requests, 60 req/s offered)")
+    done = engine.run(poisson_arrivals(reqs[:120], rate=60.0, seed=2))
     st = system.stats
     print(f"  routes={st.route_counts}  hit_rate={st.hit_rate:.2f}  "
           f"mean_latency={np.mean(st.latencies):.3f}s")
-    print(f"  wall: p50={np.percentile(st.wall_latencies, 50) * 1e3:.1f}ms "
-          f"p95={np.percentile(st.wall_latencies, 95) * 1e3:.1f}ms "
-          f"(batch-amortised over {len(st.batch_wall_latencies)} "
-          f"micro-batches)")
+    print(f"  {_queue_stats(done)}  (continuous batching; true per-request "
+          f"wait, not batch-amortised)")
 
-    print("phase 2: node 2 (RTX 3090) fails — traffic reroutes")
+    print("phase 2: node 2 (RTX 3090) fails mid-storm — bursty arrivals "
+          "reroute")
     engine.fail_node(2)
-    for i, r in enumerate(reqs[120:]):
-        engine.submit(r.prompt, seed=120 + i, quality_tier=r.quality_tier)
-    engine.drain()
+    t1 = max(c.finished_at for c in done)
+    burst = bursty_arrivals(reqs[120:], burst_size=12, burst_gap=0.5,
+                            start=t1, seed_base=120)  # same timeline,
+    done2 = engine.run(burst, start=t1)               # fresh noise seeds
     st = system.stats
     served_after = len(st.latencies)
     print(f"  total served={served_after} (no request dropped)  "
-          f"hit_rate={st.hit_rate:.2f}")
+          f"hit_rate={st.hit_rate:.2f}  {_queue_stats(done2)}")
+    walls = _stage_wall_arrays(done2)
+    top = sorted(walls, key=lambda k: -float(np.mean(walls[k])))[:3]
+    print("  hottest stages: " + "  ".join(
+        f"{k} {np.mean(walls[k]) * 1e3:.1f}ms" for k in top))
 
     print("phase 3: LCU cache maintenance")
     before = system.total_size

@@ -176,6 +176,11 @@ class RequestState:
     seed: int
     quality_tier: bool
     clock: float               # logical arrival tick
+    submitted_at: Optional[float] = None  # caller-clock submission instant
+    admitted_at: float = 0.0   # perf_counter at pipeline entry
+    # perf_counter at each stage's END, in stage order (every request in
+    # the micro-batch gets its own copy — coalesced duplicates included)
+    stage_ts: Dict[str, float] = field(default_factory=dict)
     pkey: int = 0              # stable prompt hash (priority fast path)
     pvec: Optional[np.ndarray] = None    # text embedding
     qvec: Optional[np.ndarray] = None    # L2-normalised pvec
@@ -416,6 +421,11 @@ class FinishStage:
     ``ServeStats.batch_wall_latencies``.  The total is taken AFTER the
     result loop so maintenance sweeps triggered mid-batch stay inside the
     measurement; results and stats are back-filled with the final share.
+
+    The TRUE per-request accounting (``stage_walls`` / ``wall_total`` /
+    ``queue_delay``) is back-filled by the ``ServePipeline.run`` driver
+    from the per-stage timestamps once the last stage returns — the
+    amortised ``wall_latency`` stays only as the legacy throughput share.
     """
 
     name = "Finish"
@@ -476,6 +486,17 @@ class ServePipeline:
     ``run`` admits the batch (ticks the system clock, builds one
     :class:`RequestState` per request), pushes the whole batch through
     every stage in order, and returns the states with ``result`` set.
+
+    Timing contract: every state records ``admitted_at`` (pipeline entry)
+    and ``stage_ts[name]`` (stage end) on the ``time.perf_counter`` clock,
+    so per-stage wall times are real measurements, not the batch-amortised
+    share.  After the last stage the driver back-fills each result's
+    ``stage_walls`` (per-stage durations), ``wall_total`` (admission to
+    Finish), and — when the caller supplied ``submitted_ats`` on the same
+    clock — ``queue_delay`` (submission to admission).  Stages run at
+    batch granularity, so batch members share stage boundaries; what is
+    per-request is the existence of the full timestamp trail (coalesced
+    duplicates included) and the queue delay.
     """
 
     def __init__(self, stages: Optional[Sequence] = None):
@@ -489,6 +510,7 @@ class ServePipeline:
     def run(self, system, prompts: Sequence[str], *,
             seeds: Optional[Sequence[int]] = None,
             quality_tiers: Optional[Sequence[bool]] = None,
+            submitted_ats: Optional[Sequence[float]] = None,
             ) -> List[RequestState]:
         n = len(prompts)
         if n == 0:
@@ -497,12 +519,32 @@ class ServePipeline:
         seeds = list(seeds) if seeds is not None else [0] * n
         tiers = (list(quality_tiers) if quality_tiers is not None
                  else [False] * n)
+        subs = (list(submitted_ats) if submitted_ats is not None
+                else [None] * n)
         states = [RequestState(index=i, raw_prompt=str(p), prompt=str(p),
                                seed=seeds[i], quality_tier=tiers[i],
-                               clock=system.clock + i + 1)
+                               clock=system.clock + i + 1,
+                               submitted_at=subs[i], admitted_at=t0)
                   for i, p in enumerate(prompts)]
         system.clock += n
         ctx = BatchContext(system=system, states=states, t_wall0=t0)
         for stage in self.stages:
             stage.run(ctx)
+            ts = time.perf_counter()
+            for s in states:
+                s.stage_ts[stage.name] = ts
+        # back-fill per-request timing onto the finished results
+        last = self.stages[-1].name
+        for s in states:
+            if s.result is None:       # custom stage list without a Finish
+                continue
+            prev = t0
+            walls: Dict[str, float] = {}
+            for name in self.stage_names:
+                walls[name] = s.stage_ts[name] - prev
+                prev = s.stage_ts[name]
+            s.result.stage_walls = walls
+            s.result.wall_total = s.stage_ts[last] - s.admitted_at
+            if s.submitted_at is not None:
+                s.result.queue_delay = s.admitted_at - s.submitted_at
         return states

@@ -64,6 +64,11 @@ class ServeResult:
     wall_latency: float       # batch-amortised measured wall-clock on this host
     steps: int
     fast_path: Optional[str] = None
+    # true per-request accounting from the pipeline's per-stage timestamps
+    # (back-filled by ServePipeline.run; see its timing contract):
+    queue_delay: float = 0.0  # submission -> pipeline admission (caller clock)
+    wall_total: float = 0.0   # pipeline admission -> Finish, measured
+    stage_walls: Dict[str, float] = field(default_factory=dict)
 
 
 @dataclass
@@ -149,6 +154,7 @@ class CacheGenius:
     def serve_batch(self, prompts: Sequence[str], *,
                     seeds: Optional[Sequence[int]] = None,
                     quality_tiers: Optional[Sequence[bool]] = None,
+                    submitted_ats: Optional[Sequence[float]] = None,
                     ) -> List[ServeResult]:
         """Serve a micro-batch through one pass of the staged pipeline.
 
@@ -173,9 +179,16 @@ class CacheGenius:
         sequential loop whenever distinct in-batch prompts do not interact
         through freshly archived images (the parity tests pin this on a
         fixed Zipf trace).  Results come back in submission order.
+
+        ``submitted_ats`` (optional, ``time.perf_counter`` clock) lets the
+        caller stamp when each request was submitted; each result's
+        ``queue_delay`` then reports the time actually waited before the
+        pipeline admitted it.  Results always carry ``wall_total`` and
+        per-stage ``stage_walls`` from the pipeline timestamps.
         """
         states = self.pipeline.run(self, prompts, seeds=seeds,
-                                   quality_tiers=quality_tiers)
+                                   quality_tiers=quality_tiers,
+                                   submitted_ats=submitted_ats)
         return [s.result for s in states]
 
     # ------------------------------------------------------------- internals

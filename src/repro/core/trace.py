@@ -1,4 +1,4 @@
-"""Request-trace generator for the serving experiments.
+"""Request-trace generator + arrival processes for the serving experiments.
 
 Real text-to-image traffic is heavy-tailed with topic drift (NIRVANA's
 production observation, which the paper's LCU experiment leans on: "5 cache
@@ -9,11 +9,27 @@ updates" under a shifting query distribution).  We model:
   * optional quality-tier users (paper's artistic/professional requests),
   * near-duplicate prompts (verbatim repeats) at rate ``repeat_rate`` to
     exercise the historical-query cache.
+
+WHAT arrives is only half a workload — WHEN it arrives is the other half.
+The paper's §V deployment sits behind an asynchronous task queue, so
+latency under load depends on the arrival process.  :class:`TimedRequest`
+stamps each trace request with an arrival time on the serving clock, and
+three generators build the processes the experiments need:
+
+  * :func:`poisson_arrivals` — memoryless open-loop traffic at a given
+    offered load (requests/second), the queueing-theory baseline;
+  * :func:`trace_arrivals` — trace-driven replay of explicit timestamps
+    (recorded production traces, adversarial schedules, test fixtures);
+  * :func:`bursty_arrivals` — synchronized bursts separated by idle gaps,
+    the worst case for fixed-drain batching (stragglers that miss a batch
+    boundary wait out a whole burst period).
+
+All three preserve request order and are deterministic in their seed.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Iterator, List, Optional
+from typing import Iterable, Iterator, List, Optional, Sequence
 
 import numpy as np
 
@@ -74,3 +90,98 @@ class RequestTrace:
     @property
     def specs(self) -> List[SceneSpec]:
         return list(self._specs)
+
+
+# ---------------------------------------------------------------------------
+# arrival processes (timestamped traffic for the continuous-batching engine)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TimedRequest:
+    """A trace request stamped with its arrival time on the serving clock.
+
+    ``arrival_time`` is in seconds on the engine's virtual clock (which
+    advances by measured service wall time, so simulated gaps and real
+    compute compose).  ``seed`` defaults to the request's position in the
+    stream so replays match the seeded drivers elsewhere in the repo.
+    """
+
+    arrival_time: float
+    prompt: str
+    seed: int = 0
+    quality_tier: bool = False
+    spec: Optional[SceneSpec] = None
+    is_repeat: bool = False
+
+
+def _as_timed(reqs: Iterable, times: Sequence[float],
+              seed_base: int = 0) -> List[TimedRequest]:
+    out: List[TimedRequest] = []
+    for i, (r, t) in enumerate(zip(reqs, times)):
+        if isinstance(r, TraceRequest):
+            out.append(TimedRequest(float(t), r.prompt, seed=seed_base + i,
+                                    quality_tier=r.quality_tier,
+                                    spec=r.spec, is_repeat=r.is_repeat))
+        else:
+            out.append(TimedRequest(float(t), str(r), seed=seed_base + i))
+    return out
+
+
+def poisson_arrivals(reqs: Iterable, rate: float, *, seed: int = 0,
+                     start: float = 0.0,
+                     seed_base: int = 0) -> List[TimedRequest]:
+    """Open-loop Poisson arrivals at ``rate`` requests/second.
+
+    Inter-arrival gaps are i.i.d. exponential with mean ``1/rate``;
+    request order is preserved.  ``reqs`` may be :class:`TraceRequest`
+    objects or bare prompt strings.  Generation seeds are assigned as
+    ``seed_base + position`` — offset ``seed_base`` when timing a later
+    slice of a longer trace so seeds stay distinct across slices.
+    """
+    if rate <= 0:
+        raise ValueError(f"arrival rate must be > 0, got {rate}")
+    reqs = list(reqs)
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=len(reqs))
+    times = start + np.cumsum(gaps)
+    return _as_timed(reqs, times, seed_base)
+
+
+def trace_arrivals(reqs: Iterable, timestamps: Sequence[float],
+                   *, seed_base: int = 0) -> List[TimedRequest]:
+    """Trace-driven arrivals: replay explicit per-request timestamps.
+
+    ``timestamps`` must be non-decreasing and as long as ``reqs`` — this is
+    the injection point for recorded production traces and for tests that
+    need adversarial schedules.
+    """
+    reqs = list(reqs)
+    times = [float(t) for t in timestamps]
+    if len(times) != len(reqs):
+        raise ValueError(f"{len(reqs)} requests but {len(times)} timestamps")
+    if any(b < a for a, b in zip(times, times[1:])):
+        raise ValueError("timestamps must be non-decreasing")
+    return _as_timed(reqs, times, seed_base)
+
+
+def bursty_arrivals(reqs: Iterable, *, burst_size: int, burst_gap: float,
+                    within_burst_gap: float = 0.0,
+                    start: float = 0.0,
+                    seed_base: int = 0) -> List[TimedRequest]:
+    """Synchronized bursts: ``burst_size`` requests land together every
+    ``burst_gap`` seconds (spaced ``within_burst_gap`` apart inside the
+    burst).  This is the fixed-drain worst case: a request that misses a
+    batch-closure boundary waits out the idle gap until the next burst
+    refills the bucket, while a continuous engine serves it as soon as the
+    in-flight group completes.
+    """
+    if burst_size < 1:
+        raise ValueError(f"burst_size must be >= 1, got {burst_size}")
+    if burst_gap < 0 or within_burst_gap < 0:
+        raise ValueError("burst_gap and within_burst_gap must be >= 0")
+    reqs = list(reqs)
+    times = [start + (i // burst_size) * burst_gap
+             + (i % burst_size) * within_burst_gap
+             for i in range(len(reqs))]
+    return _as_timed(reqs, times, seed_base)

@@ -4,9 +4,12 @@ Builds the edge fleet (N node VDBs via the K-means storage classifier over
 a synthetic reference corpus), trains-or-loads the tiny diffusion model,
 AOT-precompiles the serving buckets, then replays a Zipf request trace
 through the hybrid pipeline and prints the paper's headline numbers
-(route mix, hit rate, Eq. 8 latency, $ cost vs. always-full-generation).
+(route mix, hit rate, Eq. 8 latency, $ cost vs. always-full-generation)
+plus true queue-delay and per-stage wall-time percentiles.
 
     PYTHONPATH=src python -m repro.launch.serve --requests 300 --nodes 4
+    PYTHONPATH=src python -m repro.launch.serve --continuous \\
+        --arrival-rate 50 --requests 300      # Poisson offered load
 """
 from __future__ import annotations
 
@@ -18,7 +21,7 @@ from repro.core.latency_model import CostModel, LatencyModel
 from repro.core.lcu import POLICIES
 from repro.core.policy import GenerationPolicy, Route
 from repro.core.system import CacheGenius, GenerationBackend
-from repro.core.trace import RequestTrace
+from repro.core.trace import RequestTrace, poisson_arrivals
 from repro.core.vdb import BlobStore
 from repro.core.embeddings import ProxyClipEmbedder
 from repro.core.storage_classifier import StorageClassifier
@@ -99,9 +102,18 @@ def main() -> int:
     ap.add_argument("--max-batch", "--batch", dest="max_batch", type=int,
                     default=8, help="engine micro-batch size (1 reproduces "
                     "the request-at-a-time numbers)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching over a Poisson arrival "
+                    "process (ServingEngine.run) instead of the "
+                    "submit-everything-then-drain loop")
+    ap.add_argument("--arrival-rate", type=float, default=50.0,
+                    help="offered load for --continuous, requests/second "
+                    "on the virtual serving clock")
     args = ap.parse_args()
     if args.max_batch < 1:
         ap.error("--max-batch must be >= 1")
+    if args.arrival_rate <= 0:
+        ap.error("--arrival-rate must be > 0")
 
     system, _, _, _ = build_system(
         n_nodes=args.nodes, eviction=args.eviction,
@@ -112,12 +124,26 @@ def main() -> int:
     trace = RequestTrace(seed=1)
     reqs = list(trace.generate(args.requests))
     half = len(reqs) // 2
-    for i, r in enumerate(reqs):
-        if args.fail_node is not None and i == half:
+    if args.continuous:
+        arrivals = poisson_arrivals(reqs, args.arrival_rate, seed=1)
+        if args.fail_node is not None:
+            done = engine.run(arrivals[:half])
             print(f"--- failing node {args.fail_node} ---")
             engine.fail_node(args.fail_node)
-        engine.submit(r.prompt, seed=i, quality_tier=r.quality_tier)
-    done = engine.drain()
+            # resume on the same timeline: backlog from the first half
+            # (service overrunning the arrival spread) carries over
+            done += engine.run(
+                arrivals[half:],
+                start=max((c.finished_at for c in done), default=0.0))
+        else:
+            done = engine.run(arrivals)
+    else:
+        for i, r in enumerate(reqs):
+            if args.fail_node is not None and i == half:
+                print(f"--- failing node {args.fail_node} ---")
+                engine.fail_node(args.fail_node)
+            engine.submit(r.prompt, seed=i, quality_tier=r.quality_tier)
+        done = engine.drain()
 
     st = system.stats
     lat = np.array(st.latencies)
@@ -145,9 +171,26 @@ def main() -> int:
     base = base_cost.total_cost()
     print(f"cost               : ${cost:.4f} vs ${base:.4f} "
           f"(reduction {100 * (1 - cost / max(base, 1e-12)):.1f}%)")
-    print(f"queue mean delay   : "
-          f"{np.mean([c.queue_delay for c in done]):.1f} ticks")
+    qd = np.array([c.queue_delay for c in done])
+    mode = (f"continuous, {args.arrival_rate:g} req/s offered"
+            if args.continuous else "drain path, actual wait")
+    print(f"queue delay        : mean {qd.mean() * 1e3:.2f}ms   "
+          f"p50 {np.percentile(qd, 50) * 1e3:.2f}ms  "
+          f"p95 {np.percentile(qd, 95) * 1e3:.2f}ms  ({mode})")
+    print("stage walls        : " + "  ".join(
+        f"{name} {np.percentile(v, 50) * 1e3:.1f}/"
+        f"{np.percentile(v, 95) * 1e3:.1f}ms"
+        for name, v in _stage_wall_arrays(done).items()))
     return 0
+
+
+def _stage_wall_arrays(done):
+    """Per-stage wall-time samples (p50/p95 inputs) across completions."""
+    out = {}
+    for c in done:
+        for name, w in c.result.stage_walls.items():
+            out.setdefault(name, []).append(w)
+    return {k: np.asarray(v) for k, v in out.items()}
 
 
 if __name__ == "__main__":

@@ -1,31 +1,68 @@
 """Serving engine: CacheGenius front-end over a jitted diffusion backend.
 
-This is the deployment-shaped layer: requests enter a queue, get batched,
-and flow through the paper's pipeline (Fig. 5).  Three pieces:
+This is the deployment-shaped layer: the paper's §V "asynchronous task
+queue" in front of the Fig. 5 pipeline.  Three pieces:
 
 * :class:`DiffusionBackend` — AOT-compiled txt2img / img2img samplers for a
-  (tiny or full) DiT + VAE.  Every (workflow × step-count) bucket is
-  compiled once up front (``precompile``), the TPU-side answer to the
+  (tiny or full) DiT + VAE.  Every (workflow × step-count × batch-bucket)
+  is compiled once up front (``precompile``), the TPU-side answer to the
   paper's Docker cold-start fix (§V: "rebuilding the image with
   preinstalled dependencies" → here: persistent compile cache + AOT).
-* :class:`ServingEngine` — batching queue + the CacheGenius orchestrator;
-  node failures reroute through ``CacheGenius.fail_node``.
+* :class:`ServingEngine` — the request queue over the CacheGenius
+  orchestrator, with TWO draining disciplines:
+
+  - ``run(arrivals, mode="continuous")`` — **continuous batching**, the
+    primary path.  An event-driven loop consumes a timestamped arrival
+    process (:func:`repro.core.trace.poisson_arrivals` /
+    ``trace_arrivals`` / ``bursty_arrivals``) on a virtual clock that
+    advances by measured service wall time.  Whenever the in-flight step
+    group (one staged-pipeline pass, i.e. one set of AOT generation
+    buckets) completes, everything that has arrived in the meantime is
+    admitted into the next group — up to ``max_batch`` — so a request
+    never waits for a drain boundary, only for the group ahead of it.
+    ``mode="drain"`` is the fixed-drain baseline at the same offered
+    load: a bucket closes only when ``max_batch`` requests have arrived
+    (or the trace ends), so stragglers wait out the fill time — the
+    behaviour whose p95 queue delay the continuous mode beats under
+    bursty traffic.
+  - ``submit`` + ``drain()`` — the legacy closed-loop surface: everything
+    is queued up front and drained in FIFO micro-batches.
+
+  Either way each ``Completed`` carries a TRUE ``queue_delay`` (time the
+  request actually waited before its pipeline admission, from the
+  per-stage timestamps — not submission-clock ticks) and a result with
+  ``wall_total`` + per-stage ``stage_walls``.  Node failures reroute
+  through ``CacheGenius.fail_node``.
 * :class:`LMResponseCache` — the beyond-paper adaptation for the LM archs
   (DESIGN.md §Arch-applicability): GPTCache-style semantic response cache
   in front of decode; exact analog of Algorithm 1's HIT_RETURN branch with
   no img2img middle band (tokens are discrete).
+
+Invariants (pinned by ``tests/test_serving_continuous.py``): on traces
+where batched/sequential parity holds, continuous-mode results are a
+permutation (in fact, arrival-order-identical) of fixed-drain results —
+batch partitioning never changes routes, images, cache state, or hit/miss
+stats; widely spaced single submissions reproduce sequential ``serve``
+bitwise; and a run whose group sizes stay inside the precompiled buckets
+triggers no JIT at serve time.  Caveat: if ``maintenance_interval`` is
+smaller than a typical in-flight group, the eviction sweep sees the whole
+group's archives at once and cache state becomes partition-dependent —
+keep the interval above the batch size (see ROADMAP).
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (Any, Callable, Dict, Iterable, List, Optional, Sequence,
+                    Tuple)
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.system import CacheGenius, GenerationBackend, ServeResult
+from repro.core.trace import TimedRequest
 from repro.models.diffusion import dit as dit_mod
 from repro.models.diffusion import vae as vae_mod
 from repro.models.diffusion.sampler import ddim_sample, sdedit_start
@@ -235,36 +272,50 @@ class Request:
     prompt: str
     seed: int = 0
     quality_tier: bool = False
-    submitted_at: float = 0.0
+    submitted_at: float = 0.0   # perf_counter (drain) / virtual clock (run)
 
 
 @dataclass
 class Completed:
     request: Request
     result: ServeResult
-    queue_delay: float
+    queue_delay: float          # seconds actually waited before admission
+    finished_at: float = 0.0    # engine-clock instant the result came back
 
 
 class ServingEngine:
-    """Asynchronous-queue semantics (paper §V "asynchronous task queue"):
-    the queue drains in submission order through ``CacheGenius.serve_batch``
-    in micro-batches of ``max_batch``, so retrieval scans and same-route
-    denoiser calls amortise across queued requests."""
+    """Asynchronous-queue semantics (paper §V "asynchronous task queue")
+    over ``CacheGenius.serve_batch``.
+
+    ``run`` is the continuous-batching event loop over a timestamped
+    arrival process; ``submit`` + ``drain`` is the legacy closed-loop
+    surface (everything queued up front, FIFO micro-batches of
+    ``max_batch``).  See the module docstring for the two draining
+    disciplines and the timing/parity invariants.
+    """
 
     def __init__(self, system: CacheGenius, *, max_batch: int = 8):
         self.system = system
         self.max_batch = max_batch
         self.queue: List[Request] = []
         self.completed: List[Completed] = []
-        self._clock = 0.0
+
+    # -- legacy closed-loop surface -------------------------------------------
 
     def submit(self, prompt: str, *, seed: int = 0,
                quality_tier: bool = False) -> None:
-        self._clock += 1.0
         self.queue.append(Request(prompt, seed, quality_tier,
-                                  submitted_at=self._clock))
+                                  submitted_at=time.perf_counter()))
 
     def drain(self) -> List[Completed]:
+        """Serve the whole queue in FIFO micro-batches of ``max_batch``.
+
+        ``queue_delay`` is the time each request ACTUALLY waited: from its
+        ``submit`` instant to its micro-batch's pipeline admission, both on
+        ``time.perf_counter`` (earlier revisions reported submission-clock
+        ticks).  Within a micro-batch later submissions waited less; across
+        micro-batches delays grow by the service time of the batches ahead.
+        """
         out = []
         while self.queue:
             batch, self.queue = (self.queue[: self.max_batch],
@@ -272,10 +323,82 @@ class ServingEngine:
             results = self.system.serve_batch(
                 [r.prompt for r in batch],
                 seeds=[r.seed for r in batch],
-                quality_tiers=[r.quality_tier for r in batch])
-            out.extend(Completed(req, res,
-                                 queue_delay=self._clock - req.submitted_at)
+                quality_tiers=[r.quality_tier for r in batch],
+                submitted_ats=[r.submitted_at for r in batch])
+            done_at = time.perf_counter()
+            out.extend(Completed(req, res, queue_delay=res.queue_delay,
+                                 finished_at=done_at)
                        for req, res in zip(batch, results))
+        self.completed.extend(out)
+        return out
+
+    # -- continuous batching ----------------------------------------------------
+
+    def run(self, arrivals: Iterable[TimedRequest], *,
+            mode: str = "continuous", start: float = 0.0) -> List[Completed]:
+        """Serve a timestamped arrival process; returns arrival order.
+
+        The virtual clock starts at ``start`` and advances two ways: idling
+        to the next arrival when nothing is queued, and by the MEASURED wall
+        time of each staged-pipeline pass while serving — so simulated
+        arrival gaps and real compute compose on one timeline.  When
+        splitting one trace across several ``run`` calls (e.g. to fail a
+        node between halves), pass the previous call's final
+        ``finished_at`` as ``start`` so backlog carries over instead of the
+        clock rewinding to the next arrival.
+
+        ``mode="continuous"`` admits everything that has arrived (up to
+        ``max_batch``) into the next generation bucket the moment the
+        in-flight group completes.  ``mode="drain"`` is the fixed-drain
+        baseline: a bucket closes only once ``max_batch`` requests have
+        arrived (or the trace is exhausted), so a request that just misses
+        a closure waits for the bucket to fill — a full burst period under
+        bursty traffic.
+
+        Each ``Completed`` carries ``queue_delay`` = admission instant −
+        arrival instant on the virtual clock (also stamped onto
+        ``result.queue_delay``, overriding the pipeline's perf-counter
+        figure, which has no meaning on a virtual timeline) and
+        ``finished_at`` = the group's completion instant.
+        """
+        if mode not in ("continuous", "drain"):
+            raise ValueError(f"unknown mode {mode!r}")
+        if self.queue:
+            raise RuntimeError(
+                "ServingEngine.run would strand the submit() queue "
+                f"({len(self.queue)} pending requests) — drain() it first")
+        pending = deque(sorted(arrivals, key=lambda a: a.arrival_time))
+        ready: List[TimedRequest] = []
+        out: List[Completed] = []
+        now = float(start)
+
+        def admit_arrived() -> None:
+            while pending and pending[0].arrival_time <= now + 1e-12:
+                ready.append(pending.popleft())
+
+        while pending or ready:
+            admit_arrived()
+            if mode == "drain":
+                while len(ready) < self.max_batch and pending:
+                    now = max(now, pending[0].arrival_time)
+                    admit_arrived()
+            if not ready:
+                now = max(now, pending[0].arrival_time)
+                continue
+            batch, ready = ready[: self.max_batch], ready[self.max_batch:]
+            admitted = now
+            t0 = time.perf_counter()
+            results = self.system.serve_batch(
+                [r.prompt for r in batch],
+                seeds=[r.seed for r in batch],
+                quality_tiers=[r.quality_tier for r in batch])
+            now = admitted + (time.perf_counter() - t0)
+            for r, res in zip(batch, results):
+                res.queue_delay = admitted - r.arrival_time
+                req = Request(r.prompt, r.seed, r.quality_tier,
+                              submitted_at=r.arrival_time)
+                out.append(Completed(req, res, queue_delay=res.queue_delay,
+                                     finished_at=now))
         self.completed.extend(out)
         return out
 
