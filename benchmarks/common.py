@@ -52,6 +52,12 @@ BATCH_SIZES: Tuple[int, ...] = (1, 4, 8)
 # latency-curve benchmark; overridable via `benchmarks.run --arrival-rates`.
 ARRIVAL_RATES: Tuple[float, ...] = (10.0, 40.0, 160.0)
 
+# Fleet shapes swept by the retrieval_scan benchmark (fused cross-node
+# device scan vs the per-node search_batch loop); overridable via
+# `benchmarks.run --nodes` / `--cache-capacities`.
+NODE_COUNTS: Tuple[int, ...] = (2, 4, 8)
+CACHE_CAPACITIES: Tuple[int, ...] = (2048, 4096)
+
 
 def _vae_cfg():
     return vae_mod.VAEConfig(in_ch=3, base_ch=16, ch_mult=(1, 2), z_ch=4,

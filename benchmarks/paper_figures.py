@@ -339,6 +339,76 @@ def serving_latency_curve() -> Dict:
 
 
 # ---------------------------------------------------------------------------
+# Retrieval scan: fused cross-node device scan vs per-node loop
+# ---------------------------------------------------------------------------
+
+
+def retrieval_scan(batch: int = 8, dim: int = 512, k: int = 8,
+                   iters: int = 5) -> Dict:
+    """The paper's retrieval hot path at fleet scale: wall time and
+    effective scan bandwidth of ONE fused ``ClusterIndex.search_batch``
+    (device-resident stacked slabs, query→node mask) vs the pre-PR-4
+    per-node loop (one ``VectorDB.search_batch`` per touched node, each
+    re-uploading its slab), across ``C.NODE_COUNTS`` × ``C.CACHE_CAPACITIES``.
+
+    Stack-free: runs on synthetic vectors, so CI can smoke it without
+    training the diffusion stack."""
+    from repro.core.cluster_index import ClusterIndex
+    from repro.core.vdb import VectorDB
+
+    def bench(fn):
+        fn()                                  # warmup / compile
+        best = np.inf
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    rows: List[Dict] = []
+    for n_nodes in C.NODE_COUNTS:
+        for cap in C.CACHE_CAPACITIES:
+            rng = np.random.default_rng(1000 * n_nodes + cap)
+            dbs = [VectorDB(dim, cap, name=f"bench{i}")
+                   for i in range(n_nodes)]
+            for db in dbs:
+                v = rng.normal(size=(cap, dim)).astype(np.float32)
+                t = rng.normal(size=(cap, dim)).astype(np.float32)
+                db.add(v, t, np.arange(cap), t=0.0)
+            Q = rng.normal(size=(batch, dim)).astype(np.float32)
+            node_ids = rng.integers(0, n_nodes, size=batch)
+            by_node: Dict[int, List[int]] = {}
+            for qi, ni in enumerate(node_ids):
+                by_node.setdefault(int(ni), []).append(qi)
+
+            def loop_scan():                  # pre-cluster per-node path
+                for ni, qs in by_node.items():
+                    dbs[ni].search_batch(Q[qs], k)
+
+            # time the loop BEFORE attaching the cluster (attaching makes
+            # VectorDB.search_batch delegate to the fused scan)
+            t_loop = bench(loop_scan)
+            ci = ClusterIndex.from_dbs(dbs)
+            t_fused = bench(lambda: ci.search_batch(Q, node_ids, k))
+            scan_bytes = 2 * n_nodes * cap * dim * 4  # img+txt slabs, f32
+            rows.append({
+                "nodes": n_nodes, "capacity": cap,
+                "touched_nodes": len(by_node),
+                "per_node_loop_s": t_loop, "fused_scan_s": t_fused,
+                "speedup": t_loop / t_fused,
+                "loop_gbps": scan_bytes / t_loop / 1e9,
+                "fused_gbps": scan_bytes / t_fused / 1e9,
+            })
+    wins = [r for r in rows if r["nodes"] >= 4 and r["capacity"] >= 2048]
+    return {"rows": rows,
+            "fused_beats_loop_everywhere":
+                all(r["speedup"] > 1.0 for r in rows),
+            # None when the sweep didn't include the acceptance shape
+            "fused_beats_loop_at_4x2048":
+                all(r["speedup"] > 1.0 for r in wins) if wins else None}
+
+
+# ---------------------------------------------------------------------------
 # Fig. 19 — LCU vs LRU/LFU/FIFO hit rate across cache updates
 # ---------------------------------------------------------------------------
 
@@ -487,7 +557,12 @@ ALL_BENCHMARKS = {
     "fig18_throughput": fig18_throughput,
     "serving_batch_throughput": serving_batch_throughput,
     "serving_latency_curve": serving_latency_curve,
+    "retrieval_scan": retrieval_scan,
     "fig19_lcu": fig19_lcu,
     "table4_reference": table4_reference,
     "table5_embeddings": table5_embeddings,
 }
+
+# Benchmarks that never touch the trained diffusion stack — the driver
+# skips the (slow) stack build when only these are selected.
+STACK_FREE = {"retrieval_scan"}

@@ -48,6 +48,17 @@ def _arrival_rates(text: str):
     return rates
 
 
+def _pos_ints(text: str):
+    try:
+        vals = tuple(int(v) for v in text.split(","))
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"expected comma-separated ints (e.g. 2,4,8), got {text!r}")
+    if not vals or any(v < 1 for v in vals):
+        raise argparse.ArgumentTypeError("values must be >= 1")
+    return vals
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
@@ -59,26 +70,46 @@ def main() -> int:
     ap.add_argument("--arrival-rates", type=_arrival_rates, default=None,
                     help="comma-separated offered loads (req/s) for the "
                          "serving latency-vs-load curve (default: 10,40,160)")
+    ap.add_argument("--nodes", type=_pos_ints, default=None,
+                    help="comma-separated fleet sizes for the retrieval_scan "
+                         "benchmark (default: 2,4,8)")
+    ap.add_argument("--cache-capacities", type=_pos_ints, default=None,
+                    help="comma-separated per-node cache capacities for the "
+                         "retrieval_scan benchmark (default: 2048,4096)")
     args = ap.parse_args()
 
-    from benchmarks.paper_figures import ALL_BENCHMARKS
+    from benchmarks.paper_figures import ALL_BENCHMARKS, STACK_FREE
     from benchmarks import common as C
 
     if args.batch_sizes:
         C.BATCH_SIZES = args.batch_sizes
     if args.arrival_rates:
         C.ARRIVAL_RATES = args.arrival_rates
+    if args.nodes:
+        C.NODE_COUNTS = args.nodes
+    if args.cache_capacities:
+        C.CACHE_CAPACITIES = args.cache_capacities
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     t0 = time.time()
-    print("# training/loading the reproduction stack ...")
-    stack = C.get_stack()
-    print(f"# stack ready in {time.time()-t0:.1f}s "
-          f"(losses: {stack.losses})")
-
-    results = {"stack_losses": stack.losses}
-    failures = []
     names = [args.only] if args.only else list(ALL_BENCHMARKS)
+    results = {}
+    if args.only and os.path.exists(args.out):
+        # a single-benchmark run refreshes its entry in place instead of
+        # wiping the rest of the results trajectory
+        try:
+            with open(args.out) as f:
+                results = json.load(f)
+        except (OSError, ValueError):
+            results = {}
+    if not all(n in STACK_FREE for n in names):
+        print("# training/loading the reproduction stack ...")
+        stack = C.get_stack()
+        print(f"# stack ready in {time.time()-t0:.1f}s "
+              f"(losses: {stack.losses})")
+        results["stack_losses"] = stack.losses
+
+    failures = []
     for name in names:
         fn = ALL_BENCHMARKS[name]
         t1 = time.time()

@@ -39,15 +39,18 @@ class EvictionPolicy:
             s = self.scores(db)
             for slot in np.flatnonzero(db.valid):
                 entries.append((float(s[slot]), ni, int(slot)))
-        evicted: Dict[int, List[int]] = {}
         if total <= c_max:
             return {}
         entries.sort(key=lambda e: e[0], reverse=True)  # farthest first
         n_evict = total - c_max
+        doomed: Dict[int, List[int]] = {}
         for score, ni, slot in entries[:n_evict]:
-            payloads = dbs[ni].evict_slots(np.array([slot]))
-            evicted.setdefault(ni, []).extend(int(p) for p in payloads)
-        return {ni: np.array(v, np.int64) for ni, v in evicted.items()}
+            doomed.setdefault(ni, []).append(slot)
+        # one evict_slots call per node (one device validity update per
+        # node when the db is a ClusterIndex view, not one per slot)
+        return {ni: dbs[ni].evict_slots(np.array(slots, np.int64))
+                          .astype(np.int64)
+                for ni, slots in doomed.items()}
 
 
 class LCUPolicy(EvictionPolicy):

@@ -15,7 +15,10 @@ Stage contracts (each stage sees the whole micro-batch):
 * **Embed**     — prompt optimisation + ONE ``embed_text`` call.
 * **Schedule**  — ONE ``RequestScheduler.schedule_batch`` (single history
   matmul, single node-representation similarity).
-* **Retrieve**  — ONE ``VectorDB.search_batch`` per node touched.
+* **Retrieve**  — ONE fused ``ClusterIndex.search_batch`` device scan for
+  the WHOLE micro-batch (all touched nodes, both dual-retrieval indexes,
+  query→node masked); per-node ``VectorDB.search_batch`` only as the
+  no-cluster fallback.
 * **Score**     — composite Eq. 7 scoring of every request's candidate set
   via ``Embedder.score_candidates`` — one vectorised matmul per request,
   never per-candidate Python ``clip_score``/``pick_score`` calls; lazily
@@ -246,18 +249,35 @@ class ScheduleStage:
 
 
 class RetrieveStage:
+    """ONE fused device scan per micro-batch: all retrieval-path queries
+    against all touched node slabs through the cluster's device-resident
+    index (``ClusterIndex.search_batch`` with the query→node mask) —
+    never a per-node Python loop, never a host→device slab copy.  Systems
+    without a cluster index (custom stage lists, standalone fleets) fall
+    back to the per-node ``VectorDB.search_batch`` grouping."""
+
     name = "Retrieve"
 
     def run(self, ctx: BatchContext) -> None:
         system = ctx.system
-        by_node: Dict[int, List[RequestState]] = {}
-        for s in ctx.states:
-            if s.decision.fast_path is None:
-                by_node.setdefault(s.decision.node, []).append(s)
-        for node, members in by_node.items():
+        members = [s for s in ctx.states if s.decision.fast_path is None]
+        if not members:
+            return
+        cluster = getattr(system, "cluster_index", None)
+        if cluster is not None:
             idxs = [m.index for m in members]
-            rows = system.dbs[node].search_batch(ctx.pvecs[idxs], system.topk)
+            nodes = [m.decision.node for m in members]
+            rows = cluster.search_batch(ctx.pvecs[idxs], nodes, system.topk)
             for m, (scores, slots) in zip(members, rows):
+                m.ret_scores, m.ret_slots = scores, slots
+            return
+        by_node: Dict[int, List[RequestState]] = {}
+        for m in members:
+            by_node.setdefault(m.decision.node, []).append(m)
+        for node, group in by_node.items():
+            idxs = [m.index for m in group]
+            rows = system.dbs[node].search_batch(ctx.pvecs[idxs], system.topk)
+            for m, (scores, slots) in zip(group, rows):
                 m.ret_scores, m.ret_slots = scores, slots
 
 

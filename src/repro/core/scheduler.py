@@ -60,6 +60,13 @@ class RequestScheduler:
 
     @staticmethod
     def node_vectors(dbs: Sequence[VectorDB]) -> np.ndarray:
+        """L2-normalised node representation vectors (Eq. 6).
+
+        ``VectorDB.centroid`` is served from a running sum/count
+        maintained on every mutation, so building the representation
+        matrix is O(nodes·dim) per micro-batch — NOT an
+        O(capacity·dim) slab reduction per node (``ClusterIndex
+        .node_vectors`` reads the same cached centroids)."""
         vecs = np.stack([db.centroid() for db in dbs])
         n = np.linalg.norm(vecs, axis=-1, keepdims=True)
         return vecs / np.maximum(n, 1e-12)

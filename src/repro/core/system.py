@@ -22,6 +22,15 @@ Stage map onto the paper: Embed = prompt-optimizer + embedding-generator
 Archive = blob store + VDB insert, Finish = Eq. 8 latency/cost accounting
 and the periodic LCU sweep (Algorithm 2).
 
+Retrieval engine (PR 4): construction builds a
+``repro.core.cluster_index.ClusterIndex`` over the node fleet — the
+cluster's cache state lives device-resident as stacked
+``(2, nodes, capacity, dim)`` img/txt slabs updated incrementally by
+every VDB ``add``/``evict`` (one build-time upload, zero steady-state
+slab copies), and the Retrieve stage answers each micro-batch with ONE
+fused masked scan across all touched nodes (``use_cluster_index=False``
+restores the per-node loop).
+
 Backend protocol migration (for external callers of ``GenerationBackend``):
 it is no longer a dataclass of four optional callables but a batch-first
 base class — subclass it and implement ``txt2img_batch`` /
@@ -39,6 +48,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.cluster_index import ClusterIndex
 from repro.core.latency_model import CostModel, LatencyModel
 from repro.core.lcu import EvictionPolicy, LCUPolicy
 from repro.core.pipeline import (CallableBackend, GenerationBackend, Plan,
@@ -119,6 +129,7 @@ class CacheGenius:
                  topk: int = 8,
                  use_scheduler: bool = True,
                  use_prompt_optimizer: bool = True,
+                 use_cluster_index: bool = True,
                  pipeline: Optional[ServePipeline] = None):
         self.embedder = embedder
         self.dbs = list(dbs)
@@ -138,6 +149,12 @@ class CacheGenius:
         self.topk = topk
         self.use_scheduler = use_scheduler
         self.use_prompt_optimizer = use_prompt_optimizer
+        # device-resident cross-node retrieval engine: the fleet's cache
+        # state lives on device (ONE build-time upload, incremental row
+        # updates from every add/evict) and the Retrieve stage issues ONE
+        # fused scan per micro-batch across all touched nodes
+        self.cluster_index = (ClusterIndex.from_dbs(self.dbs)
+                              if use_cluster_index and self.dbs else None)
         self.pipeline = pipeline or ServePipeline()
         self.stats = ServeStats()
         self.clock = 0.0

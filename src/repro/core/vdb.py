@@ -6,9 +6,16 @@ Algorithm 1 lines 2-3), plus the bookkeeping the eviction policies need
 (insert time, access counts, last access).
 
 Storage layout is a fixed-capacity slab of numpy arrays with a validity
-mask; similarity search runs as a jitted masked matmul + top-k on device.
-On TPU the scan dispatches to the fused Pallas similarity+top-k kernel
-(``repro.kernels.ops.vdb_topk``); the jnp path is the oracle.
+mask — the HOST source of truth for snapshot/restore, eviction and the
+storage classifier.  Search is device-side: a standalone db runs a jitted
+masked matmul + top-k (or the Pallas ``vdb_topk`` kernel with
+``use_pallas=True``); a db registered with a
+:class:`repro.core.cluster_index.ClusterIndex` is a per-node VIEW over
+the cluster's device-resident stacked slabs — every ``add``/``evict``
+pushes an incremental row update, and ``search``/``search_batch``
+delegate to the fused cross-node scan (no per-call host→device slab
+copies).  Semantics are identical either way, pinned by parity tests
+against the jnp oracle here.
 
 ``payload_ids`` are opaque ints pointing into a :class:`BlobStore` (the
 paper's NFS layer).
@@ -16,7 +23,7 @@ paper's NFS layer).
 from __future__ import annotations
 
 from functools import partial
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -80,30 +87,49 @@ def _union_topk(score_rows: Sequence[np.ndarray],
                 ) -> Tuple[np.ndarray, np.ndarray]:
     """De-duplicate the union of per-index top-k rows, keeping the best
     score per slot and dropping masked candidates (±inf or the Pallas
-    large-negative sentinel)."""
-    best: Dict[int, float] = {}
-    for scores, slots in zip(score_rows, slot_rows):
-        for sc, sl in zip(scores, slots):
-            if not np.isfinite(sc) or sc <= _SCORE_FLOOR:
-                continue
-            if sl not in best or sc > best[sl]:
-                best[int(sl)] = float(sc)
-    if not best:
+    large-negative sentinel).
+
+    Fully vectorised (no per-candidate Python loop): one lexsort groups
+    candidates by slot with scores descending, so the first entry of each
+    group IS the best score for that slot (ties keep the earliest row —
+    the img index before txt — matching the old strict ``>`` dict
+    update); a final stable sort restores descending-score order with
+    slot-ascending tie-break.
+    """
+    if score_rows:
+        scores = np.concatenate(
+            [np.asarray(s, np.float32).ravel() for s in score_rows])
+        slots = np.concatenate(
+            [np.asarray(s).ravel() for s in slot_rows]).astype(np.int64)
+    else:
+        scores = np.empty((0,), np.float32)
+        slots = np.empty((0,), np.int64)
+    keep = np.isfinite(scores) & (scores > _SCORE_FLOOR)
+    scores, slots = scores[keep], slots[keep]
+    if scores.size == 0:
         return np.empty((0,), np.float32), np.empty((0,), np.int64)
-    slots_u = np.array(sorted(best, key=best.get, reverse=True), np.int64)
-    scores_u = np.array([best[s] for s in slots_u], np.float32)
-    return scores_u, slots_u
+    order = np.lexsort((-scores, slots))        # slot asc, score desc, stable
+    slots_s, scores_s = slots[order], scores[order]
+    first = np.ones(len(slots_s), bool)
+    first[1:] = slots_s[1:] != slots_s[:-1]     # best entry per slot
+    slots_u, scores_u = slots_s[first], scores_s[first]
+    out = np.argsort(-scores_u, kind="stable")  # desc; ties -> slot asc
+    return scores_u[out], slots_u[out]
 
 
 class VectorDB:
     """Fixed-capacity dual-index vector DB for one edge node."""
 
     def __init__(self, dim: int, capacity: int, *, name: str = "node",
-                 use_pallas: bool = False):
+                 use_pallas: bool = False,
+                 interpret: Optional[bool] = None):
         self.dim = dim
         self.capacity = capacity
         self.name = name
         self.use_pallas = use_pallas
+        # None = backend-aware (compile on TPU, interpret elsewhere);
+        # threaded through to the Pallas kernels and the ClusterIndex
+        self.interpret = interpret
         self.img_vecs = np.zeros((capacity, dim), np.float32)
         self.txt_vecs = np.zeros((capacity, dim), np.float32)
         self.valid = np.zeros((capacity,), bool)
@@ -112,6 +138,36 @@ class VectorDB:
         self.access_count = np.zeros((capacity,), np.int64)
         self.payload_ids = np.full((capacity,), -1, np.int64)
         self.query_count = 0
+        # running centroid (sum of valid img vectors + count), maintained
+        # on every mutation so centroid() is O(dim), not O(capacity*dim)
+        self._cent_sum = np.zeros((dim,), np.float64)
+        self._cent_count = 0
+        # ClusterIndex views over this node's slab (usually 0 or 1)
+        self._clusters: List[Tuple[object, int]] = []
+
+    # -- cluster registration ----------------------------------------------
+
+    def register_cluster(self, cluster, node: int) -> None:
+        """Attach a ClusterIndex view; future mutations push incremental
+        device row updates, and searches delegate to the fused scan.
+        EVERY registered cluster receives updates (two systems sharing a
+        fleet each keep their own index in sync); drop indexes you are
+        done with via :meth:`unregister_cluster` or they stay live."""
+        self._clusters = [(c, n) for c, n in self._clusters
+                          if c is not cluster] + [(cluster, node)]
+
+    def unregister_cluster(self, cluster) -> None:
+        self._clusters = [(c, n) for c, n in self._clusters
+                          if c is not cluster]
+
+    def _cluster_update(self, slots: np.ndarray) -> None:
+        for cluster, node in self._clusters:
+            cluster.update_rows(node, slots, self.img_vecs[slots],
+                                self.txt_vecs[slots])
+
+    def _cluster_invalidate(self, slots: np.ndarray) -> None:
+        for cluster, node in self._clusters:
+            cluster.invalidate_rows(node, slots)
 
     # -- mutation ----------------------------------------------------------
 
@@ -123,12 +179,23 @@ class VectorDB:
         txt_vecs = _l2n(np.atleast_2d(np.asarray(txt_vecs, np.float32)))
         payload_ids = np.atleast_1d(np.asarray(payload_ids, np.int64))
         n = img_vecs.shape[0]
+        if n > self.capacity:    # oversized insert: only the NEWEST
+            drop = n - self.capacity         # capacity rows land (FIFO)
+            img_vecs = img_vecs[drop:]
+            txt_vecs = txt_vecs[drop:]
+            payload_ids = payload_ids[drop:]
+            n = self.capacity
         free = np.flatnonzero(~self.valid)
-        if len(free) < n:  # overwrite oldest
-            order = np.argsort(np.where(self.valid, self.insert_time, -np.inf))
-            extra = order[: n - len(free)]
-            free = np.concatenate([free, extra])
-        slots = free[:n]
+        if len(free) < n:  # overwrite the oldest VALID entries only
+            valid_slots = np.flatnonzero(self.valid)
+            oldest = valid_slots[np.argsort(self.insert_time[valid_slots])]
+            free = np.concatenate([free, oldest[: n - len(free)]])
+        slots = free[:n]     # free ∪ oldest-valid are disjoint: no dupes
+        # running centroid: overwritten live rows leave, new rows enter
+        live = slots[self.valid[slots]]
+        if len(live):
+            self._cent_sum -= self.img_vecs[live].sum(axis=0)
+            self._cent_count -= len(live)
         self.img_vecs[slots] = img_vecs
         self.txt_vecs[slots] = txt_vecs
         self.valid[slots] = True
@@ -136,6 +203,9 @@ class VectorDB:
         self.last_access[slots] = t
         self.access_count[slots] = 0
         self.payload_ids[slots] = payload_ids
+        self._cent_sum += self.img_vecs[slots].sum(axis=0)
+        self._cent_count += len(slots)
+        self._cluster_update(slots)
         return slots
 
     def evict_slots(self, slots: np.ndarray) -> np.ndarray:
@@ -143,8 +213,14 @@ class VectorDB:
         store (the paper synchronously removes image files for consistency)."""
         slots = np.atleast_1d(np.asarray(slots))
         payloads = self.payload_ids[slots].copy()
+        uniq = np.unique(slots)
+        live = uniq[self.valid[uniq]]
+        if len(live):
+            self._cent_sum -= self.img_vecs[live].sum(axis=0)
+            self._cent_count -= len(live)
         self.valid[slots] = False
         self.payload_ids[slots] = -1
+        self._cluster_invalidate(uniq)
         return payloads
 
     def mark_access(self, slots: np.ndarray, t: float) -> None:
@@ -164,10 +240,17 @@ class VectorDB:
         self.query_count += 1
         q = _l2n(np.asarray(query_vec, np.float32).reshape(-1))
         k = min(k, self.capacity)
+        if self._clusters:
+            # cluster view: the slab is device-resident — fused masked
+            # scan instead of re-uploading numpy arrays
+            cluster, node = self._clusters[-1]
+            return cluster.search_batch(q[None], [node], k, index=index,
+                                        count_queries=False)[0]
         if self.use_pallas:
-            from repro.kernels import ops as kops
-            searcher = lambda db: kops.vdb_topk(  # noqa: E731
-                jnp.asarray(q)[None], jnp.asarray(db), jnp.asarray(self.valid), k)
+            from repro.kernels.vdb_topk import vdb_topk as kernel_topk
+            searcher = lambda db: kernel_topk(  # noqa: E731
+                jnp.asarray(q)[None], jnp.asarray(db), jnp.asarray(self.valid),
+                k, interpret=self.interpret)
             out = []
             if index in ("img", "both"):
                 s, i = searcher(self.img_vecs)
@@ -193,10 +276,12 @@ class VectorDB:
         """Multi-query dual ANN retrieval — one device scan for the whole
         micro-batch.
 
-        The jnp oracle routes through :func:`_masked_topk_batch` (a single
+        When this db is a ClusterIndex view the scan runs against the
+        device-resident stacked slab (no host→device copies).  Standalone,
+        the jnp oracle routes through :func:`_masked_topk_batch` (a single
         (Q, cap) masked matmul + top-k); the Pallas path feeds the full
-        (Q, D) query block to ``repro.kernels.ops.vdb_topk``, whose grid
-        already streams the database once for all queries.
+        (Q, D) query block to ``repro.kernels.vdb_topk.vdb_topk``, whose
+        grid already streams the database once for all queries.
 
         Returns one ``(scores, slots)`` pair per query, each identical in
         meaning to :meth:`search` (deduped union across indexes, invalid
@@ -207,6 +292,10 @@ class VectorDB:
         self.query_count += b
         if b == 0:
             return []
+        if self._clusters:
+            cluster, node = self._clusters[-1]
+            return cluster.search_batch(Q, [node] * b, min(k, self.capacity),
+                                        index=index, count_queries=False)
         Qn = _l2n(Q)
         # pad the query block to a power-of-two bucket: micro-batch sizes
         # vary per node per drain, and an unpadded (Q, D) shape would
@@ -223,10 +312,11 @@ class VectorDB:
             indexes.append(self.txt_vecs)
         per_index = []
         if self.use_pallas:
-            from repro.kernels import ops as kops
+            from repro.kernels.vdb_topk import vdb_topk as kernel_topk
             for vecs in indexes:
-                s, i = kops.vdb_topk(jnp.asarray(Qn), jnp.asarray(vecs),
-                                     jnp.asarray(self.valid), k)
+                s, i = kernel_topk(jnp.asarray(Qn), jnp.asarray(vecs),
+                                   jnp.asarray(self.valid), k,
+                                   interpret=self.interpret)
                 per_index.append((np.asarray(s), np.asarray(i)))
         else:
             for vecs in indexes:
@@ -244,10 +334,23 @@ class VectorDB:
         return int(self.valid.sum())
 
     def centroid(self) -> np.ndarray:
-        """Node representation vector = mean of stored image vectors (§IV-E)."""
-        if self.size == 0:
+        """Node representation vector = mean of stored image vectors (§IV-E).
+
+        O(dim): served from the running sum/count maintained on every
+        ``add``/``evict_slots`` (float64 accumulation; recomputed — i.e.
+        invalidated — on ``restore``), so ``schedule_batch`` no longer
+        pays an O(capacity·dim) reduction per node per micro-batch."""
+        if self._cent_count <= 0:
             return np.zeros((self.dim,), np.float32)
-        return self.img_vecs[self.valid].mean(axis=0)
+        return (self._cent_sum / self._cent_count).astype(np.float32)
+
+    def _recompute_centroid(self) -> None:
+        """Rebuild the running centroid from the slab (restore / any
+        out-of-band mutation of ``img_vecs``/``valid``)."""
+        self._cent_count = int(self.valid.sum())
+        self._cent_sum = (self.img_vecs[self.valid].astype(np.float64)
+                          .sum(axis=0) if self._cent_count
+                          else np.zeros((self.dim,), np.float64))
 
     def snapshot(self) -> dict:
         """Serializable state (for checkpoint / node-failure recovery)."""
@@ -264,4 +367,5 @@ class VectorDB:
         db = cls(dim, capacity, **kw)
         for k_, v in state.items():
             setattr(db, k_, v.copy())
+        db._recompute_centroid()    # cache is invalid for the new slab
         return db

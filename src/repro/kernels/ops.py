@@ -6,17 +6,18 @@ body* in Python-on-XLA for bit-accurate validation against ``ref.py``.
 """
 from __future__ import annotations
 
-import jax
-
 from repro.kernels import ref
 from repro.kernels.adaln import adaln_modulate as _adaln_pallas
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.groupnorm_silu import groupnorm_silu as _gn_pallas
 from repro.kernels.vdb_topk import vdb_topk as _vdb_pallas
+from repro.kernels.vdb_topk import vdb_topk_sharded as _vdb_sharded_pallas
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    # single source of truth for the backend-aware interpret rule
+    from repro.kernels.vdb_topk import resolve_interpret
+    return resolve_interpret(None)
 
 
 def flash_attention(q, k, v, *, causal: bool = False, block_q: int = 128,
@@ -28,6 +29,13 @@ def flash_attention(q, k, v, *, causal: bool = False, block_q: int = 128,
 def vdb_topk(queries, db, valid, k: int, *, block_n: int = 512):
     return _vdb_pallas(queries, db, valid, k, block_n=block_n,
                        interpret=_interpret())
+
+
+def vdb_topk_sharded(queries, slabs, valid, node_ids, k: int, *,
+                     block_n: int = 512, mask_nodes: bool = True):
+    return _vdb_sharded_pallas(queries, slabs, valid, node_ids, k,
+                               block_n=block_n, mask_nodes=mask_nodes,
+                               interpret=_interpret())
 
 
 def groupnorm_silu(x, scale, bias, *, groups: int = 32):
@@ -42,5 +50,6 @@ def adaln_modulate(x, shift, scale, *, block_t: int = 256):
 # re-export oracles for convenience
 flash_attention_ref = ref.flash_attention_ref
 vdb_topk_ref = ref.vdb_topk_ref
+vdb_topk_sharded_ref = ref.vdb_topk_sharded_ref
 groupnorm_silu_ref = ref.groupnorm_silu_ref
 adaln_modulate_ref = ref.adaln_modulate_ref

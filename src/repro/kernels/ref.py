@@ -26,6 +26,22 @@ def vdb_topk_ref(queries, db, valid, k: int):
     return jax.lax.top_k(scores, k)
 
 
+def vdb_topk_sharded_ref(queries, slabs, valid, node_ids, k: int, *,
+                         mask_nodes: bool = True):
+    """queries: (Q, D); slabs: (n_idx, nodes, cap, D); valid: (nodes, cap);
+    node_ids: (Q,).  Returns (scores, idx) of shape (n_idx, Q, k) with
+    GLOBAL slot ids ``node * cap + col``; masked candidates are -inf."""
+    n_idx, n_nodes, cap, _ = slabs.shape
+    scores = jnp.einsum("qd,incd->iqnc", queries, slabs)
+    ok = valid[None, None, :, :]
+    if mask_nodes:
+        ok = ok & (node_ids[None, :, None, None]
+                   == jnp.arange(n_nodes)[None, None, :, None])
+    scores = jnp.where(ok, scores, -jnp.inf)
+    flat = scores.reshape(n_idx, scores.shape[1], n_nodes * cap)
+    return jax.lax.top_k(flat, k)
+
+
 def groupnorm_silu_ref(x, scale, bias, *, groups: int = 32, eps: float = 1e-5):
     """x: (B, H, W, C) -> silu(groupnorm(x))."""
     dtype = x.dtype

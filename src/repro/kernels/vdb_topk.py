@@ -8,6 +8,21 @@ and a running per-query top-k lives in VMEM scratch across grid steps
 max+mask — argmax-free and Mosaic-friendly — which is cheap for the small
 k (≤ 32) a cache lookup needs.
 
+Two entry points:
+
+* :func:`vdb_topk` — one database slab (one node, one index), the PR-1
+  kernel.
+* :func:`vdb_topk_sharded` — the cluster-wide scan: BOTH dual-retrieval
+  indexes of EVERY node in one launch, grid ``(index, node, db_block)``,
+  with a query→node mask so each request only scores its scheduled
+  node's slab (``mask_nodes=False`` turns the same launch into an
+  all-nodes cluster scan the scheduler can reuse).
+
+``interpret`` defaults to ``None`` = backend-aware: compile through
+Mosaic whenever a TPU backend is present, fall back to interpret mode
+elsewhere (CPU containers, unit tests), so ``use_pallas=True`` actually
+compiles on real hardware.
+
 HBM traffic: each database row is read exactly once → the scan is
 memory-bound at ~N·D·dtype bytes, the roofline optimum for one-shot
 retrieval.
@@ -15,6 +30,7 @@ retrieval.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +40,14 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels import CompilerParams
 
 NEG_INF = -1e30
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Backend-aware interpret default: only interpret when no TPU/Mosaic
+    backend is available to compile the kernel."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
 
 
 def _vdb_kernel(q_ref, db_ref, valid_ref, score_out, idx_out,
@@ -45,11 +69,19 @@ def _vdb_kernel(q_ref, db_ref, valid_ref, score_out, idx_out,
     cols = ni * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     ok = (valid > 0) & (cols < n_total)
     s = jnp.where(ok, s, NEG_INF)
+    _merge_topk(best_s, best_i, s, cols, k)
 
-    # merge tile scores into the running top-k: k rounds of max+mask over
-    # the concatenated (k + block_n) candidates
+    @pl.when(ni == n_blocks - 1)
+    def _finalize():
+        score_out[...] = best_s[...].astype(score_out.dtype)
+        idx_out[...] = best_i[...]
+
+
+def _merge_topk(best_s, best_i, s, cand_cols, k: int) -> None:
+    """Merge one similarity tile into the running top-k: k rounds of
+    max+mask over the concatenated (k + block_n) candidates."""
     cand_s = jnp.concatenate([best_s[...], s], axis=1)          # (Q, k+bn)
-    cand_i = jnp.concatenate([best_i[...], cols], axis=1)
+    cand_i = jnp.concatenate([best_i[...], cand_cols], axis=1)
     new_s = jnp.zeros_like(best_s[...])
     new_i = jnp.zeros_like(best_i[...])
     for j in range(k):
@@ -65,16 +97,12 @@ def _vdb_kernel(q_ref, db_ref, valid_ref, score_out, idx_out,
     best_s[...] = new_s
     best_i[...] = new_i
 
-    @pl.when(ni == n_blocks - 1)
-    def _finalize():
-        score_out[...] = best_s[...].astype(score_out.dtype)
-        idx_out[...] = best_i[...]
-
 
 @functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
 def vdb_topk(queries, db, valid, k: int, *, block_n: int = 512,
-             interpret: bool = True):
+             interpret: Optional[bool] = None):
     """queries: (Q, D); db: (N, D); valid: (N,) bool → (scores, idx) (Q, k)."""
+    interpret = resolve_interpret(interpret)
     qn, d = queries.shape
     n = db.shape[0]
     block_n = min(block_n, n)
@@ -112,4 +140,105 @@ def vdb_topk(queries, db, valid, k: int, *, block_n: int = 512,
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(queries, db, valid_i)
+    return scores, idx
+
+
+def _vdb_sharded_kernel(q_ref, slab_ref, valid_ref, nid_ref, score_out,
+                        idx_out, best_s, best_i, *, k: int, block_n: int,
+                        n_blocks: int, n_nodes: int, capacity: int,
+                        mask_nodes: bool):
+    ni = pl.program_id(1)                        # node
+    bi = pl.program_id(2)                        # db block within the node
+
+    @pl.when((ni == 0) & (bi == 0))
+    def _init():                                 # new index plane starts
+        best_s[...] = jnp.full_like(best_s, NEG_INF)
+        best_i[...] = jnp.zeros_like(best_i)
+
+    q = q_ref[...].astype(jnp.float32)           # (Q, D)
+    db = slab_ref[0, 0].astype(jnp.float32)      # (block_n, D)
+    valid = valid_ref[...]                       # (1, block_n) int32
+
+    s = jax.lax.dot_general(q, db, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q, bn)
+    cols = bi * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    ok = (valid > 0) & (cols < capacity)
+    if mask_nodes:
+        nid = nid_ref[...]                       # (1, Q) int32
+        ok = ok & (nid.reshape(-1, 1) == ni)     # query sees only its node
+    s = jnp.where(ok, s, NEG_INF)
+    _merge_topk(best_s, best_i, s, ni * capacity + cols, k)
+
+    @pl.when((ni == n_nodes - 1) & (bi == n_blocks - 1))
+    def _finalize():
+        score_out[...] = best_s[...][None].astype(score_out.dtype)
+        idx_out[...] = best_i[...][None]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "mask_nodes",
+                                             "interpret"))
+def vdb_topk_sharded(queries, slabs, valid, node_ids, k: int, *,
+                     block_n: int = 512, mask_nodes: bool = True,
+                     interpret: Optional[bool] = None):
+    """Cluster-wide fused scan: all queries × all node slabs × both
+    dual-retrieval indexes in ONE launch.
+
+    queries: (Q, D); slabs: (n_idx, nodes, capacity, D) — the stacked
+    device-resident cache state (``n_idx`` = 2 for the img/txt dual
+    index); valid: (nodes, capacity) bool; node_ids: (Q,) int32 — the
+    scheduler's node assignment per query (ignored when
+    ``mask_nodes=False``: every query then scans the whole cluster).
+
+    Returns ``(scores, idx)`` of shape (n_idx, Q, k); ``idx`` is the
+    GLOBAL slot id ``node * capacity + col``.  Masked candidates carry
+    the ``NEG_INF`` sentinel.
+
+    The grid is ``(index, node, db_block)`` with the per-query running
+    top-k in VMEM scratch across the whole (node, block) sweep of each
+    index plane — every slab row is read exactly once per launch, so the
+    scan stays memory-bound at ~n_idx·nodes·capacity·D·dtype bytes
+    regardless of node count.
+    """
+    interpret = resolve_interpret(interpret)
+    n_idx, n_nodes, cap, d = slabs.shape
+    qn = queries.shape[0]
+    block_n = min(block_n, cap)
+    pad_c = (-cap) % block_n
+    if pad_c:
+        slabs = jnp.pad(slabs, ((0, 0), (0, 0), (0, pad_c), (0, 0)))
+        valid = jnp.pad(valid, ((0, 0), (0, pad_c)))
+    cap_p = cap + pad_c
+    n_blocks = cap_p // block_n
+    valid_i = valid.astype(jnp.int32)
+    nid = node_ids.astype(jnp.int32).reshape(1, qn)
+
+    kernel = functools.partial(_vdb_sharded_kernel, k=k, block_n=block_n,
+                               n_blocks=n_blocks, n_nodes=n_nodes,
+                               capacity=cap, mask_nodes=mask_nodes)
+    scores, idx = pl.pallas_call(
+        kernel,
+        grid=(n_idx, n_nodes, n_blocks),
+        in_specs=[
+            pl.BlockSpec((qn, d), lambda ii, ni, bi: (0, 0)),
+            pl.BlockSpec((1, 1, block_n, d),
+                         lambda ii, ni, bi: (ii, ni, bi, 0)),
+            pl.BlockSpec((1, block_n), lambda ii, ni, bi: (ni, bi)),
+            pl.BlockSpec((1, qn), lambda ii, ni, bi: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, qn, k), lambda ii, ni, bi: (ii, 0, 0)),
+            pl.BlockSpec((1, qn, k), lambda ii, ni, bi: (ii, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_idx, qn, k), jnp.float32),
+            jax.ShapeDtypeStruct((n_idx, qn, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((qn, k), jnp.float32),
+            pltpu.VMEM((qn, k), jnp.int32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(queries, slabs, valid_i, nid)
     return scores, idx
