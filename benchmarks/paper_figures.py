@@ -409,6 +409,84 @@ def retrieval_scan(batch: int = 8, dim: int = 512, k: int = 8,
 
 
 # ---------------------------------------------------------------------------
+# Scheduling quality: score-aware vs centroid routing (beyond-paper)
+# ---------------------------------------------------------------------------
+
+
+def scheduling_quality(corpus_n: int = 120, n_nodes: int = 4,
+                       max_batch: int = 8) -> Dict:
+    """Score-aware vs centroid routing on a skewed-cache trace across
+    offered loads: cache hit-rate, true queue delay (p50/p95) and mean
+    Eq. 8 latency per arrival rate.
+
+    The skew: corpus rows are shuffled round-robin across nodes, so
+    every node's centroid is ~the global mean (Eq. 6 routing is blind)
+    while each prompt's best reference lives on exactly one node —
+    exactly the regime where routing on the TRUE best match from the
+    cluster-wide fused scan pays.  Each cached scene is requested once
+    via a Poisson arrival process at each rate; both modes replay the
+    identical trace on identical fleets.
+
+    Stack-free: NullBackend + proxy embedder, so CI can smoke it without
+    training the diffusion stack."""
+    from repro.core.embeddings import ProxyClipEmbedder
+    from repro.core.system import CacheGenius
+    from repro.core.trace import poisson_arrivals
+    from repro.core.vdb import BlobStore, VectorDB
+    from repro.launch.serve import NullBackend
+    from repro.runtime.serving import ServingEngine
+
+    rng = np.random.default_rng(11)
+    perm = rng.permutation(corpus_n)            # skewed placement
+    order = rng.permutation(corpus_n)           # request order
+
+    images, captions, _ = make_corpus(corpus_n, res=32, seed=0)
+    embedder = ProxyClipEmbedder(render_caption)
+    img_vecs = embedder.embed_image(images)
+    txt_vecs = embedder.embed_text(captions)
+    embedder.set_corpus_anchor(img_vecs)
+    prompts = [captions[i] for i in order]
+
+    def build(routing):
+        blob = BlobStore()
+        payloads = np.array([blob.put(im) for im in images], np.int64)
+        dbs = [VectorDB(embedder.dim, corpus_n, name=f"node{i}")
+               for i in range(n_nodes)]
+        for node in range(n_nodes):
+            idxs = perm[node::n_nodes]
+            dbs[node].add(img_vecs[idxs], txt_vecs[idxs], payloads[idxs],
+                          t=0.0)
+        return CacheGenius(embedder=embedder, dbs=dbs, blob_store=blob,
+                           backend=NullBackend(32), routing=routing)
+
+    out: Dict = {"n_requests": corpus_n, "n_nodes": n_nodes,
+                 "max_batch": max_batch}
+    gains = []
+    for rate in C.ARRIVAL_RATES:
+        hit = {}
+        for routing in ("score", "centroid"):
+            system = build(routing)
+            engine = ServingEngine(system, max_batch=max_batch)
+            done = engine.run(poisson_arrivals(prompts, rate, seed=13))
+            assert len(done) == len(prompts)
+            qd = np.array([c.queue_delay for c in done])
+            lat = np.array(system.stats.latencies)
+            tag = f"{routing}_rate{rate:g}"
+            out[f"hit_rate_{tag}"] = system.stats.hit_rate
+            out[f"qd_p50_{tag}"] = float(np.percentile(qd, 50))
+            out[f"qd_p95_{tag}"] = float(np.percentile(qd, 95))
+            out[f"latency_{tag}"] = float(lat.mean())
+            hit[routing] = system.stats.hit_rate
+        gains.append(hit["score"] - hit["centroid"])
+    out["hit_rate_gain_mean"] = float(np.mean(gains))
+    # the acceptance gate: score routing >= centroid at every load, and
+    # strictly better somewhere
+    out["score_beats_centroid_hitrate"] = bool(
+        all(g >= 0.0 for g in gains) and max(gains) > 0.0)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Fig. 19 — LCU vs LRU/LFU/FIFO hit rate across cache updates
 # ---------------------------------------------------------------------------
 
@@ -558,6 +636,7 @@ ALL_BENCHMARKS = {
     "serving_batch_throughput": serving_batch_throughput,
     "serving_latency_curve": serving_latency_curve,
     "retrieval_scan": retrieval_scan,
+    "scheduling_quality": scheduling_quality,
     "fig19_lcu": fig19_lcu,
     "table4_reference": table4_reference,
     "table5_embeddings": table5_embeddings,
@@ -565,4 +644,4 @@ ALL_BENCHMARKS = {
 
 # Benchmarks that never touch the trained diffusion stack — the driver
 # skips the (slow) stack build when only these are selected.
-STACK_FREE = {"retrieval_scan"}
+STACK_FREE = {"retrieval_scan", "scheduling_quality"}

@@ -69,7 +69,9 @@ def main() -> int:
                          "serving-throughput benchmark (default: 1,4,8)")
     ap.add_argument("--arrival-rates", type=_arrival_rates, default=None,
                     help="comma-separated offered loads (req/s) for the "
-                         "serving latency-vs-load curve (default: 10,40,160)")
+                         "serving latency-vs-load curve and the "
+                         "scheduling_quality routing comparison "
+                         "(default: 10,40,160)")
     ap.add_argument("--nodes", type=_pos_ints, default=None,
                     help="comma-separated fleet sizes for the retrieval_scan "
                          "benchmark (default: 2,4,8)")

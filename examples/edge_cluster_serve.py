@@ -1,9 +1,15 @@
-"""Edge-cluster serving scenario: heterogeneous nodes, continuous batching
-under a timestamped arrival process, node failure, cache maintenance, and
-the historical-query fast path — the operational story of §V/§VI, runnable
-on one CPU.
+"""Edge-cluster serving scenario: heterogeneous nodes, score-aware request
+scheduling, continuous batching under a timestamped arrival process, node
+failure, cache maintenance, and the historical-query fast path — the
+operational story of §V/§VI, runnable on one CPU.
 
     PYTHONPATH=src python examples/edge_cluster_serve.py
+
+The main run uses score-aware routing (the default; on the CLI:
+``python -m repro.launch.serve --routing score``) — every request is
+routed on its true best composite match per node from the one fused
+cluster scan.  Phase 4 replays the same workload under the Eq. 6
+centroid baseline (``--routing centroid``) and prints the hit-rate delta.
 """
 from __future__ import annotations
 
@@ -23,14 +29,16 @@ def _queue_stats(done):
 def main() -> None:
     system, _, _, _ = build_system(
         n_nodes=4, corpus_n=500, capacity_per_node=150,
-        node_speeds=[1.0, 1.0, 0.82, 0.45])     # 4090D/4090D/3090/2070S
+        node_speeds=[1.0, 1.0, 0.82, 0.45],     # 4090D/4090D/3090/2070S
+        routing="score")                        # route on true best match
     system.cache_capacity = 500
     engine = ServingEngine(system, max_batch=8)
 
     trace = RequestTrace(seed=2, repeat_rate=0.15, quality_rate=0.1)
     reqs = list(trace.generate(240))
 
-    print("phase 1: steady Poisson traffic (120 requests, 60 req/s offered)")
+    print("phase 1: steady Poisson traffic (120 requests, 60 req/s offered, "
+          "--routing score)")
     done = engine.run(poisson_arrivals(reqs[:120], rate=60.0, seed=2))
     st = system.stats
     print(f"  routes={st.route_counts}  hit_rate={st.hit_rate:.2f}  "
@@ -62,8 +70,25 @@ def main() -> None:
     print(f"  cache {before} -> {system.total_size} entries "
           f"({n_evicted} semantic outliers evicted, blob store synced)")
 
+    print("phase 4: score-aware vs centroid routing on the same workload")
+    score_hit = _replay_hit_rate(reqs[:120], routing="score")
+    cent_hit = _replay_hit_rate(reqs[:120], routing="centroid")
+    print(f"  hit_rate: score={score_hit:.3f}  centroid={cent_hit:.3f}  "
+          f"delta={score_hit - cent_hit:+.3f}  (score mode routes each "
+          f"request to the node whose cache actually holds its best "
+          f"reference — one fused cluster scan per micro-batch)")
+
     print(f"\nhistory fast-path hits: {system.scheduler.history_hits}")
     print(f"final route mix: {st.route_counts}")
+
+
+def _replay_hit_rate(reqs, *, routing: str) -> float:
+    """Fresh small fleet, identical trace, selected routing mode."""
+    system, _, _, _ = build_system(
+        n_nodes=4, corpus_n=500, capacity_per_node=60, routing=routing)
+    engine = ServingEngine(system, max_batch=8)
+    engine.run(poisson_arrivals(reqs, rate=60.0, seed=3))
+    return system.stats.hit_rate
 
 
 if __name__ == "__main__":

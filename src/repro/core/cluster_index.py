@@ -19,8 +19,12 @@ Retrieval is ONE fused scan per micro-batch regardless of node count:
 launch — the jnp path is one masked einsum + top-k, the Pallas path is
 :func:`repro.kernels.vdb_topk.vdb_topk_sharded` with grid
 ``(index, node, db_block)`` and the per-query running top-k in VMEM
-scratch.  ``search_cluster`` is the unmasked all-nodes mode (each query
-scans the whole cluster; global slot ids) that the scheduler can reuse.
+scratch.  Two all-nodes modes share the same launch structure:
+``search_cluster`` (one flat global candidate list per query) and
+``search_cluster_nodes`` (a top-k PER node per query — the scan that
+score-aware scheduling issues once per micro-batch and the Retrieve
+stage then reuses for the chosen node's candidates, collapsing the
+Schedule and Retrieve device scans into one).
 
 Each :class:`repro.core.vdb.VectorDB` stays the per-node VIEW over this
 shared state: its numpy arrays remain the host source of truth for
@@ -68,6 +72,14 @@ def _fused_topk(slabs, valid, queries, node_ids, k: int, mask_nodes: bool):
     from repro.kernels.ref import vdb_topk_sharded_ref
     return vdb_topk_sharded_ref(queries, slabs, valid, node_ids, k,
                                 mask_nodes=mask_nodes)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _fused_topk_pernode(slabs, valid, queries, k: int):
+    """jnp path of the per-node scan (one einsum + per-node top-k) —
+    jitted delegation to the shared test oracle."""
+    from repro.kernels.ref import vdb_topk_pernode_ref
+    return vdb_topk_pernode_ref(queries, slabs, valid, k)
 
 
 class ClusterIndex:
@@ -197,14 +209,43 @@ class ClusterIndex:
     def _planes(self, index: str) -> Tuple[int, ...]:
         return {"img": (0,), "txt": (1,), "both": (0, 1)}[index]
 
-    def _scan(self, Qn: np.ndarray, node_ids: np.ndarray, k: int,
-              index: str, mask_nodes: bool):
-        """The one device launch: returns per-plane (scores, global idx)
-        numpy arrays of shape (planes, Qpad, k)."""
+    @staticmethod
+    def _prep_queries(query_vecs: np.ndarray) -> Tuple[np.ndarray, int]:
+        """Shared query prep for every scan mode: L2-normalise and pad
+        the block to a power-of-two bucket (micro-batch sizes vary, and
+        an unpadded (Q, D) shape would re-compile per distinct Q).
+        Returns ``(padded_queries, true_batch)``; batch 0 -> (None, 0)."""
+        Q = np.atleast_2d(np.asarray(query_vecs, np.float32))
+        b = Q.shape[0]
+        if b == 0:
+            return None, 0
+        Qn = l2n(Q)
+        bucket = next_pow2(b)
+        if bucket != b:
+            Qn = np.concatenate(
+                [Qn, np.zeros((bucket - b, Qn.shape[1]), np.float32)])
+        return Qn, b
+
+    def _scan(self, Qn: np.ndarray, node_ids: Optional[np.ndarray], k: int,
+              index: str, mask_nodes: bool, *, per_node: bool = False):
+        """The one device launch (every scan mode dispatches here):
+        returns (scores, global idx) numpy arrays of shape
+        (planes, Qpad, k) — or (planes, nodes, Qpad, k) with
+        ``per_node=True``, where the top-k is kept per node and
+        ``node_ids``/``mask_nodes`` are ignored."""
         planes = self._planes(index)
         self.stats["fused_scans"] += 1
         slabs = (self._slabs if planes == (0, 1)
                  else self._slabs[planes[0]:planes[0] + 1])
+        if per_node:
+            if self.use_pallas:
+                from repro.kernels.vdb_topk import vdb_topk_pernode
+                s, i = vdb_topk_pernode(jnp.asarray(Qn), slabs, self._valid,
+                                        k, interpret=self.interpret)
+            else:
+                s, i = _fused_topk_pernode(slabs, self._valid,
+                                           jnp.asarray(Qn), k)
+            return np.asarray(s), np.asarray(i)
         nids = jnp.asarray(node_ids, jnp.int32)
         if self.use_pallas:
             from repro.kernels.vdb_topk import vdb_topk_sharded
@@ -229,8 +270,7 @@ class ClusterIndex:
         invalid/masked candidates dropped, scores descending, slots LOCAL
         to the query's node.
         """
-        Q = np.atleast_2d(np.asarray(query_vecs, np.float32))
-        b = Q.shape[0]
+        Qn, b = self._prep_queries(query_vecs)
         if b == 0:
             return []
         nids = np.asarray(list(node_ids), np.int32)
@@ -238,12 +278,8 @@ class ClusterIndex:
             for ni in nids:
                 if self.dbs[ni] is not None:
                     self.dbs[ni].query_count += 1
-        Qn = l2n(Q)
-        bucket = next_pow2(b)
-        if bucket != b:
-            Qn = np.concatenate(
-                [Qn, np.zeros((bucket - b, Qn.shape[1]), np.float32)])
-            nids = np.concatenate([nids, np.zeros(bucket - b, np.int32)])
+        if len(Qn) != b:
+            nids = np.concatenate([nids, np.zeros(len(Qn) - b, np.int32)])
         k = min(k, self.capacity)
         s, i = self._scan(Qn, nids, k, index, mask_nodes=True)
         out = []
@@ -255,23 +291,56 @@ class ClusterIndex:
     def search_cluster(self, query_vecs: np.ndarray, k: int, *,
                        index: str = "both",
                        ) -> List[Tuple[np.ndarray, np.ndarray]]:
-        """All-nodes mode: each query scans the WHOLE cluster in the same
-        single launch; returned slots are global ids
-        ``node * capacity + col`` (node = slot // capacity)."""
-        Q = np.atleast_2d(np.asarray(query_vecs, np.float32))
-        b = Q.shape[0]
+        """All-nodes flat mode: each query scans the WHOLE cluster in the
+        same single launch and gets ONE global candidate list; returned
+        slots are global ids ``node * capacity + col``
+        (``node = slot // capacity``).
+
+        Note for routing callers: a single hot node can monopolise the
+        global top-k, hiding every other node's best match — score-aware
+        scheduling therefore uses :meth:`search_cluster_nodes`, which
+        keeps a top-k PER node at identical slab traffic."""
+        Qn, b = self._prep_queries(query_vecs)
         if b == 0:
             return []
-        Qn = l2n(Q)
-        bucket = next_pow2(b)
-        if bucket != b:
-            Qn = np.concatenate(
-                [Qn, np.zeros((bucket - b, Qn.shape[1]), np.float32)])
         k = min(k, self.capacity * max(self.n_nodes, 1))
         s, i = self._scan(Qn, np.zeros(len(Qn), np.int32), k, index,
                           mask_nodes=False)
         return [_union_topk(list(s[:, row]), list(i[:, row]))
                 for row in range(b)]
+
+    def search_cluster_nodes(self, query_vecs: np.ndarray, k: int, *,
+                             index: str = "both",
+                             ) -> List[List[Tuple[np.ndarray, np.ndarray]]]:
+        """All-nodes PER-NODE mode — the schedule+retrieve fusion scan.
+
+        ONE device launch (jnp: one einsum + per-node top-k; Pallas:
+        :func:`repro.kernels.vdb_topk.vdb_topk_pernode`) answers every
+        query against EVERY node's slab across both dual-retrieval
+        indexes.  Returns ``out[query][node] = (scores, slots)`` with
+        exactly :meth:`VectorDB.search` semantics per node (deduped union
+        across indexes, invalid candidates dropped, scores descending,
+        slots LOCAL to that node) — so ``out[q][n]`` is bit-identical to
+        what a masked ``search_batch`` on node ``n`` would have returned,
+        and the Retrieve stage can reuse the chosen node's row without a
+        second scan while the scheduler routes on every node's best
+        match.
+        """
+        Qn, b = self._prep_queries(query_vecs)
+        if b == 0:
+            return []
+        k = min(k, self.capacity)
+        s, i = self._scan(Qn, None, k, index, mask_nodes=False,
+                          per_node=True)         # (planes, nodes, Qpad, k)
+        out: List[List[Tuple[np.ndarray, np.ndarray]]] = []
+        for row in range(b):
+            per_node = []
+            for node in range(self.n_nodes):
+                local = i[:, node, row] - node * self.capacity
+                per_node.append(_union_topk(list(s[:, node, row]),
+                                            list(local)))
+            out.append(per_node)
+        return out
 
     # -- derived state ------------------------------------------------------
 

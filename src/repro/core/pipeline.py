@@ -14,11 +14,18 @@ Stage contracts (each stage sees the whole micro-batch):
 
 * **Embed**     — prompt optimisation + ONE ``embed_text`` call.
 * **Schedule**  — ONE ``RequestScheduler.schedule_batch`` (single history
-  matmul, single node-representation similarity).
+  matmul, single node-representation similarity).  In score-aware routing
+  mode (``system.routing == "score"``, the default with a cluster index)
+  it ALSO issues the micro-batch's one cluster-wide device scan
+  (``ClusterIndex.search_cluster_nodes``): every request's top-k on EVERY
+  node feeds both the per-node best-composite routing matrix and —
+  stashed on the state — the chosen node's retrieval candidates.
 * **Retrieve**  — ONE fused ``ClusterIndex.search_batch`` device scan for
   the WHOLE micro-batch (all touched nodes, both dual-retrieval indexes,
-  query→node masked); per-node ``VectorDB.search_batch`` only as the
-  no-cluster fallback.
+  query→node masked); a no-op in score mode (the Schedule scan already
+  produced every chosen node's rows, so Schedule+Retrieve = ONE scan
+  total); per-node ``VectorDB.search_batch`` only as the no-cluster
+  fallback.
 * **Score**     — composite Eq. 7 scoring of every request's candidate set
   via ``Embedder.score_candidates`` — one vectorised matmul per request,
   never per-candidate Python ``clip_score``/``pick_score`` calls; lazily
@@ -191,6 +198,7 @@ class RequestState:
     ret_scores: np.ndarray = field(default_factory=lambda: np.empty(0))
     ret_slots: np.ndarray = field(
         default_factory=lambda: np.empty(0, np.int64))
+    retrieved: bool = False    # rows already filled (score-mode Schedule)
     best_slot: int = -1
     best_score: float = -1.0
     score_thunk: Optional[Callable[[], None]] = None
@@ -214,6 +222,22 @@ class BatchContext:
 # ---------------------------------------------------------------------------
 
 
+def _composite_scores(system, pvec: np.ndarray,
+                      ivecs: np.ndarray) -> np.ndarray:
+    """One vectorised Eq. 7 evaluation of a candidate set (single home of
+    the scalar-embedder fallback) — shared by score-mode Schedule routing
+    and the Score stage so the two can never diverge."""
+    score_fn = getattr(system.embedder, "score_candidates", None)
+    if score_fn is not None:
+        clips, picks = score_fn(pvec, ivecs)
+    else:   # custom embedders without the vectorised entry point
+        clips = np.array([system.embedder.clip_score(pvec, v)
+                          for v in ivecs])
+        picks = np.array([system.embedder.pick_score(pvec, v)
+                          for v in ivecs])
+    return system.policy.composite_scores(clips, picks)
+
+
 class EmbedStage:
     name = "Embed"
 
@@ -232,27 +256,106 @@ class EmbedStage:
 
 
 class ScheduleStage:
+    """ONE routing pass for the whole micro-batch.
+
+    Centroid mode: one ``RequestScheduler.schedule_batch`` call (single
+    history matmul, single node-representation similarity).
+
+    Score mode (``system.routing == "score"`` with a cluster index): the
+    stage additionally issues the micro-batch's single cluster-wide
+    device scan — ``ClusterIndex.search_cluster_nodes`` — so every
+    request sees its top-k candidates on EVERY node.  Per-node best
+    composite (Eq. 7) scores are computed with the same vectorised
+    ``score_candidates`` path the Score stage uses and handed to
+    ``schedule_batch(node_scores=...)``; the chosen node's candidate row
+    (bit-identical to what a masked retrieval scan would return) is then
+    stashed on the state, making the Retrieve stage a no-op.  Schedule +
+    Retrieve therefore cost exactly ONE device scan per micro-batch,
+    pinned by the call-count test in ``tests/test_scheduling_score.py``.
+    """
+
     name = "Schedule"
 
     def run(self, ctx: BatchContext) -> None:
         system = ctx.system
-        if system.use_scheduler:
-            decisions = system.scheduler.schedule_batch(
-                ctx.pvecs, system.dbs,
-                quality_tiers=[s.quality_tier for s in ctx.states],
-                prompt_keys=[s.pkey for s in ctx.states])
-        else:
-            decisions = [ScheduleDecision(node=int(s.clock) % len(system.dbs))
-                         for s in ctx.states]
+        if not system.use_scheduler:
+            for s in ctx.states:
+                s.decision = ScheduleDecision(
+                    node=int(s.clock) % len(system.dbs))
+            return
+        cluster = getattr(system, "cluster_index", None)
+        node_rows = None
+        node_best = None
+        best_details = None
+        if getattr(system, "routing", "centroid") == "score" \
+                and cluster is not None:
+            node_rows = cluster.search_cluster_nodes(ctx.pvecs, system.topk)
+            node_best, best_details = self._node_best_scores(
+                system, ctx, node_rows)
+        decisions = system.scheduler.schedule_batch(
+            ctx.pvecs, system.dbs,
+            quality_tiers=[s.quality_tier for s in ctx.states],
+            prompt_keys=[s.pkey for s in ctx.states],
+            node_scores=node_best)
         for s, d in zip(ctx.states, decisions):
             s.decision = d
+            if node_rows is not None and d.fast_path is None:
+                s.ret_scores, s.ret_slots = node_rows[s.index][d.node]
+                s.retrieved = True
+                # routing already composite-scored the chosen node's
+                # candidates — reuse its argmax so the Score stage never
+                # re-scores them (one scoring matmul per request, total)
+                picked = best_details[s.index].get(d.node)
+                if picked is not None:
+                    s.best_slot, s.best_score = picked
+                db = system.dbs[d.node]
+                db.query_count += 1       # same accounting as a masked scan
+
+    @staticmethod
+    def _node_best_scores(system, ctx: BatchContext, node_rows):
+        """Score-mode routing input: a (B, nodes) matrix of each
+        request's best composite Eq. 7 score per node (0.0 where a node
+        holds no valid candidate), plus per-request ``{node: (slot,
+        score)}`` argmax details so the chosen node's best is reused
+        downstream instead of re-scored.  One vectorised
+        ``score_candidates`` call per request over ALL nodes' candidates;
+        embedders without the vectorised entry point fall back to scalar
+        calls via the shared :func:`_composite_scores` helper."""
+        n_nodes = len(system.dbs)
+        best = np.zeros((len(ctx.states), n_nodes))
+        details: List[Dict[int, Tuple[int, float]]] = \
+            [{} for _ in ctx.states]
+        for s in ctx.states:
+            spans = []
+            cand_vecs = []
+            for node in range(n_nodes):
+                _, slots = node_rows[s.index][node]
+                cand_vecs.append(system.dbs[node].img_vecs[slots])
+                spans.append(len(slots))
+            if not sum(spans):
+                continue
+            comp = _composite_scores(system, s.pvec,
+                                     np.concatenate(cand_vecs))
+            off = 0
+            for node, n in enumerate(spans):
+                if n:
+                    j = int(np.argmax(comp[off:off + n]))
+                    slot = int(node_rows[s.index][node][1][j])
+                    score = float(comp[off + j])
+                    best[s.index, node] = score
+                    details[s.index][node] = (slot, score)
+                off += n
+        return best, details
 
 
 class RetrieveStage:
     """ONE fused device scan per micro-batch: all retrieval-path queries
     against all touched node slabs through the cluster's device-resident
     index (``ClusterIndex.search_batch`` with the query→node mask) —
-    never a per-node Python loop, never a host→device slab copy.  Systems
+    never a per-node Python loop, never a host→device slab copy.  Under
+    score-aware routing the Schedule stage's cluster-wide scan already
+    filled every chosen node's rows (``state.retrieved``), so this stage
+    issues NOTHING — Schedule+Retrieve collapse to one scan.  Systems
     without a cluster index (custom stage lists, standalone fleets) fall
     back to the per-node ``VectorDB.search_batch`` grouping."""
 
@@ -260,7 +363,8 @@ class RetrieveStage:
 
     def run(self, ctx: BatchContext) -> None:
         system = ctx.system
-        members = [s for s in ctx.states if s.decision.fast_path is None]
+        members = [s for s in ctx.states
+                   if s.decision.fast_path is None and not s.retrieved]
         if not members:
             return
         cluster = getattr(system, "cluster_index", None)
@@ -289,31 +393,30 @@ class ScoreStage:
     in-flight batch member is only decidable there, and coalesced
     requests must not pay for scoring (the pre-pipeline loop checked
     dedup before scoring too).  The candidate snapshot is unchanged by
-    the deferral: Plan only touches access stats, archives land later."""
+    the deferral: Plan only touches access stats, archives land later.
+
+    Score-mode requests arrive already scored: routing composite-scored
+    every node's candidates at schedule time, and the chosen node's
+    argmax was stashed as ``best_slot``/``best_score`` — this stage
+    attaches no thunk for them (one scoring matmul per request, total).
+    """
 
     name = "Score"
 
     def run(self, ctx: BatchContext) -> None:
         system = ctx.system
-        score_fn = getattr(system.embedder, "score_candidates", None)
         for s in ctx.states:
             if s.decision.fast_path is not None or len(s.ret_slots) == 0:
                 continue
-            s.score_thunk = self._make_thunk(system, s, score_fn)
+            if s.best_slot >= 0:
+                continue    # score-mode Schedule already picked the best
+            s.score_thunk = self._make_thunk(system, s)
 
     @staticmethod
-    def _make_thunk(system, s: RequestState, score_fn):
+    def _make_thunk(system, s: RequestState):
         def evaluate() -> None:
             db = system.dbs[s.decision.node]
-            ivecs = db.img_vecs[s.ret_slots]
-            if score_fn is not None:
-                clips, picks = score_fn(s.pvec, ivecs)
-            else:   # custom embedders without the vectorised entry point
-                clips = np.array([system.embedder.clip_score(s.pvec, v)
-                                  for v in ivecs])
-                picks = np.array([system.embedder.pick_score(s.pvec, v)
-                                  for v in ivecs])
-            comp = system.policy.composite_scores(clips, picks)
+            comp = _composite_scores(system, s.pvec, db.img_vecs[s.ret_slots])
             j = int(np.argmax(comp))
             s.best_slot = int(s.ret_slots[j])
             s.best_score = float(comp[j])
@@ -435,12 +538,25 @@ class ArchiveStage:
 class FinishStage:
     """Stats, Eq. 8 latency, periodic maintenance, ``ServeResult``.
 
+    Maintenance runs at the GROUP BOUNDARY: the eviction sweep fires
+    after the whole micro-batch's results are recorded, whenever the
+    request counter crossed a ``maintenance_interval`` multiple inside
+    the batch (earlier revisions swept mid-loop, which made cache state
+    depend on how a trace was partitioned into batches whenever the
+    interval was smaller than a group — the ROADMAP
+    maintenance-mid-flight caveat).  At most one sweep fires per batch,
+    so partition-independence additionally needs ``maintenance_interval
+    >= max_batch`` — ``ServingEngine`` clamps-and-warns to enforce it,
+    and this stage warns direct ``serve_batch`` callers whose batch
+    crossed more than one interval boundary (coalesced sweeps).
+
     Wall-clock accounting: each request reports the micro-batch's total
     wall time divided by the batch size (batch-amortised per-request
     cost); the batch total itself is appended to
     ``ServeStats.batch_wall_latencies``.  The total is taken AFTER the
-    result loop so maintenance sweeps triggered mid-batch stay inside the
-    measurement; results and stats are back-filled with the final share.
+    result loop AND the boundary maintenance sweep, so sweeps stay inside
+    the measurement; results and stats are back-filled with the final
+    share.
 
     The TRUE per-request accounting (``stage_walls`` / ``wall_total`` /
     ``queue_delay``) is back-filled by the ``ServePipeline.run`` driver
@@ -453,6 +569,7 @@ class FinishStage:
     def run(self, ctx: BatchContext) -> None:
         system = ctx.system
         n = len(ctx.states)
+        requests_before = system.stats.requests
         wall = 0.0          # back-filled once the batch total is known
         for s in ctx.states:
             p = s.plan
@@ -470,19 +587,31 @@ class FinishStage:
                 s.result = system._finish(
                     s.image, Route.TXT2IMG, p.node, 0.0, wall,
                     steps=p.steps, retrieved=False, fast="priority")
+            elif p.kind == "cached":
+                s.image = p.image
+                s.result = system._finish(
+                    s.image, Route.HIT_RETURN, p.node, p.score, wall,
+                    steps=0)
             else:
-                if (system.stats.requests % system.maintenance_interval
-                        == system.maintenance_interval - 1):
-                    system.maintain()
-                if p.kind == "cached":
-                    s.image = p.image
-                    s.result = system._finish(
-                        s.image, Route.HIT_RETURN, p.node, p.score, wall,
-                        steps=0)
-                else:
-                    s.result = system._finish(
-                        s.image, p.route, p.node, p.score, wall,
-                        steps=p.steps)
+                s.result = system._finish(
+                    s.image, p.route, p.node, p.score, wall,
+                    steps=p.steps)
+        # group-boundary maintenance: sweep once if this batch crossed an
+        # interval multiple (every request's archive is already in)
+        interval = system.maintenance_interval
+        if n > interval:
+            # a batch wider than the interval cannot keep the sweep
+            # cadence (boundary sweeps shift/coalesce) — direct
+            # serve_batch callers must hear about it too, not just
+            # ServingEngine users (which clamp up front)
+            import warnings
+            warnings.warn(
+                f"micro-batch of {n} exceeds maintenance_interval="
+                f"{interval}; sweeps run once per batch at the group "
+                "boundary — keep the interval >= the batch size",
+                RuntimeWarning, stacklevel=4)
+        if requests_before // interval != system.stats.requests // interval:
+            system.maintain()
         t_batch = time.perf_counter() - ctx.t_wall0
         wall = t_batch / n
         system.stats.batch_wall_latencies.append(t_batch)

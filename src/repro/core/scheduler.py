@@ -1,8 +1,25 @@
-"""Request scheduler (paper §IV-E).
+"""Request scheduler (paper §IV-E) — centroid and score-aware routing.
 
-Routes each request to the edge node whose VDB's mean embedding (the "node
-representation vector") is most cosine-similar to the prompt embedding
-(Eq. 6).  Adds the paper's two fast paths:
+Routes each request to an edge node, in one of two modes:
+
+* ``"centroid"`` — the paper's Eq. 6 baseline: route to the node whose
+  VDB's mean embedding (the "node representation vector") is most
+  cosine-similar to the prompt embedding.  The centroid is a coarse
+  partition proxy: it says what a node's cache is ABOUT, not whether it
+  actually holds a good reference for THIS prompt.
+* ``"score"`` — route on the node's TRUE best match: the serve pipeline
+  hands :meth:`RequestScheduler.schedule_batch` a ``(batch, nodes)``
+  matrix of per-node best composite (Eq. 7) scores from ONE cluster-wide
+  device scan (``ClusterIndex.search_cluster_nodes``), and the routing
+  utility blends that best-match score with a small centroid-affinity
+  prior (keeps novel prompts clustering semantically, so caches stay
+  skew-partitioned), the queue-depth load penalty, and an
+  expected-latency term from the Eq. 8 latency model (slow nodes pay
+  for the steps their best match would still require).  This mirrors
+  how Approximate Caching (NIRVANA) selects references by actual
+  retrieval hit quality rather than partition proxies.
+
+Both modes share the paper's two fast paths:
 
 * **historical query cache** — near-duplicate prompts (cosine above
   ``dedup_threshold``) return the previously generated image directly,
@@ -11,7 +28,7 @@ representation vector") is most cosine-similar to the prompt embedding
   quality-tier users are pinned to the fastest node and forced through the
   full text-to-image path for maximum quality.
 
-The scheduler also load-balances: the similarity score is penalised by each
+The scheduler also load-balances: the routing utility is penalised by each
 node's queue depth so a hot cluster does not starve (the paper's async task
 queue serves the same purpose).
 """
@@ -28,6 +45,11 @@ from repro.utils import l2n
 
 @dataclass
 class NodeInfo:
+    """Per-node scheduling state: relative denoise-step throughput
+    (``speed``, the paper's heterogeneous RTX mix), current ``queue_depth``
+    (the load-penalty input), and liveness (``alive=False`` nodes are
+    never routed to — see ``CacheGenius.fail_node``)."""
+
     index: int
     speed: float = 1.0           # relative denoise-step throughput (RTX mix)
     queue_depth: int = 0
@@ -36,6 +58,17 @@ class NodeInfo:
 
 @dataclass
 class ScheduleDecision:
+    """One request's routing outcome.
+
+    ``fast_path`` is ``None`` (normal retrieval path), ``"history"``
+    (historical-query duplicate; ``history_payload`` is the blob id to
+    return) or ``"priority"`` (quality-tier repeat pinned to the fastest
+    node).  ``match_score`` carries the similarity the decision was based
+    on: the history-cache cosine for history decisions, the centroid
+    similarity minus load penalty in centroid mode, or the routed node's
+    best composite (Eq. 7) score in score mode — PlanStage uses it to
+    arbitrate history hits against in-flight batch members."""
+
     node: int
     fast_path: Optional[str] = None      # None | "history" | "priority"
     history_payload: Optional[int] = None
@@ -44,10 +77,31 @@ class ScheduleDecision:
 
 @dataclass
 class RequestScheduler:
+    """Batch-first request router (see module docstring for the two
+    routing modes and the fast paths).
+
+    Weights of the score-mode routing utility (all applied to scores on
+    the Eq. 7 [0, 1] scale):
+
+    * ``balance_weight`` — per-queued-request penalty (both modes);
+    * ``affinity_weight`` — centroid-similarity prior blended into score
+      mode so novel prompts (no meaningful best match anywhere) still
+      cluster semantically instead of all chasing the fastest node;
+    * ``latency_weight`` — penalty per unit of expected Eq. 8 latency
+      (normalised by the full-generation latency at speed 1.0), from the
+      route the node's best match would take on that node's speed.  Set
+      by ``CacheGenius`` wiring ``policy``/``latency_model``; without
+      them the term is skipped.
+    """
+
     nodes: List[NodeInfo]
     dedup_threshold: float = 0.97
     balance_weight: float = 0.02
     history_capacity: int = 4096
+    affinity_weight: float = 0.10
+    latency_weight: float = 0.05
+    policy: Optional[object] = None          # GenerationPolicy (score mode)
+    latency_model: Optional[object] = None   # LatencyModel (score mode)
     _hist_vecs: np.ndarray = field(default=None, repr=False)  # type: ignore
     _hist_payloads: List[int] = field(default_factory=list, repr=False)
     _hist_hits: int = 0
@@ -76,6 +130,11 @@ class RequestScheduler:
     def schedule(self, prompt_vec: np.ndarray, dbs: Sequence[VectorDB], *,
                  quality_tier: bool = False, prompt_key: Optional[int] = None,
                  ) -> ScheduleDecision:
+        """Route ONE request (centroid mode only — the scalar legacy
+        surface; the serve pipeline routes whole micro-batches through
+        :meth:`schedule_batch`, which is also where score-aware routing
+        lives).  Unlike ``schedule_batch`` this mutates ``queue_depth``:
+        callers pair it with :meth:`complete`."""
         # fast path 1: historical query cache
         hist = self._history_lookup(prompt_vec)
         if hist is not None:
@@ -109,6 +168,7 @@ class RequestScheduler:
     def schedule_batch(self, prompt_vecs: np.ndarray, dbs: Sequence[VectorDB],
                        *, quality_tiers: Optional[Sequence[bool]] = None,
                        prompt_keys: Optional[Sequence[Optional[int]]] = None,
+                       node_scores: Optional[np.ndarray] = None,
                        ) -> List[ScheduleDecision]:
         """Embed-and-route a whole micro-batch in one shot.
 
@@ -117,6 +177,16 @@ class RequestScheduler:
         similarity matmul — then the per-request fast-path / priority /
         load logic runs over the precomputed rows in submission order,
         mutating ``_prompt_counts`` exactly like sequential calls.
+
+        ``node_scores`` switches routing to SCORE mode: a ``(b, nodes)``
+        matrix of each request's best composite (Eq. 7) match on every
+        node — produced by the Schedule stage from ONE cluster-wide
+        ``ClusterIndex.search_cluster_nodes`` scan (empty nodes = 0.0).
+        The routing utility becomes ``best_match + affinity_weight *
+        centroid_sim - balance_weight * queue_depth - latency_weight *
+        expected_latency`` (see :meth:`_score_utilities`); ``None`` keeps
+        the Eq. 6 centroid-only baseline.  Fast paths are identical in
+        both modes.
 
         Batch semantics: the micro-batch is treated as scheduled-and-
         completed atomically, so queue depths are read (for the load
@@ -135,6 +205,7 @@ class RequestScheduler:
                      if self._hist_vecs.shape[0] else None)      # (b, H)
         reps = self.node_vectors(dbs)                            # built once
         base_sims = Qn @ reps.T                                  # (b, N)
+        lat_full = self._full_gen_latency()                      # hoisted
         decisions: List[ScheduleDecision] = []
         for i in range(b):
             # fast path 1: historical query cache
@@ -157,6 +228,13 @@ class RequestScheduler:
                     decisions.append(ScheduleDecision(node=fastest.index,
                                                       fast_path="priority"))
                     continue
+            if node_scores is not None:          # score-aware routing
+                util = self._score_utilities(node_scores[i], base_sims[i],
+                                             lat_full)
+                node = int(np.argmax(util))
+                decisions.append(ScheduleDecision(
+                    node=node, match_score=float(node_scores[i][node])))
+                continue
             sims = base_sims[i].copy()
             for n in self.nodes:
                 if not n.alive:
@@ -167,6 +245,46 @@ class RequestScheduler:
             decisions.append(ScheduleDecision(node=node,
                                               match_score=float(sims[node])))
         return decisions
+
+    def _full_gen_latency(self) -> Optional[float]:
+        """Speed-1.0 full-generation Eq. 8 latency — the normaliser of
+        the score-mode latency penalty, constant per batch (``None``
+        disables the term when policy/latency_model are unwired)."""
+        if self.policy is None or self.latency_model is None:
+            return None
+        from repro.core.policy import Route
+        return self.latency_model.latency(
+            Route.TXT2IMG, self.policy.steps_full, node_speed=1.0)
+
+    def _score_utilities(self, best_row: np.ndarray,
+                         centroid_row: np.ndarray,
+                         lat_full: Optional[float]) -> np.ndarray:
+        """Score-mode routing utility for one request.
+
+        ``best_row`` — best composite (Eq. 7) match per node; dominant
+        term, so a node that can actually serve a HIT_RETURN/IMG2IMG
+        reference wins.  ``centroid_row`` — Eq. 6 centroid similarities;
+        the ``affinity_weight`` prior keeps novel prompts (best ~0
+        everywhere) semantically clustered.  Queue depth pays
+        ``balance_weight`` each; the latency term charges each node the
+        Eq. 8 latency its best match would incur there (route thresholds
+        from ``policy``, per-step time scaled by node speed), normalised
+        by ``lat_full`` (:meth:`_full_gen_latency`).  Dead nodes are
+        -inf.
+        """
+        util = (np.asarray(best_row, np.float64)
+                + self.affinity_weight * np.asarray(centroid_row, np.float64))
+        for n in self.nodes:
+            if not n.alive:
+                util[n.index] = -np.inf
+                continue
+            util[n.index] -= self.balance_weight * n.queue_depth
+            if lat_full:
+                route = self.policy.route(float(best_row[n.index]))
+                lat = self.latency_model.latency(
+                    route, self.policy.steps_for(route), node_speed=n.speed)
+                util[n.index] -= self.latency_weight * lat / lat_full
+        return util
 
     def complete(self, node: int) -> None:
         if 0 <= node < len(self.nodes):

@@ -31,6 +31,17 @@ slab copies), and the Retrieve stage answers each micro-batch with ONE
 fused masked scan across all touched nodes (``use_cluster_index=False``
 restores the per-node loop).
 
+Score-aware scheduling (PR 5): with ``routing="score"`` (the default
+when a cluster index exists) the Schedule stage issues the micro-batch's
+single cluster-wide scan (``ClusterIndex.search_cluster_nodes``) so
+every request is routed on its TRUE best composite (Eq. 7) match on
+every node — blended with the centroid-affinity prior, queue-depth load
+penalty and the Eq. 8 expected-latency term — and the chosen node's
+candidate rows are reused by the Retrieve stage (Schedule+Retrieve = ONE
+device scan per micro-batch).  ``routing="centroid"`` keeps the paper's
+Eq. 6 node-representation baseline, which also remains the automatic
+fallback when no cluster index is attached.
+
 Backend protocol migration (for external callers of ``GenerationBackend``):
 it is no longer a dataclass of four optional callables but a batch-first
 base class — subclass it and implement ``txt2img_batch`` /
@@ -130,7 +141,11 @@ class CacheGenius:
                  use_scheduler: bool = True,
                  use_prompt_optimizer: bool = True,
                  use_cluster_index: bool = True,
+                 routing: str = "score",
                  pipeline: Optional[ServePipeline] = None):
+        if routing not in ("score", "centroid"):
+            raise ValueError(
+                f"routing must be 'score' or 'centroid', got {routing!r}")
         self.embedder = embedder
         self.dbs = list(dbs)
         self.blob_store = blob_store
@@ -151,10 +166,17 @@ class CacheGenius:
         self.use_prompt_optimizer = use_prompt_optimizer
         # device-resident cross-node retrieval engine: the fleet's cache
         # state lives on device (ONE build-time upload, incremental row
-        # updates from every add/evict) and the Retrieve stage issues ONE
-        # fused scan per micro-batch across all touched nodes
+        # updates from every add/evict) and the Schedule/Retrieve stages
+        # issue ONE fused scan per micro-batch across all touched nodes
         self.cluster_index = (ClusterIndex.from_dbs(self.dbs)
                               if use_cluster_index and self.dbs else None)
+        # routing="score" (default): the Schedule stage routes on each
+        # request's TRUE best composite match per node from the cluster
+        # scan, blended with load + expected latency; "centroid" is the
+        # Eq. 6 baseline and the automatic no-cluster-index fallback.
+        self.routing = routing
+        self.scheduler.policy = self.policy
+        self.scheduler.latency_model = self.latency_model
         self.pipeline = pipeline or ServePipeline()
         self.stats = ServeStats()
         self.clock = 0.0

@@ -38,6 +38,12 @@ from repro.data.synthetic import SceneSpec, caption_of, random_spec
 
 @dataclass
 class TraceRequest:
+    """One untimed trace entry: the prompt, its ground-truth scene spec,
+    whether the issuing user is quality-tier (the paper's
+    artistic/professional requests, eligible for priority scheduling),
+    and whether this is a verbatim repeat of the previous request (the
+    historical-query-cache workload knob)."""
+
     prompt: str
     spec: SceneSpec
     quality_tier: bool = False
@@ -46,6 +52,16 @@ class TraceRequest:
 
 @dataclass
 class RequestTrace:
+    """Deterministic Zipf-with-drift request generator (WHAT arrives).
+
+    ``n_specs`` scenes are drawn once from the synthetic pool;
+    :meth:`generate` then samples prompts Zipf(``zipf_a``)-popular over
+    them, rotating which scenes are popular every ``drift_every``
+    requests (topic drift), repeating the previous prompt verbatim at
+    ``repeat_rate``, and tagging requests quality-tier at
+    ``quality_rate``.  Identical seeds yield identical traces — every
+    parity/property test in the repo leans on this."""
+
     n_specs: int = 400
     zipf_a: float = 1.2
     drift_every: int = 250
@@ -64,6 +80,10 @@ class RequestTrace:
                 self._specs.append(s)
 
     def generate(self, n: int) -> Iterator[TraceRequest]:
+        """Yield ``n`` :class:`TraceRequest`\\ s (deterministic in the
+        trace seed; see the class docstring for the sampling law).  Pair
+        with :func:`poisson_arrivals` / :func:`trace_arrivals` /
+        :func:`bursty_arrivals` to add WHEN each request lands."""
         rng = np.random.default_rng(self.seed + 1)
         order = rng.permutation(self.n_specs)
         # Zipf over ranks, truncated to the spec pool

@@ -42,6 +42,22 @@ def vdb_topk_sharded_ref(queries, slabs, valid, node_ids, k: int, *,
     return jax.lax.top_k(flat, k)
 
 
+def vdb_topk_pernode_ref(queries, slabs, valid, k: int):
+    """Per-node variant of the cluster scan: every query's top-k within
+    EVERY node's slab (the schedule+retrieve fusion needs each node's own
+    candidate set, not one global list a hot node could monopolise).
+
+    queries: (Q, D); slabs: (n_idx, nodes, cap, D); valid: (nodes, cap).
+    Returns (scores, idx) of shape (n_idx, nodes, Q, k) with GLOBAL slot
+    ids ``node * cap + col``; masked candidates are -inf."""
+    n_idx, n_nodes, cap, _ = slabs.shape
+    scores = jnp.einsum("qd,incd->inqc", queries, slabs)
+    scores = jnp.where(valid[None, :, None, :], scores, -jnp.inf)
+    s, col = jax.lax.top_k(scores, k)
+    gidx = col + (jnp.arange(n_nodes) * cap)[None, :, None, None]
+    return s, gidx
+
+
 def groupnorm_silu_ref(x, scale, bias, *, groups: int = 32, eps: float = 1e-5):
     """x: (B, H, W, C) -> silu(groupnorm(x))."""
     dtype = x.dtype

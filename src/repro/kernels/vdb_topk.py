@@ -8,7 +8,7 @@ and a running per-query top-k lives in VMEM scratch across grid steps
 max+mask — argmax-free and Mosaic-friendly — which is cheap for the small
 k (≤ 32) a cache lookup needs.
 
-Two entry points:
+Three entry points:
 
 * :func:`vdb_topk` — one database slab (one node, one index), the PR-1
   kernel.
@@ -16,7 +16,14 @@ Two entry points:
   indexes of EVERY node in one launch, grid ``(index, node, db_block)``,
   with a query→node mask so each request only scores its scheduled
   node's slab (``mask_nodes=False`` turns the same launch into an
-  all-nodes cluster scan the scheduler can reuse).
+  all-nodes cluster scan over one global candidate list).
+* :func:`vdb_topk_pernode` — the scheduling scan: same grid and the same
+  single pass over the slabs, but the running top-k resets at every node
+  boundary and is written out PER NODE, so one launch yields every
+  query's top-k within every node's slab.  This is what score-aware
+  request scheduling needs (each node's own best match, which a global
+  top-k from one hot node could hide) and what lets the Schedule and
+  Retrieve stages share a single scan.
 
 ``interpret`` defaults to ``None`` = backend-aware: compile through
 Mosaic whenever a TPU backend is present, fall back to interpret mode
@@ -146,12 +153,19 @@ def vdb_topk(queries, db, valid, k: int, *, block_n: int = 512,
 def _vdb_sharded_kernel(q_ref, slab_ref, valid_ref, nid_ref, score_out,
                         idx_out, best_s, best_i, *, k: int, block_n: int,
                         n_blocks: int, n_nodes: int, capacity: int,
-                        mask_nodes: bool):
+                        mask_nodes: bool, per_node: bool = False):
+    """Shared body of the cluster scan.  ``per_node=False`` keeps ONE
+    running top-k across the whole (node, block) sweep of an index plane
+    (global candidate list, optional query→node mask); ``per_node=True``
+    resets the running top-k at every node boundary and flushes it per
+    (plane, node) — same loads, same merge, different reduction."""
     ni = pl.program_id(1)                        # node
     bi = pl.program_id(2)                        # db block within the node
 
-    @pl.when((ni == 0) & (bi == 0))
-    def _init():                                 # new index plane starts
+    new_reduction = bi == 0 if per_node else (ni == 0) & (bi == 0)
+
+    @pl.when(new_reduction)
+    def _init():
         best_s[...] = jnp.full_like(best_s, NEG_INF)
         best_i[...] = jnp.zeros_like(best_i)
 
@@ -163,16 +177,20 @@ def _vdb_sharded_kernel(q_ref, slab_ref, valid_ref, nid_ref, score_out,
                             preferred_element_type=jnp.float32)  # (Q, bn)
     cols = bi * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     ok = (valid > 0) & (cols < capacity)
-    if mask_nodes:
+    if mask_nodes and not per_node:
         nid = nid_ref[...]                       # (1, Q) int32
         ok = ok & (nid.reshape(-1, 1) == ni)     # query sees only its node
     s = jnp.where(ok, s, NEG_INF)
     _merge_topk(best_s, best_i, s, ni * capacity + cols, k)
 
-    @pl.when((ni == n_nodes - 1) & (bi == n_blocks - 1))
+    done = (bi == n_blocks - 1 if per_node
+            else (ni == n_nodes - 1) & (bi == n_blocks - 1))
+
+    @pl.when(done)
     def _finalize():
-        score_out[...] = best_s[...][None].astype(score_out.dtype)
-        idx_out[...] = best_i[...][None]
+        score_out[...] = best_s[...].reshape(score_out.shape) \
+            .astype(score_out.dtype)
+        idx_out[...] = best_i[...].reshape(idx_out.shape)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block_n", "mask_nodes",
@@ -232,6 +250,73 @@ def vdb_topk_sharded(queries, slabs, valid, node_ids, k: int, *,
         out_shape=[
             jax.ShapeDtypeStruct((n_idx, qn, k), jnp.float32),
             jax.ShapeDtypeStruct((n_idx, qn, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((qn, k), jnp.float32),
+            pltpu.VMEM((qn, k), jnp.int32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(queries, slabs, valid_i, nid)
+    return scores, idx
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+def vdb_topk_pernode(queries, slabs, valid, k: int, *,
+                     block_n: int = 512,
+                     interpret: Optional[bool] = None):
+    """Per-node cluster scan: all queries × all node slabs × both
+    dual-retrieval indexes in ONE launch, top-k kept PER NODE.
+
+    queries: (Q, D); slabs: (n_idx, nodes, capacity, D); valid:
+    (nodes, capacity) bool.  Returns ``(scores, idx)`` of shape
+    (n_idx, nodes, Q, k); ``idx`` is the GLOBAL slot id
+    ``node * capacity + col``.  Masked candidates carry ``NEG_INF``.
+
+    Identical slab traffic to :func:`vdb_topk_sharded` (every row read
+    exactly once per launch) and the SAME kernel body
+    (:func:`_vdb_sharded_kernel` with ``per_node=True``); only the
+    reduction differs — the VMEM running top-k resets at each node
+    boundary and the finalize fires once per (index, node) instead of
+    once per index plane.  This is the one device scan that feeds BOTH
+    score-aware scheduling (per-node best match for every request) and
+    the chosen node's retrieval candidates.
+    """
+    interpret = resolve_interpret(interpret)
+    n_idx, n_nodes, cap, d = slabs.shape
+    qn = queries.shape[0]
+    block_n = min(block_n, cap)
+    pad_c = (-cap) % block_n
+    if pad_c:
+        slabs = jnp.pad(slabs, ((0, 0), (0, 0), (0, pad_c), (0, 0)))
+        valid = jnp.pad(valid, ((0, 0), (0, pad_c)))
+    cap_p = cap + pad_c
+    n_blocks = cap_p // block_n
+    valid_i = valid.astype(jnp.int32)
+    nid = jnp.zeros((1, qn), jnp.int32)          # unused in per-node mode
+
+    kernel = functools.partial(_vdb_sharded_kernel, k=k, block_n=block_n,
+                               n_blocks=n_blocks, n_nodes=n_nodes,
+                               capacity=cap, mask_nodes=False,
+                               per_node=True)
+    scores, idx = pl.pallas_call(
+        kernel,
+        grid=(n_idx, n_nodes, n_blocks),
+        in_specs=[
+            pl.BlockSpec((qn, d), lambda ii, ni, bi: (0, 0)),
+            pl.BlockSpec((1, 1, block_n, d),
+                         lambda ii, ni, bi: (ii, ni, bi, 0)),
+            pl.BlockSpec((1, block_n), lambda ii, ni, bi: (ni, bi)),
+            pl.BlockSpec((1, qn), lambda ii, ni, bi: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, qn, k), lambda ii, ni, bi: (ii, ni, 0, 0)),
+            pl.BlockSpec((1, 1, qn, k), lambda ii, ni, bi: (ii, ni, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_idx, n_nodes, qn, k), jnp.float32),
+            jax.ShapeDtypeStruct((n_idx, n_nodes, qn, k), jnp.int32),
         ],
         scratch_shapes=[
             pltpu.VMEM((qn, k), jnp.float32),

@@ -33,8 +33,13 @@ def build_system(*, n_nodes: int = 4, corpus_n: int = 600,
                  capacity_per_node: int = 400, policy=None,
                  eviction="LCU", use_scheduler=True,
                  use_prompt_optimizer=True, backend=None, seed=0,
-                 node_speeds=None):
-    """Assemble the full CacheGenius stack over the synthetic corpus."""
+                 node_speeds=None, routing: str = "score"):
+    """Assemble the full CacheGenius stack over the synthetic corpus.
+
+    ``routing`` selects the Schedule stage's mode: ``"score"`` (default)
+    routes every request on its true best composite match per node from
+    the cluster-wide fused scan; ``"centroid"`` keeps the paper's Eq. 6
+    node-representation baseline."""
     images, captions, _ = make_corpus(corpus_n, res=32, seed=seed)
     embedder = ProxyClipEmbedder(render_caption)
     img_vecs = embedder.embed_image(images)
@@ -57,7 +62,7 @@ def build_system(*, n_nodes: int = 4, corpus_n: int = 600,
         latency_model=LatencyModel(), cost_model=CostModel(),
         eviction=POLICIES[eviction], node_speeds=speeds,
         use_scheduler=use_scheduler,
-        use_prompt_optimizer=use_prompt_optimizer)
+        use_prompt_optimizer=use_prompt_optimizer, routing=routing)
     return system, embedder, images, captions
 
 
@@ -96,6 +101,12 @@ def main() -> int:
     ap.add_argument("--eviction", default="LCU",
                     choices=sorted(POLICIES))
     ap.add_argument("--no-scheduler", action="store_true")
+    ap.add_argument("--routing", default="score",
+                    choices=("score", "centroid"),
+                    help="request-scheduler mode: 'score' routes on each "
+                    "node's true best composite match from the fused "
+                    "cluster scan; 'centroid' is the Eq. 6 "
+                    "node-representation baseline")
     ap.add_argument("--no-prompt-optimizer", action="store_true")
     ap.add_argument("--fail-node", type=int, default=None,
                     help="kill node N after half the requests")
@@ -118,7 +129,8 @@ def main() -> int:
     system, _, _, _ = build_system(
         n_nodes=args.nodes, eviction=args.eviction,
         use_scheduler=not args.no_scheduler,
-        use_prompt_optimizer=not args.no_prompt_optimizer)
+        use_prompt_optimizer=not args.no_prompt_optimizer,
+        routing=args.routing)
     engine = ServingEngine(system, max_batch=args.max_batch)
 
     trace = RequestTrace(seed=1)
@@ -154,6 +166,8 @@ def main() -> int:
         base_cost.charge(0, system.policy.steps_full *
                          system.latency_model.t_step)
     print(f"requests           : {st.requests}")
+    print(f"routing            : {args.routing}"
+          + ("" if not args.no_scheduler else " (scheduler disabled)"))
     print(f"route mix          : {st.route_counts}")
     print(f"hit rate           : {st.hit_rate:.3f}")
     print(f"mean latency (Eq.8): {lat.mean():.3f}s   "

@@ -44,10 +44,11 @@ permutation (in fact, arrival-order-identical) of fixed-drain results —
 batch partitioning never changes routes, images, cache state, or hit/miss
 stats; widely spaced single submissions reproduce sequential ``serve``
 bitwise; and a run whose group sizes stay inside the precompiled buckets
-triggers no JIT at serve time.  Caveat: if ``maintenance_interval`` is
-smaller than a typical in-flight group, the eviction sweep sees the whole
-group's archives at once and cache state becomes partition-dependent —
-keep the interval above the batch size (see ROADMAP).
+triggers no JIT at serve time.  The eviction sweep runs at group
+boundaries (once per micro-batch at most), and ``ServingEngine`` clamps
+``maintenance_interval`` up to ``max_batch`` with a warning — a
+sub-batch interval cannot be honoured at group granularity and would
+make cache state depend on batch partitioning.
 """
 from __future__ import annotations
 
@@ -299,6 +300,24 @@ class ServingEngine:
         self.max_batch = max_batch
         self.queue: List[Request] = []
         self.completed: List[Completed] = []
+        # The pipeline sweeps the cache at GROUP boundaries (at most one
+        # eviction sweep per micro-batch), so an interval below the
+        # micro-batch size cannot be honoured — and would make cache
+        # state depend on how the trace is partitioned into batches,
+        # invalidating the continuous-vs-drain parity contract.  Clamp
+        # up to max_batch and tell the operator.  The clamp is a
+        # PERSISTENT fix to the shared system's config (deliberately —
+        # the sub-batch interval is unhonourable for any engine), not
+        # engine-local state.
+        if system.maintenance_interval < max_batch:
+            import warnings
+            warnings.warn(
+                f"maintenance_interval={system.maintenance_interval} is "
+                f"smaller than max_batch={max_batch}; clamping to "
+                f"{max_batch} (sweeps run at group boundaries, and a "
+                "sub-batch interval would make cache state depend on "
+                "batch partitioning)", RuntimeWarning, stacklevel=2)
+            system.maintenance_interval = max_batch
 
     # -- legacy closed-loop surface -------------------------------------------
 

@@ -259,8 +259,12 @@ def _prompts(system, n, seed=0):
 
 
 def test_retrieve_stage_issues_exactly_one_scan_per_microbatch(monkeypatch):
+    """Centroid mode: the Retrieve stage's masked scan is the batch's one
+    device scan.  (Score mode fuses Schedule+Retrieve into one
+    ``search_cluster_nodes`` scan — pinned in
+    ``tests/test_scheduling_score.py``.)"""
     system, _, _, _ = build_system(n_nodes=3, corpus_n=90,
-                                   capacity_per_node=60)
+                                   capacity_per_node=60, routing="centroid")
     ci = system.cluster_index
     assert ci is not None
     calls = []
@@ -298,8 +302,11 @@ def test_steady_state_serve_has_zero_slab_uploads():
 def test_serve_parity_with_and_without_cluster_index():
     """The fused engine is a pure perf change: routes, nodes and hit
     stats match a system running the per-node fallback on the same
-    trace."""
-    kw = dict(n_nodes=3, corpus_n=90, capacity_per_node=60)
+    trace.  Centroid mode on both sides — score routing REQUIRES the
+    cluster index (dropping it falls back to centroid routing), so the
+    retrieval engine's pure-perf contract is a centroid-mode property."""
+    kw = dict(n_nodes=3, corpus_n=90, capacity_per_node=60,
+              routing="centroid")
     sys_a, _, _, _ = build_system(**kw)
     sys_b, _, _, _ = build_system(**kw)
     sys_b.cluster_index = None                   # force per-node fallback

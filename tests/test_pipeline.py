@@ -133,9 +133,13 @@ def test_score_candidates_matches_scalar_scores(embedder, corpus):
 def test_coalesced_requests_are_never_scored():
     """In-flight duplicates that alias onto an earlier batch member must
     not pay for candidate scoring (the Plan walk evaluates the lazy Score
-    thunk only on the routes that read it)."""
+    thunk only on the routes that read it).  Centroid mode — score-aware
+    routing necessarily scores every request at schedule time (that IS
+    its routing input); its call-count contract is pinned in
+    ``tests/test_scheduling_score.py``."""
     system, _, _, _ = build_system(n_nodes=2, corpus_n=80,
-                                   capacity_per_node=80, seed=0)
+                                   capacity_per_node=80, seed=0,
+                                   routing="centroid")
     calls = {"n": 0}
     orig = system.embedder.score_candidates
 

@@ -1,0 +1,371 @@
+"""PR 5: score-aware scheduling on the cluster-wide fused scan.
+
+Pins the new contracts:
+
+* the per-node cluster scan (``vdb_topk_pernode`` kernel, its jnp ref,
+  and ``ClusterIndex.search_cluster_nodes``) matches the per-node masked
+  oracle for every (query, node) pair;
+* in score mode, Schedule+Retrieve issue exactly ONE fused device scan
+  per micro-batch and the per-node ``VectorDB`` path never runs;
+* score routing == centroid routing when every node holds an identical
+  cache (routing mode is then irrelevant by symmetry);
+* score routing beats centroid routing on cache hit-rate when content
+  placement is skewed in a way node centroids cannot see;
+* ``RequestScheduler.schedule_batch(node_scores=...)`` blends best-match
+  score, load, and the latency model, and keeps the fast paths.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.cluster_index import ClusterIndex
+from repro.core.embeddings import ProxyClipEmbedder
+from repro.core.latency_model import LatencyModel
+from repro.core.policy import GenerationPolicy
+from repro.core.scheduler import NodeInfo, RequestScheduler
+from repro.core.system import CacheGenius
+from repro.core.vdb import BlobStore, VectorDB
+from repro.data.synthetic import make_corpus, render_caption
+from repro.kernels.ref import vdb_topk_pernode_ref
+from repro.kernels.vdb_topk import NEG_INF, vdb_topk_pernode
+from repro.launch.serve import NullBackend, build_system
+
+
+def _unit(rng, n, d):
+    v = rng.normal(size=(n, d)).astype(np.float32)
+    return v / np.linalg.norm(v, axis=-1, keepdims=True)
+
+
+def _mixed_fleet(rng, dim=24):
+    """Same node mix the PR-4 fused-scan suite uses: empty, partial,
+    full, overfull (FIFO overwrite), non-uniform capacities."""
+    dbs = [VectorDB(dim, 32, name="empty"),
+           VectorDB(dim, 32, name="partial"),
+           VectorDB(dim, 16, name="full"),
+           VectorDB(dim, 48, name="overfull")]
+    dbs[1].add(_unit(rng, 10, dim), _unit(rng, 10, dim), np.arange(10), 0.0)
+    dbs[2].add(_unit(rng, 16, dim), _unit(rng, 16, dim), np.arange(16), 0.0)
+    dbs[3].add(_unit(rng, 60, dim), _unit(rng, 60, dim), np.arange(60), 0.0)
+    return dbs
+
+
+# ---------------------------------------------------------------------------
+# per-node scan: kernel vs ref vs per-node oracle
+# ---------------------------------------------------------------------------
+
+
+def test_pernode_kernel_matches_ref():
+    rng = np.random.default_rng(0)
+    slabs = rng.normal(size=(2, 3, 40, 16)).astype(np.float32)
+    valid = rng.random((3, 40)) > 0.3
+    Q = _unit(rng, 4, 16)
+    s_ref, i_ref = vdb_topk_pernode_ref(
+        jnp.asarray(Q), jnp.asarray(slabs), jnp.asarray(valid), 5)
+    s_k, i_k = vdb_topk_pernode(
+        jnp.asarray(Q), jnp.asarray(slabs), jnp.asarray(valid), 5,
+        interpret=True)
+    s_ref, s_k = np.asarray(s_ref), np.asarray(s_k)
+    assert s_ref.shape == s_k.shape == (2, 3, 4, 5)
+    # ref masks with -inf, the kernel with the NEG_INF sentinel
+    fin_ref = np.isfinite(s_ref)
+    np.testing.assert_array_equal(fin_ref, s_k > NEG_INF / 2)
+    np.testing.assert_allclose(s_ref[fin_ref], s_k[fin_ref],
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(i_ref)[fin_ref],
+                                  np.asarray(i_k)[fin_ref])
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+@pytest.mark.parametrize("index", ["both", "img", "txt"])
+def test_search_cluster_nodes_matches_per_node_oracle(index, use_pallas):
+    """out[q][n] must be bit-identical to what a masked per-node scan on
+    node n would return — that is what lets the Retrieve stage reuse the
+    scheduling scan's rows without changing any route."""
+    rng = np.random.default_rng(1)
+    dbs = _mixed_fleet(rng)
+    Q = _unit(rng, 5, 24)
+    # oracle rows from the standalone per-node path, BEFORE attaching
+    oracle = [[db.search_batch(q[None], 6, index=index)[0] for db in dbs]
+              for q in Q]
+    ci = ClusterIndex.from_dbs(dbs, use_pallas=use_pallas,
+                               interpret=True if use_pallas else None)
+    rows = ci.search_cluster_nodes(Q, 6, index=index)
+    assert len(rows) == 5 and all(len(r) == len(dbs) for r in rows)
+    for q_oracle, q_rows in zip(oracle, rows):
+        for (o_s, o_l), (f_s, f_l) in zip(q_oracle, q_rows):
+            np.testing.assert_array_equal(o_l, f_l)
+            np.testing.assert_allclose(o_s, f_s, rtol=1e-4, atol=1e-5)
+
+
+def test_search_cluster_nodes_counts_one_fused_scan():
+    rng = np.random.default_rng(2)
+    ci = ClusterIndex.from_dbs(_mixed_fleet(rng))
+    before = ci.stats["fused_scans"]
+    ci.search_cluster_nodes(_unit(rng, 3, 24), 4)
+    assert ci.stats["fused_scans"] == before + 1
+
+
+# ---------------------------------------------------------------------------
+# the acceptance gate: ONE fused scan for Schedule+Retrieve in score mode
+# ---------------------------------------------------------------------------
+
+
+def _prompts(n, seed=0):
+    from repro.core.trace import RequestTrace
+    return [r.prompt for r in RequestTrace(seed=seed).generate(n)]
+
+
+def test_score_mode_schedule_plus_retrieve_is_one_scan(monkeypatch):
+    system, _, _, _ = build_system(n_nodes=3, corpus_n=90,
+                                   capacity_per_node=60)   # routing="score"
+    ci = system.cluster_index
+    assert system.routing == "score" and ci is not None
+    calls = []
+    orig = ci.search_cluster_nodes
+    monkeypatch.setattr(ci, "search_cluster_nodes",
+                        lambda *a, **kw: calls.append(a) or orig(*a, **kw))
+    # neither the masked cluster scan nor the per-node path may run
+    monkeypatch.setattr(
+        ci, "search_batch",
+        lambda *a, **kw: pytest.fail("masked Retrieve scan in score mode"))
+    monkeypatch.setattr(
+        VectorDB, "search_batch",
+        lambda self, *a, **kw: pytest.fail("per-node search on serve path"))
+    scans_before = ci.stats["fused_scans"]
+    results = system.serve_batch(_prompts(8), seeds=list(range(8)))
+    assert len(results) == 8
+    assert len(calls) == 1                       # ONE schedule-stage call...
+    assert ci.stats["fused_scans"] == scans_before + 1   # ...and ONE scan
+    # the decisions actually carry per-node best-match routing
+    assert any(r.score > 0 for r in results)
+
+
+def test_score_mode_steady_state_has_zero_slab_uploads():
+    system, _, _, _ = build_system(n_nodes=3, corpus_n=90,
+                                   capacity_per_node=60)
+    ci = system.cluster_index
+    prompts = _prompts(24, seed=3)
+    system.serve_batch(prompts[:8], seeds=list(range(8)))          # warmup
+    uploads = ci.stats["slab_uploads"]
+    scans = ci.stats["fused_scans"]
+    for lo in (8, 16):
+        system.serve_batch(prompts[lo:lo + 8],
+                           seeds=list(range(lo, lo + 8)))
+    assert ci.stats["slab_uploads"] == uploads   # ZERO steady-state uploads
+    assert ci.stats["fused_scans"] == scans + 2  # one per micro-batch
+    assert ci.stats["row_updates"] > 0           # archives flowed as rows
+
+
+def test_score_mode_scores_each_request_once_at_schedule():
+    """Score mode's scoring budget: EXACTLY one vectorised
+    ``score_candidates`` call per request, at schedule time (its routing
+    input, coalesced requests included — routing happens before
+    coalescing is knowable).  The Score stage reuses the schedule-time
+    argmax for the chosen node and never re-scores."""
+    system, _, _, _ = build_system(n_nodes=2, corpus_n=80,
+                                   capacity_per_node=80, seed=0)
+    calls = {"n": 0}
+    orig = system.embedder.score_candidates
+
+    def counting(*a, **k):
+        calls["n"] += 1
+        return orig(*a, **k)
+
+    system.embedder.score_candidates = counting
+    states = []
+    reqs = _prompts(40, seed=1)
+    for i in range(0, 40, 8):
+        states.extend(system.pipeline.run(
+            system, reqs[i:i + 8], seeds=list(range(i, i + 8))))
+    # routing input is computed before fast paths are known, so every
+    # request pays exactly one schedule-time call (warm caches: every
+    # node row is non-empty) — and nothing else on the serve path scores
+    assert calls["n"] == len(states)
+    # the retrieval-path plans really did carry composite scores
+    scored = [s for s in states
+              if s.plan.kind in ("cached", "gen") and s.plan.fast is None]
+    assert scored and all(s.best_slot >= 0 for s in scored)
+    assert all(s.score_thunk is None for s in states)
+
+
+# ---------------------------------------------------------------------------
+# routing parity and routing quality
+# ---------------------------------------------------------------------------
+
+
+def _fleet_system(*, routing, placement, n_nodes=3, corpus_n=90,
+                  capacity=90, node_speeds=None, seed=0):
+    """CacheGenius over a hand-placed fleet: ``placement(node) -> corpus
+    row indices`` controls exactly which node caches what."""
+    images, captions, _ = make_corpus(corpus_n, res=32, seed=seed)
+    embedder = ProxyClipEmbedder(render_caption)
+    img_vecs = embedder.embed_image(images)
+    txt_vecs = embedder.embed_text(captions)
+    embedder.set_corpus_anchor(img_vecs)
+    blob = BlobStore()
+    payloads = np.array([blob.put(im) for im in images], np.int64)
+    dbs = [VectorDB(embedder.dim, capacity, name=f"node{i}")
+           for i in range(n_nodes)]
+    for node in range(n_nodes):
+        idxs = np.asarray(placement(node))
+        dbs[node].add(img_vecs[idxs], txt_vecs[idxs], payloads[idxs], t=0.0)
+    system = CacheGenius(
+        embedder=embedder, dbs=dbs, blob_store=blob,
+        backend=NullBackend(32), node_speeds=node_speeds, routing=routing)
+    return system, captions
+
+
+def test_score_equals_centroid_when_all_nodes_hold_identical_caches():
+    """With every node caching the SAME entries (and equal speeds) the
+    routing mode is irrelevant by symmetry: score and centroid modes must
+    pick the same nodes, routes, and images."""
+    def run(routing):
+        system, _ = _fleet_system(
+            routing=routing, placement=lambda node: np.arange(60),
+            corpus_n=60, capacity=60)
+        out = system.serve_batch(_prompts(32, seed=2),
+                                 seeds=list(range(32)))
+        return system, out
+
+    s_score, r_score = run("score")
+    s_cent, r_cent = run("centroid")
+    for a, b in zip(r_score, r_cent):
+        assert (a.fast_path or a.route.value) == (b.fast_path or b.route.value)
+        assert a.node == b.node
+        assert a.steps == b.steps
+        np.testing.assert_array_equal(a.image, b.image)
+    assert s_score.stats.route_counts == s_cent.stats.route_counts
+    assert s_score.stats.hit_rate == pytest.approx(s_cent.stats.hit_rate)
+    for db_a, db_b in zip(s_score.dbs, s_cent.dbs):
+        np.testing.assert_array_equal(db_a.valid, db_b.valid)
+        np.testing.assert_array_equal(db_a.payload_ids, db_b.payload_ids)
+
+
+def test_score_routing_beats_centroid_on_skewed_caches():
+    """The skewed-cache trace (acceptance gate): corpus rows are shuffled
+    round-robin across nodes, so every node's centroid is ~the global
+    mean (centroid routing is blind) while each prompt's best reference
+    lives on exactly one node.  Score routing must find it — strictly
+    higher cache hit-rate."""
+    rng = np.random.default_rng(7)
+    corpus_n, n_nodes = 90, 3
+    perm = rng.permutation(corpus_n)
+    order = rng.permutation(corpus_n)
+
+    def run(routing):
+        system, captions = _fleet_system(
+            routing=routing,
+            placement=lambda node: perm[node::n_nodes],
+            corpus_n=corpus_n, capacity=corpus_n)
+        # each cached scene requested once, in a shuffled order — every
+        # prompt has a perfect reference SOMEWHERE, on one node only
+        prompts = [captions[i] for i in order]
+        for i in range(0, corpus_n, 8):
+            system.serve_batch(prompts[i:i + 8],
+                               seeds=list(range(i, i + 8)))
+        return system
+
+    sys_score = run("score")
+    sys_cent = run("centroid")
+    assert sys_score.stats.requests == sys_cent.stats.requests
+    assert sys_score.stats.hit_rate > sys_cent.stats.hit_rate
+    # score mode should serve essentially every request from cache
+    assert sys_score.stats.hit_rate > 0.9
+
+
+def test_centroid_is_the_no_cluster_fallback():
+    """routing='score' without a cluster index degrades to the centroid
+    path (and the per-node retrieval loop) instead of failing."""
+    system, _, _, _ = build_system(n_nodes=2, corpus_n=60,
+                                   capacity_per_node=60)
+    system.cluster_index = None
+    ref, _, _, _ = build_system(n_nodes=2, corpus_n=60,
+                                capacity_per_node=60, routing="centroid")
+    ref.cluster_index = None
+    prompts = _prompts(12, seed=4)
+    a = [system.serve(p, seed=i) for i, p in enumerate(prompts)]
+    b = [ref.serve(p, seed=i) for i, p in enumerate(prompts)]
+    for ra, rb in zip(a, b):
+        assert ra.node == rb.node
+        assert (ra.fast_path or ra.route.value) == \
+            (rb.fast_path or rb.route.value)
+
+
+def test_routing_arg_is_validated():
+    with pytest.raises(ValueError):
+        build_system(n_nodes=2, corpus_n=40, capacity_per_node=40,
+                     routing="round-robin")
+
+
+# ---------------------------------------------------------------------------
+# RequestScheduler.schedule_batch(node_scores=...) unit behaviour
+# ---------------------------------------------------------------------------
+
+
+def _sched(speeds=(1.0, 1.0, 1.0), **kw):
+    return RequestScheduler(
+        nodes=[NodeInfo(i, speed=s) for i, s in enumerate(speeds)], **kw)
+
+
+def _empty_dbs(n=3, dim=8):
+    return [VectorDB(dim, 4) for _ in range(n)]
+
+
+def test_node_scores_dominate_routing():
+    sched = _sched()
+    vec = np.ones((1, 8), np.float32)
+    scores = np.array([[0.1, 0.8, 0.3]])
+    (d,) = sched.schedule_batch(vec, _empty_dbs(), node_scores=scores)
+    assert d.node == 1
+    assert d.match_score == pytest.approx(0.8)   # best composite, not util
+
+
+def test_node_scores_skip_dead_nodes():
+    sched = _sched()
+    sched.mark_failed(1)
+    scores = np.array([[0.1, 0.9, 0.3]])
+    (d,) = sched.schedule_batch(np.ones((1, 8), np.float32), _empty_dbs(),
+                                node_scores=scores)
+    assert d.node == 2
+
+
+def test_node_scores_load_penalty_breaks_ties():
+    sched = _sched()
+    sched.nodes[0].queue_depth = 5
+    scores = np.array([[0.5, 0.5, 0.5]])
+    (d,) = sched.schedule_batch(np.ones((1, 8), np.float32), _empty_dbs(),
+                                node_scores=scores)
+    assert d.node == 1                           # 0 is loaded, 1 beats 2 ties
+
+
+def test_latency_model_prefers_fast_nodes_on_score_ties():
+    sched = _sched(speeds=(0.45, 1.0, 0.82))
+    sched.policy = GenerationPolicy()
+    sched.latency_model = LatencyModel()
+    scores = np.array([[0.2, 0.2, 0.2]])        # miss everywhere: full gen
+    (d,) = sched.schedule_batch(np.ones((1, 8), np.float32), _empty_dbs(),
+                                node_scores=scores)
+    assert d.node == 1                           # cheapest expected latency
+    # a real hit outweighs the latency edge of a faster node
+    scores = np.array([[0.9, 0.2, 0.2]])
+    (d,) = sched.schedule_batch(np.ones((1, 8), np.float32), _empty_dbs(),
+                                node_scores=scores)
+    assert d.node == 0
+
+
+def test_fast_paths_survive_score_mode():
+    sched = _sched()
+    vec = np.ones((512,), np.float32) / np.sqrt(512.0)  # history dim = 512
+    sched.record_result(vec, payload_id=42)
+    scores = np.zeros((3, 3))
+    ds = sched.schedule_batch(
+        np.stack([vec, vec * 0.99, -vec]), _empty_dbs(dim=512),
+        quality_tiers=[False, False, True],
+        prompt_keys=[1, 1, 2], node_scores=scores)
+    assert ds[0].fast_path == "history"
+    assert ds[0].history_payload == 42
+    assert ds[1].fast_path == "history"          # near-duplicate
+    assert ds[2].fast_path is None               # tier but first occurrence

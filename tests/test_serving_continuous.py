@@ -337,6 +337,98 @@ def test_queue_delay_is_time_waited_not_ticks():
 
 
 # ---------------------------------------------------------------------------
+# group-boundary maintenance: small intervals no longer break partitioning
+# ---------------------------------------------------------------------------
+
+
+def test_maintenance_interval_clamped_with_warning():
+    """The engine cannot honour a sub-batch maintenance interval (sweeps
+    run at group boundaries, at most once per micro-batch) — it clamps up
+    to ``max_batch`` and warns instead of silently under-sweeping."""
+    system = _system()
+    system.maintenance_interval = 2
+    with pytest.warns(RuntimeWarning, match="maintenance_interval"):
+        ServingEngine(system, max_batch=8)
+    assert system.maintenance_interval == 8
+    # at or above max_batch the interval is left alone, silently
+    system.maintenance_interval = 64
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        ServingEngine(system, max_batch=8)
+    assert system.maintenance_interval == 64
+
+
+def test_group_boundary_maintenance_keeps_partition_parity():
+    """Regression for the maintenance-mid-flight caveat: the sweep now
+    fires at group boundaries whenever the request counter crossed an
+    interval multiple, so at the smallest admissible interval (== the
+    batch size) sequential serve and the batched drain sweep at the SAME
+    request counts — cache state no longer depends on partitioning.
+    (Pre-fix, mid-loop sweeps diverged: a batch crossing the boundary
+    swept before its later members' archives, at a different point than
+    the sequential loop.)"""
+    reqs = _trace(48, seed=2)
+
+    def build():
+        system = _system()
+        system.maintenance_interval = 8
+        system.cache_capacity = 100          # tight: sweeps actually evict
+        return system
+
+    s_seq = build()
+    for i, r in enumerate(reqs):
+        s_seq.serve(r.prompt, seed=i, quality_tier=r.quality_tier)
+
+    s_bat = build()
+    done = ServingEngine(s_bat, max_batch=8).run(
+        trace_arrivals(reqs, [0.0] * len(reqs)), mode="drain")
+    assert len(done) == len(reqs)
+    assert s_seq.stats.route_counts == s_bat.stats.route_counts
+    for db_a, db_b in zip(s_seq.dbs, s_bat.dbs):
+        np.testing.assert_array_equal(db_a.valid, db_b.valid)
+        np.testing.assert_array_equal(db_a.payload_ids, db_b.payload_ids)
+    # the sweeps actually ran and bound the cache
+    assert s_seq.total_size <= 100 and s_bat.total_size <= 100
+
+
+def test_direct_serve_batch_warns_when_batch_spans_intervals():
+    """Callers that bypass ServingEngine (so no up-front clamp) must be
+    told when a single batch coalesces several due sweeps into one."""
+    system = _system()
+    system.maintenance_interval = 4
+    reqs = _trace(12, seed=6)
+    with pytest.warns(RuntimeWarning, match="exceeds maintenance_interval"):
+        system.serve_batch([r.prompt for r in reqs],
+                           seeds=list(range(len(reqs))))
+    # a batch of 6 with interval 4 shifts the sweep cadence even when it
+    # crosses only one boundary — it must warn too
+    system2 = _system()
+    system2.maintenance_interval = 4
+    with pytest.warns(RuntimeWarning, match="exceeds maintenance_interval"):
+        system2.serve_batch([r.prompt for r in reqs[:6]],
+                            seeds=list(range(6)))
+
+
+def test_continuous_run_with_clamped_interval_stays_consistent():
+    """A continuous run whose operator asked for a sub-batch interval:
+    after the clamp, sweeps fire at group boundaries — capacity stays
+    bounded and every history entry still resolves to a live blob, even
+    with ragged admission groups."""
+    reqs = _trace(40, seed=5)
+    system = _system()
+    system.maintenance_interval = 2              # will clamp to 8
+    system.cache_capacity = 100
+    with pytest.warns(RuntimeWarning):
+        eng = ServingEngine(system, max_batch=8)
+    done = eng.run(poisson_arrivals(reqs, rate=60.0, seed=5))
+    assert len(done) == len(reqs)
+    assert system.total_size <= 100
+    blob_ids = set(system.blob_store._blobs)
+    assert all(p in blob_ids for p in system.scheduler._hist_payloads)
+
+
+# ---------------------------------------------------------------------------
 # tiny-DiT CPU config: no JIT at serve time + the bursty latency win
 # ---------------------------------------------------------------------------
 
