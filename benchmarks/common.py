@@ -58,6 +58,11 @@ ARRIVAL_RATES: Tuple[float, ...] = (10.0, 40.0, 160.0)
 NODE_COUNTS: Tuple[int, ...] = (2, 4, 8)
 CACHE_CAPACITIES: Tuple[int, ...] = (2048, 4096)
 
+# Target cache hit-rates (band-mutation fractions) swept by the
+# latent_depth_cache benchmark; overridable via `benchmarks.run
+# --hit-rates`.
+HIT_RATES: Tuple[float, ...] = (0.2, 0.5, 0.8)
+
 
 def _vae_cfg():
     return vae_mod.VAEConfig(in_ch=3, base_ch=16, ch_mult=(1, 2), z_ch=4,

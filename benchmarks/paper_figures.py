@@ -622,6 +622,61 @@ def table5_embeddings(n_requests: int = 100) -> Dict:
     return rows
 
 
+# ---------------------------------------------------------------------------
+# latent-depth cache — resume denoising from archived intermediates
+# ---------------------------------------------------------------------------
+
+
+def latent_depth_cache(n_requests: int = 120, corpus_n: int = 32,
+                       n_nodes: int = 2) -> Dict:
+    """Finished-image-only caching vs the latent-depth cache on the
+    band-mutation workload, at each target hit-rate in ``C.HIT_RATES``.
+
+    Both arms replay the IDENTICAL trace on identically built fleets with
+    ample capacity, so routes and hit-rate match exactly; the only degree
+    of freedom is whether an img2img-band match near an archived
+    generation resumes from a noised intermediate (depth k: only the
+    remaining K - k steps run) or re-runs the full K-step SDEdit chain.
+    The acceptance claim is ``steps_below_baseline_everywhere``: mean
+    denoising steps per request strictly below the baseline at equal
+    hit-rate, for every swept rate.
+
+    Stack-free: NullBackend + proxy embedder (depth-0 parity with the
+    real DiffusionBackend is pinned by tests/test_latent_depth.py), so CI
+    can smoke it without training the diffusion stack."""
+    from repro.core.trace import band_mutation_trace
+    from repro.launch.serve import build_system
+
+    out: Dict = {"n_requests": n_requests, "corpus_n": corpus_n,
+                 "n_nodes": n_nodes}
+    ok = True
+    for rate in C.HIT_RATES:
+        reqs = band_mutation_trace(n_requests, band_fraction=rate, seed=0)
+        arms = {}
+        for tag, depths in (("base", None), ("latent", True)):
+            system, _, _, _ = build_system(
+                n_nodes=n_nodes, corpus_n=corpus_n,
+                capacity_per_node=20 * n_requests, seed=0,
+                latent_depths=depths)
+            for i, r in enumerate(reqs):
+                system.serve(r.prompt, seed=i)
+            st = system.stats
+            lat = np.array(st.latencies)
+            arms[tag] = st
+            key = f"{tag}_rate{rate:g}"
+            out[f"hit_rate_{key}"] = st.hit_rate
+            out[f"mean_steps_{key}"] = st.mean_steps
+            out[f"lat_p50_{key}"] = float(np.percentile(lat, 50))
+            out[f"lat_p95_{key}"] = float(np.percentile(lat, 95))
+        out[f"latent_resumes_rate{rate:g}"] = arms["latent"].latent_resumes
+        ok &= (arms["latent"].hit_rate == arms["base"].hit_rate
+               and arms["latent"].route_counts == arms["base"].route_counts
+               and arms["latent"].latent_resumes > 0
+               and arms["latent"].mean_steps < arms["base"].mean_steps)
+    out["steps_below_baseline_everywhere"] = bool(ok)
+    return out
+
+
 ALL_BENCHMARKS = {
     "fig1_psnr_steps": fig1_psnr_steps,
     "table1_quality": table1_quality,
@@ -637,6 +692,7 @@ ALL_BENCHMARKS = {
     "serving_latency_curve": serving_latency_curve,
     "retrieval_scan": retrieval_scan,
     "scheduling_quality": scheduling_quality,
+    "latent_depth_cache": latent_depth_cache,
     "fig19_lcu": fig19_lcu,
     "table4_reference": table4_reference,
     "table5_embeddings": table5_embeddings,
@@ -644,4 +700,4 @@ ALL_BENCHMARKS = {
 
 # Benchmarks that never touch the trained diffusion stack — the driver
 # skips the (slow) stack build when only these are selected.
-STACK_FREE = {"retrieval_scan", "scheduling_quality"}
+STACK_FREE = {"retrieval_scan", "scheduling_quality", "latent_depth_cache"}

@@ -48,6 +48,17 @@ def _arrival_rates(text: str):
     return rates
 
 
+def _hit_rates(text: str):
+    try:
+        rates = tuple(float(r) for r in text.split(","))
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"expected comma-separated floats (e.g. 0.2,0.5,0.8), got {text!r}")
+    if not rates or any(not 0.0 <= r <= 1.0 for r in rates):
+        raise argparse.ArgumentTypeError("hit rates must be in [0, 1]")
+    return rates
+
+
 def _pos_ints(text: str):
     try:
         vals = tuple(int(v) for v in text.split(","))
@@ -72,6 +83,11 @@ def main() -> int:
                          "serving latency-vs-load curve and the "
                          "scheduling_quality routing comparison "
                          "(default: 10,40,160)")
+    ap.add_argument("--hit-rates", type=_hit_rates, default=None,
+                    help="comma-separated target cache hit-rates "
+                         "(band-mutation fractions) for the "
+                         "latent_depth_cache benchmark (default: "
+                         "0.2,0.5,0.8)")
     ap.add_argument("--nodes", type=_pos_ints, default=None,
                     help="comma-separated fleet sizes for the retrieval_scan "
                          "benchmark (default: 2,4,8)")
@@ -87,6 +103,8 @@ def main() -> int:
         C.BATCH_SIZES = args.batch_sizes
     if args.arrival_rates:
         C.ARRIVAL_RATES = args.arrival_rates
+    if args.hit_rates:
+        C.HIT_RATES = args.hit_rates
     if args.nodes:
         C.NODE_COUNTS = args.nodes
     if args.cache_capacities:

@@ -31,11 +31,20 @@ Stage contracts (each stage sees the whole micro-batch):
   never per-candidate Python ``clip_score``/``pick_score`` calls; lazily
   evaluated so requests the Plan stage coalesces never pay for it.
 * **Plan**      — Algorithm 1 routing in submission order, coalescing
-  near-duplicates of in-flight batch members onto one generation.
-* **Generate**  — denoiser calls grouped by (node, workflow, steps) and
-  issued through the batch-first :class:`GenerationBackend` protocol.
-* **Archive**   — blob-store put + VDB insert in submission order.
-* **Finish**    — stats, Eq. 8 latency, maintenance, ``ServeResult``.
+  near-duplicates of in-flight batch members onto one generation.  With
+  the latent-depth cache enabled the binary img2img/txt2img split refines
+  into a DEPTH schedule: a band request resumes the denoising chain from
+  the deepest archived latent at or below ``policy.resume_depth(score)``
+  (see :meth:`PlanStage._depth_plan`).
+* **Generate**  — denoiser calls grouped by (node, workflow, steps) —
+  resume plans additionally by depth — and issued through the batch-first
+  :class:`GenerationBackend` protocol.
+* **Archive**   — blob-store put + VDB insert in submission order, up to
+  the batch's first interior maintenance crossing; later archives defer
+  to the Finish stage so the sweep sees exactly the same cache state it
+  would sequentially.
+* **Finish**    — stats, Eq. 8 latency, exact-crossing maintenance,
+  ``ServeResult``.
 
 Semantics (pinned by the parity tests): scheduling and retrieval see the
 cache state at batch entry (snapshot), archives land after generation in
@@ -88,6 +97,11 @@ class GenerationBackend:
     # the class-level default covers subclasses that skip __init__
     _fns: Tuple = (None, None, None, None)
 
+    # latent-depth cache surface (optional): backends that can archive
+    # noised intermediates of the img2img chain and resume denoising from
+    # them flip this on and implement the two methods below
+    supports_latent_resume: bool = False
+
     def __init__(self, txt2img=None, img2img=None, txt2img_batch=None,
                  img2img_batch=None):
         self._fns = (txt2img, img2img, txt2img_batch, img2img_batch)
@@ -139,6 +153,34 @@ class GenerationBackend:
         return np.asarray(self.img2img_batch(
             [prompt], np.asarray(reference)[None], steps, [seed]))[0]
 
+    # -- latent-depth cache surface (optional) --------------------------------
+
+    def archive_latents_batch(self, images: np.ndarray,
+                              seeds: Sequence[int],
+                              depths: Sequence[int],
+                              steps_total: int) -> np.ndarray:
+        """Noised intermediates of each image's ``steps_total``-step
+        img2img chain at every requested depth — shape
+        ``(len(depths), B, ...)``.  The depth-k latent must equal what
+        ``resume_batch(..., k=k)`` expects as its starting state, and the
+        per-image noise draw must reuse the image's archive ``seed`` so
+        resumed trajectories are reproducible."""
+        raise NotImplementedError(
+            "backend does not support latent archiving "
+            "(supports_latent_resume is False)")
+
+    def resume_batch(self, prompts: Sequence[str], latents: np.ndarray,
+                     steps_total: int, k: int,
+                     seeds: Sequence[int]) -> np.ndarray:
+        """Resume the ``steps_total``-step img2img chain from depth ``k``
+        (running ``steps_total - k`` denoising steps) for a stacked batch
+        of archived latents — returns decoded images ``(B, H, W, 3)``.
+        ``k == 0`` must reproduce ``img2img_batch`` exactly (same chain,
+        same starting state)."""
+        raise NotImplementedError(
+            "backend does not support latent resume "
+            "(supports_latent_resume is False)")
+
 
 class CallableBackend(GenerationBackend):
     """Adapter: legacy per-request callables (plus optional batch callables)
@@ -161,8 +203,10 @@ class Plan:
     * ``"alias"``   — coalesce onto in-flight batch member ``target``;
     * ``"history"`` — historical-query fast path, ``image`` already fetched;
     * ``"cached"``  — Algorithm 1 HIT_RETURN, ``image`` already fetched;
-    * ``"gen"``     — run the denoiser (txt2img, or img2img when ``ref``
-      is set); ``fast`` marks the quality-priority fast path.
+    * ``"gen"``     — run the denoiser (txt2img; img2img when ``ref`` is
+      set; latent-depth resume when ``latent`` is set, running
+      ``steps = K - resume_k`` remaining chain steps); ``fast`` marks the
+      quality-priority fast path.
     """
 
     kind: str
@@ -174,6 +218,8 @@ class Plan:
     ref: Optional[np.ndarray] = None
     target: int = -1
     image: Optional[np.ndarray] = None
+    resume_k: int = 0                    # latent-depth resume depth
+    latent: Optional[np.ndarray] = None  # archived noised latent (depth k)
 
 
 @dataclass
@@ -204,6 +250,7 @@ class RequestState:
     score_thunk: Optional[Callable[[], None]] = None
     plan: Optional[Plan] = None
     image: Optional[np.ndarray] = None
+    archive_deferred: bool = False  # archive lands in Finish (post-crossing)
     result: Optional[object] = None      # ServeResult (set by Finish)
 
 
@@ -472,6 +519,14 @@ class PlanStage:
             route = (system.policy.route(s.best_score) if s.best_slot >= 0
                      else Route.TXT2IMG)
             steps = system.policy.steps_for(route)
+            if route is not Route.TXT2IMG:
+                plan = self._depth_plan(system, s, db, node, route)
+                if plan is not None:
+                    s.plan = plan
+                    if plan.kind == "gen":
+                        pending_vecs.append(s.qvec)
+                        pending_req.append(s.index)
+                    continue
             if route is Route.HIT_RETURN:
                 db.mark_access(np.array([s.best_slot]), s.clock)
                 s.plan = Plan(kind="cached", node=node, score=s.best_score,
@@ -491,9 +546,88 @@ class PlanStage:
                 pending_vecs.append(s.qvec)
                 pending_req.append(s.index)
 
+    @staticmethod
+    def _depth_plan(system, s: RequestState, db, node: int,
+                    route: Route) -> Optional[Plan]:
+        """Latent-depth refinement of a HIT_RETURN/IMG2IMG route.
+
+        The matched slot's ``source_id`` groups all entries archived from
+        the same finished image — the image itself (depth -1) plus its
+        noised latents (depth k).  HIT_RETURN ships the finished image
+        when it survives eviction, else resumes from the DEEPEST sibling
+        latent.  An img2img-band request maps its composite score to a
+        desired depth (``policy.resume_depth``) and resumes from the
+        deepest archived latent at or below it; with only deeper latents
+        left it resumes from the shallowest one (conservative overshoot —
+        still fewer steps than full img2img), and with only the finished
+        image left it falls back to the classic SDEdit plan (return
+        ``None``).  Returns ``None`` whenever the depth schedule is off,
+        the backend cannot resume, or the slot carries no depth metadata —
+        the caller then runs the classic Algorithm 1 plan unchanged."""
+        if not getattr(system, "latent_depths", ()):
+            return None
+        if not getattr(system.backend, "supports_latent_resume", False):
+            return None
+        src = int(db.source_id[s.best_slot])
+        if src < 0:
+            return None
+        sib = np.flatnonzero(db.valid & (db.source_id == src))
+        lat = {int(db.depth[i]): int(i) for i in sib if db.depth[i] >= 0}
+        fin = [int(i) for i in sib if db.depth[i] < 0]
+        # retrieval can argmax ANY sibling row (latents share the finished
+        # image's vectors), so the classic fallback is only safe when the
+        # matched slot itself is a finished image — otherwise build the
+        # equivalent plan here against the finished sibling explicitly
+        matched_finished = int(db.depth[s.best_slot]) < 0
+
+        def resume(k: int, slot: int) -> Plan:
+            db.mark_access(np.array([slot]), s.clock)
+            return Plan(kind="gen", node=node, route=Route.IMG2IMG,
+                        steps=system.policy.steps_for_resume(k),
+                        score=s.best_score, resume_k=k,
+                        latent=system.blob_store.get(
+                            int(db.payload_ids[slot])))
+
+        if route is Route.HIT_RETURN:
+            if fin:
+                if matched_finished:
+                    return None         # classic cached return
+                slot = fin[0]
+                db.mark_access(np.array([slot]), s.clock)
+                return Plan(kind="cached", node=node, score=s.best_score,
+                            image=system.blob_store.get(
+                                int(db.payload_ids[slot])))
+            if not lat:
+                return None
+            k = max(lat)                # strongest match → resume deepest
+            return resume(k, lat[k])
+        # IMG2IMG band: depth schedule
+        if not lat:
+            return None                 # only the finished image survives
+        desired = system.policy.resume_depth(s.best_score)
+        usable = [k for k in lat if k <= desired]
+        if usable:
+            k = max(usable)
+        elif fin:
+            # classic img2img beats overshooting a too-deep latent
+            if matched_finished:
+                return None
+            slot = fin[0]
+            db.mark_access(np.array([slot]), s.clock)
+            return Plan(kind="gen", node=node, route=Route.IMG2IMG,
+                        steps=system.policy.steps_for(Route.IMG2IMG),
+                        score=s.best_score,
+                        ref=system.blob_store.get(
+                            int(db.payload_ids[slot])))
+        else:
+            k = min(lat)                # overshoot: shallowest latent left
+        return resume(k, lat[k])
+
 
 class GenerateStage:
-    """One padded backend call per (node, workflow, steps) group."""
+    """One padded backend call per (node, workflow, steps) group; latent
+    resumes additionally group by depth (same AOT bucket family — one
+    compiled program per (resume depth, steps, batch bucket))."""
 
     name = "Generate"
 
@@ -501,8 +635,14 @@ class GenerateStage:
         system = ctx.system
         txt_groups: Dict[tuple, List[RequestState]] = {}
         img_groups: Dict[tuple, List[RequestState]] = {}
+        res_groups: Dict[tuple, List[RequestState]] = {}
         for s in ctx.states:
             if s.plan.kind != "gen":
+                continue
+            if s.plan.latent is not None:
+                res_groups.setdefault(
+                    (s.plan.node, s.plan.resume_k, s.plan.steps),
+                    []).append(s)
                 continue
             grp = img_groups if s.plan.ref is not None else txt_groups
             grp.setdefault((s.plan.node, s.plan.steps), []).append(s)
@@ -519,44 +659,80 @@ class GenerateStage:
                 [m.seed for m in members]))
             for j, m in enumerate(members):
                 m.image = np.asarray(out[j])
+        for (node, k, steps), members in res_groups.items():
+            lats = np.stack([m.plan.latent for m in members])
+            out = np.asarray(system.backend.resume_batch(
+                [m.prompt for m in members], lats, steps + k, k,
+                [m.seed for m in members]))
+            for j, m in enumerate(members):
+                m.image = np.asarray(out[j])
+
+
+def _do_archive(system, s: RequestState) -> None:
+    """The one archive call (blob put + VDB insert + history record) —
+    shared by the Archive stage and the Finish stage's deferred flush."""
+    system._archive(s.raw_prompt, s.pvec, s.image, s.plan.node,
+                    t=s.clock, seed=s.seed)
 
 
 class ArchiveStage:
     """Blob-store put + VDB insert in submission order (blob ids / history
-    order match the sequential loop exactly)."""
+    order match the sequential loop exactly).
+
+    Exact-crossing maintenance support: archives land eagerly only up to
+    the batch's first INTERIOR ``maintenance_interval`` crossing (a
+    request count that is a multiple of the interval, with later requests
+    still in the batch).  Requests past that boundary mark
+    ``archive_deferred`` and flush inside the Finish stage's per-request
+    result loop — so the eviction sweep at crossing r sees exactly the
+    archives of requests 1..r, the same cache state the sequential loop
+    produces, for ANY batch partitioning of the trace."""
 
     name = "Archive"
 
     def run(self, ctx: BatchContext) -> None:
         system = ctx.system
-        for s in ctx.states:
-            if s.plan.kind == "gen":
-                system._archive(s.raw_prompt, s.pvec, s.image, s.plan.node,
-                                t=s.clock)
+        interval = system.maintenance_interval
+        req_no = system.stats.requests      # results not yet recorded
+        boundary = None                     # index of first interior crossing
+        for i in range(len(ctx.states) - 1):
+            if (req_no + i + 1) % interval == 0:
+                boundary = i
+                break
+        for i, s in enumerate(ctx.states):
+            if s.plan.kind != "gen":
+                continue
+            if boundary is not None and i > boundary:
+                s.archive_deferred = True
+                continue
+            _do_archive(system, s)
 
 
 class FinishStage:
-    """Stats, Eq. 8 latency, periodic maintenance, ``ServeResult``.
+    """Stats, Eq. 8 latency, exact-crossing maintenance, ``ServeResult``.
 
-    Maintenance runs at the GROUP BOUNDARY: the eviction sweep fires
-    after the whole micro-batch's results are recorded, whenever the
-    request counter crossed a ``maintenance_interval`` multiple inside
-    the batch (earlier revisions swept mid-loop, which made cache state
-    depend on how a trace was partitioned into batches whenever the
-    interval was smaller than a group — the ROADMAP
-    maintenance-mid-flight caveat).  At most one sweep fires per batch,
-    so partition-independence additionally needs ``maintenance_interval
-    >= max_batch`` — ``ServingEngine`` clamps-and-warns to enforce it,
-    and this stage warns direct ``serve_batch`` callers whose batch
-    crossed more than one interval boundary (coalesced sweeps).
+    Maintenance fires at EXACT request-count crossings: the result loop
+    walks the batch in submission order, flushing each request's deferred
+    archive (see :class:`ArchiveStage`) before recording its result, and
+    runs the eviction sweep the moment the request counter hits a
+    ``maintenance_interval`` multiple — splitting result recording at the
+    boundary.  The sweep at crossing r therefore sees exactly the
+    archives of requests 1..r regardless of how the trace was partitioned
+    into micro-batches, so intervals SMALLER than the batch size keep
+    their sequential cadence too (earlier revisions coalesced sweeps at
+    the group boundary and needed interval >= max_batch — the old
+    ROADMAP caveat).  Remaining divergence from the sequential loop is
+    confined to the batch-entry snapshot: retrieval and access marking
+    inside one batch cannot see a mid-batch sweep that already happened
+    sequentially.
 
     Wall-clock accounting: each request reports the micro-batch's total
     wall time divided by the batch size (batch-amortised per-request
     cost); the batch total itself is appended to
     ``ServeStats.batch_wall_latencies``.  The total is taken AFTER the
-    result loop AND the boundary maintenance sweep, so sweeps stay inside
-    the measurement; results and stats are back-filled with the final
-    share.
+    result loop AND its interleaved maintenance sweeps, so sweeps stay
+    inside the measurement; results and stats are back-filled with the
+    final share.
 
     The TRUE per-request accounting (``stage_walls`` / ``wall_total`` /
     ``queue_delay``) is back-filled by the ``ServePipeline.run`` driver
@@ -569,9 +745,12 @@ class FinishStage:
     def run(self, ctx: BatchContext) -> None:
         system = ctx.system
         n = len(ctx.states)
-        requests_before = system.stats.requests
+        interval = system.maintenance_interval
         wall = 0.0          # back-filled once the batch total is known
         for s in ctx.states:
+            if s.archive_deferred:
+                _do_archive(system, s)
+                s.archive_deferred = False
             p = s.plan
             if p.kind == "alias":
                 s.image = ctx.states[p.target].image
@@ -595,23 +774,12 @@ class FinishStage:
             else:
                 s.result = system._finish(
                     s.image, p.route, p.node, p.score, wall,
-                    steps=p.steps)
-        # group-boundary maintenance: sweep once if this batch crossed an
-        # interval multiple (every request's archive is already in)
-        interval = system.maintenance_interval
-        if n > interval:
-            # a batch wider than the interval cannot keep the sweep
-            # cadence (boundary sweeps shift/coalesce) — direct
-            # serve_batch callers must hear about it too, not just
-            # ServingEngine users (which clamp up front)
-            import warnings
-            warnings.warn(
-                f"micro-batch of {n} exceeds maintenance_interval="
-                f"{interval}; sweeps run once per batch at the group "
-                "boundary — keep the interval >= the batch size",
-                RuntimeWarning, stacklevel=4)
-        if requests_before // interval != system.stats.requests // interval:
-            system.maintain()
+                    steps=p.steps,
+                    resumed_from=(p.resume_k if p.latent is not None
+                                  else -1))
+            # exact crossing: sweep the moment the counter hits a multiple
+            if system.stats.requests % interval == 0:
+                system.maintain()
         t_batch = time.perf_counter() - ctx.t_wall0
         wall = t_batch / n
         system.stats.batch_wall_latencies.append(t_batch)

@@ -9,12 +9,21 @@ Composite similarity score  S = CLIPScore + PickScore  (Eq. 7), then:
 Both scores are normalised to [0, 1] before summing and the sum is halved,
 so thresholds live on the paper's 0..1 scale. Thresholds are configurable —
 benchmark fig15 sweeps them exactly like the paper's Figure 15.
+
+Latent-depth schedule (beyond-paper, NIRVANA-style): when
+``latent_depths`` is set, the binary img2img band refines into a DEPTH
+schedule — the [lo, hi] band splits into ``len(latent_depths) + 1`` equal
+sub-bands mapping match quality to a resume depth ``k`` (how many of the
+K img2img chain steps an archived noised latent already absorbs): a weak
+match resumes shallow (k = 0, the classic full img2img), a strong match
+resumes deep and only runs ``K - k`` steps.  ``resume_depth`` is the
+single home of that mapping.
 """
 from __future__ import annotations
 
 import enum
 from dataclasses import dataclass
-from typing import Callable
+from typing import Callable, Tuple
 
 import numpy as np
 
@@ -31,6 +40,9 @@ class GenerationPolicy:
     hi: float = 0.5
     steps_full: int = 30   # N — text-to-image denoising steps
     steps_ref: int = 20    # K — image-to-image denoising steps (K < N)
+    # resume depths of the latent-depth cache, ascending; () disables the
+    # depth schedule (classic binary img2img/txt2img split)
+    latent_depths: Tuple[int, ...] = ()
 
     def composite_score(self, clip_score: float, pick_score: float) -> float:
         """Eq. 7 with both terms mapped to [0,1]; mean keeps S in [0,1]."""
@@ -54,6 +66,35 @@ class GenerationPolicy:
     def steps_for(self, route: Route) -> int:
         return {Route.HIT_RETURN: 0, Route.IMG2IMG: self.steps_ref,
                 Route.TXT2IMG: self.steps_full}[route]
+
+    # -- latent-depth schedule (beyond-paper) -------------------------------
+
+    def default_latent_depths(self) -> Tuple[int, ...]:
+        """The archive depths k ∈ {K/4, K/2, 3K/4} of the latent-depth
+        cache (K = ``steps_ref``), deduped and 0-free for tiny K."""
+        k = self.steps_ref
+        return tuple(sorted({k // 4, k // 2, (3 * k) // 4} - {0}))
+
+    def resume_depth(self, score: float) -> int:
+        """Map a composite score in the img2img band to a resume depth.
+
+        The [lo, hi] band splits into ``len(latent_depths) + 1`` equal
+        sub-bands over the depth levels ``(0,) + latent_depths``
+        (ascending): score = lo resumes at depth 0 (full img2img), score
+        >= hi resumes at the deepest archived level.  Sub-band boundaries
+        belong to the DEEPER band (``frac·len(levels)`` floors, so an
+        exact edge rounds up in depth).  With ``latent_depths == ()``
+        every band score maps to depth 0 — the classic binary split."""
+        if not self.latent_depths:
+            return 0
+        levels = (0,) + tuple(sorted(self.latent_depths))
+        frac = (float(score) - self.lo) / max(self.hi - self.lo, 1e-12)
+        frac = min(max(frac, 0.0), 1.0)
+        return levels[min(int(frac * len(levels)), len(levels) - 1)]
+
+    def steps_for_resume(self, k: int) -> int:
+        """Denoising steps still to run when resuming from depth ``k``."""
+        return max(self.steps_ref - int(k), 0)
 
 
 def select_reference(scores: np.ndarray) -> int:

@@ -34,6 +34,7 @@ queue serves the same purpose).
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -287,8 +288,21 @@ class RequestScheduler:
         return util
 
     def complete(self, node: int) -> None:
-        if 0 <= node < len(self.nodes):
-            self.nodes[node].queue_depth = max(0, self.nodes[node].queue_depth - 1)
+        """Release the queue slot a prior ``schedule()`` call claimed.
+
+        Strictly paired with the increment: history hits (node == -1) and
+        out-of-range nodes are no-ops, and an underflow — ``complete``
+        without a matching ``schedule`` increment — warns and leaves the
+        depth at 0 instead of silently clamping (a clamp here masked
+        double-release bugs)."""
+        if not (0 <= node < len(self.nodes)):
+            return
+        if self.nodes[node].queue_depth <= 0:
+            warnings.warn(
+                f"queue-depth underflow on node {node}: complete() without "
+                "a matching schedule() increment", RuntimeWarning)
+            return
+        self.nodes[node].queue_depth -= 1
 
     # -- history cache --------------------------------------------------------
 

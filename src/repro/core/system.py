@@ -42,6 +42,16 @@ device scan per micro-batch).  ``routing="centroid"`` keeps the paper's
 Eq. 6 node-representation baseline, which also remains the automatic
 fallback when no cluster index is attached.
 
+Latent-depth cache (PR 6, beyond-paper): with ``latent_depths`` set the
+Archive stage stores noised intermediates of each finished image's
+img2img chain at depths k ∈ {K/4, K/2, 3K/4} (one stacked ``VectorDB``
+insert carrying host-side ``depth``/``source_id`` metadata — device
+slabs and fused scans are untouched), and the Plan stage maps the
+composite Eq. 7 score to a resume depth (``policy.resume_depth``):
+strong band matches resume deep and run only K - k steps through the
+backend's ``resume_batch``.  Latents and finished images compete under
+the same ``C_max`` via the eviction policy's per-depth utility discount.
+
 Backend protocol migration (for external callers of ``GenerationBackend``):
 it is no longer a dataclass of four optional callables but a batch-first
 base class — subclass it and implement ``txt2img_batch`` /
@@ -85,6 +95,10 @@ class ServeResult:
     wall_latency: float       # batch-amortised measured wall-clock on this host
     steps: int
     fast_path: Optional[str] = None
+    # latent-depth cache: depth the denoising chain resumed from (-1 =
+    # classic path, k >= 0 = resumed from an archived depth-k latent and
+    # ran only steps = K - k chain steps)
+    resumed_from: int = -1
     # true per-request accounting from the pipeline's per-stage timestamps
     # (back-filled by ServePipeline.run; see its timing contract):
     queue_delay: float = 0.0  # submission -> pipeline admission (caller clock)
@@ -105,6 +119,8 @@ class ServeStats:
     requests: int = 0
     cache_hits: int = 0        # HIT_RETURN + history fast path
     reference_hits: int = 0    # IMG2IMG
+    total_steps: int = 0       # denoising steps actually executed
+    latent_resumes: int = 0    # requests resumed from an archived latent
 
     def record(self, r: ServeResult) -> None:
         self.requests += 1
@@ -113,6 +129,9 @@ class ServeStats:
         self.latencies.append(r.latency)
         self.wall_latencies.append(r.wall_latency)
         self.scores.append(r.score)
+        self.total_steps += r.steps
+        if r.resumed_from >= 0:
+            self.latent_resumes += 1
         if r.route is Route.HIT_RETURN or r.fast_path == "history":
             self.cache_hits += 1
         elif r.route is Route.IMG2IMG:
@@ -123,6 +142,12 @@ class ServeStats:
         """Any outcome that avoided full-noise generation counts as a hit."""
         useful = self.cache_hits + self.reference_hits
         return useful / max(self.requests, 1)
+
+    @property
+    def mean_steps(self) -> float:
+        """Mean denoising steps executed per request — the latent-depth
+        cache's headline metric (lower = more work skipped)."""
+        return self.total_steps / max(self.requests, 1)
 
 
 class CacheGenius:
@@ -142,6 +167,7 @@ class CacheGenius:
                  use_prompt_optimizer: bool = True,
                  use_cluster_index: bool = True,
                  routing: str = "score",
+                 latent_depths=None,
                  pipeline: Optional[ServePipeline] = None):
         if routing not in ("score", "centroid"):
             raise ValueError(
@@ -175,6 +201,22 @@ class CacheGenius:
         # scan, blended with load + expected latency; "centroid" is the
         # Eq. 6 baseline and the automatic no-cluster-index fallback.
         self.routing = routing
+        # latent-depth cache: archive noised img2img intermediates at these
+        # chain depths alongside each finished image and let the Plan stage
+        # resume denoising from them.  None/() = off (classic binary
+        # split); True = the policy's default {K/4, K/2, 3K/4} schedule.
+        if latent_depths is None or latent_depths == ():
+            self.latent_depths = ()
+        elif latent_depths is True:
+            self.latent_depths = self.policy.default_latent_depths()
+        else:
+            depths = tuple(sorted({int(k) for k in latent_depths}))
+            if any(not 0 < k < self.policy.steps_ref for k in depths):
+                raise ValueError(
+                    f"latent_depths must satisfy 0 < k < steps_ref="
+                    f"{self.policy.steps_ref}, got {depths}")
+            self.latent_depths = depths
+        self.policy.latent_depths = self.latent_depths
         self.scheduler.policy = self.policy
         self.scheduler.latency_model = self.latency_model
         self.pipeline = pipeline or ServePipeline()
@@ -233,27 +275,54 @@ class CacheGenius:
     # ------------------------------------------------------------- internals
 
     def _archive(self, prompt: str, pvec: np.ndarray, img: np.ndarray,
-                 node: int, *, t: Optional[float] = None) -> None:
-        """Store the generated image to NFS (blob store) + insert into VDB."""
+                 node: int, *, t: Optional[float] = None,
+                 seed: int = 0) -> None:
+        """Store the generated image to NFS (blob store) + insert into VDB.
+
+        With the latent-depth cache on (and a backend that supports it),
+        the finished image's noised img2img intermediates at every
+        configured depth are archived alongside it in the SAME
+        ``VectorDB.add`` call — one stacked insert, so the device slab /
+        cluster row update stays one batched write.  Latent rows share
+        the finished image's embedding vectors (retrieval matches the
+        image semantics; depth only changes where the chain resumes) and
+        carry ``depth``/``source_id`` metadata host-side."""
         pid = self.blob_store.put(img)
         ivec = self.embedder.embed_image(img[None])[0]
-        self.dbs[node].add(ivec[None], pvec[None], np.array([pid]),
-                           self.clock if t is None else t)
+        t = self.clock if t is None else t
+        depths = self.latent_depths
+        if depths and getattr(self.backend, "supports_latent_resume", False):
+            lat = self.backend.archive_latents_batch(
+                np.asarray(img)[None], [seed], depths,
+                self.policy.steps_ref)
+            lat_pids = [self.blob_store.put(np.asarray(lat[j][0]))
+                        for j in range(len(depths))]
+            rows = 1 + len(depths)
+            self.dbs[node].add(
+                np.repeat(ivec[None], rows, axis=0),
+                np.repeat(pvec[None], rows, axis=0),
+                np.array([pid, *lat_pids]), t,
+                depths=np.array([-1, *depths], np.int64),
+                source_ids=np.full((rows,), pid, np.int64))
+        else:
+            self.dbs[node].add(ivec[None], pvec[None], np.array([pid]), t)
         self.scheduler.record_result(pvec, pid)
 
     def _finish(self, img, route, node, score, wall, *, steps, retrieved=True,
-                fast=None) -> ServeResult:
+                fast=None, resumed_from=-1) -> ServeResult:
         speed = (self.scheduler.nodes[node].speed if 0 <= node < len(self.dbs)
                  else max(n.speed for n in self.scheduler.nodes))
         lat = self.latency_model.latency(route, steps, node_speed=speed,
                                          scheduled=self.use_scheduler,
-                                         retrieved=retrieved)
+                                         retrieved=retrieved,
+                                         resumed=resumed_from >= 0)
         gpu_s = steps * self.latency_model.t_step / max(speed, 1e-9)
         self.cost_model.charge(max(node, 0), gpu_s,
                                vdb_seconds=self.latency_model.t_retrieve if retrieved else 0.0)
         res = ServeResult(image=img, route=route, node=node, score=score,
                           latency=lat, wall_latency=wall,
-                          steps=steps, fast_path=fast)
+                          steps=steps, fast_path=fast,
+                          resumed_from=resumed_from)
         self.stats.record(res)
         return res
 

@@ -33,7 +33,8 @@ from typing import Iterable, Iterator, List, Optional, Sequence
 
 import numpy as np
 
-from repro.data.synthetic import SceneSpec, caption_of, random_spec
+from repro.data.synthetic import (COLORS, SceneSpec, all_specs, caption_of,
+                                  random_spec)
 
 
 @dataclass
@@ -110,6 +111,49 @@ class RequestTrace:
     @property
     def specs(self) -> List[SceneSpec]:
         return list(self._specs)
+
+
+def band_mutation_trace(n: int, *, band_fraction: float = 0.5,
+                        seed: int = 0) -> List[TraceRequest]:
+    """Novel-spec / attribute-mutation workload for the latent-depth cache.
+
+    The Zipf trace's img2img-band matches overwhelmingly land on the
+    pre-seeded reference corpus, whose entries carry no archived latents —
+    so it never exercises depth resumes.  This trace does, by
+    construction: each request is either a *base* (a scene spec never
+    requested before, drawn from a seeded permutation of the full spec
+    pool — routes txt2img against a small corpus and is archived with
+    latents) or, with probability ``band_fraction``, a single-attribute
+    *mutation* (color swap) of a previously requested base.  Mutations
+    score in or near the paper's [lo, hi] reference band against their
+    base's archived generation, which is exactly the workload where
+    resuming from a noised intermediate saves denoising steps.
+
+    Pair with a small seed corpus (``corpus_n`` ≲ 50) so served archives,
+    not warm corpus entries, win retrieval.  Deterministic in ``seed``.
+    """
+    if not 0.0 <= band_fraction <= 1.0:
+        raise ValueError(f"band_fraction must be in [0, 1], "
+                         f"got {band_fraction}")
+    rng = np.random.default_rng(seed)
+    specs = all_specs()
+    perm = rng.permutation(len(specs))
+    bases: List[SceneSpec] = []
+    out: List[TraceRequest] = []
+    nxt = 0
+    for _ in range(n):
+        if bases and rng.random() < band_fraction:
+            b = bases[int(rng.integers(len(bases)))]
+            colors = [c for c in COLORS if c != b.color]
+            mut = SceneSpec(b.shape, colors[int(rng.integers(len(colors)))],
+                            b.background, b.size, b.position)
+            out.append(TraceRequest(caption_of(mut), mut))
+        else:
+            b = specs[perm[nxt % len(specs)]]
+            nxt += 1
+            bases.append(b)
+            out.append(TraceRequest(caption_of(b), b))
+    return out
 
 
 # ---------------------------------------------------------------------------

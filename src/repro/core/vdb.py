@@ -137,6 +137,13 @@ class VectorDB:
         self.last_access = np.full((capacity,), -1.0, np.float64)
         self.access_count = np.zeros((capacity,), np.int64)
         self.payload_ids = np.full((capacity,), -1, np.int64)
+        # latent-depth cache metadata (host-side slab columns; the fused
+        # device scans never consume them, so scans stay one-launch):
+        # ``depth`` = resume depth of a noised-latent entry, -1 for a
+        # finished image; ``source_id`` groups every entry archived from
+        # one generation (the finished image's payload id)
+        self.depth = np.full((capacity,), -1, np.int64)
+        self.source_id = np.full((capacity,), -1, np.int64)
         self.query_count = 0
         # running centroid (sum of valid img vectors + count), maintained
         # on every mutation so centroid() is O(dim), not O(capacity*dim)
@@ -172,18 +179,31 @@ class VectorDB:
     # -- mutation ----------------------------------------------------------
 
     def add(self, img_vecs: np.ndarray, txt_vecs: np.ndarray,
-            payload_ids: np.ndarray, t: float) -> np.ndarray:
+            payload_ids: np.ndarray, t: float, *,
+            depths: Optional[np.ndarray] = None,
+            source_ids: Optional[np.ndarray] = None) -> np.ndarray:
         """Insert a batch; overwrite oldest entries if full (FIFO pressure
-        valve — the real policy runs via :mod:`repro.core.lcu`)."""
+        valve — the real policy runs via :mod:`repro.core.lcu`).
+
+        ``depths``/``source_ids`` carry the latent-depth cache metadata:
+        depth -1 (the default) marks a finished image, k >= 0 a noised
+        latent resumable at chain depth k; ``source_ids`` defaults to
+        ``payload_ids`` (every finished image is its own source)."""
         img_vecs = _l2n(np.atleast_2d(np.asarray(img_vecs, np.float32)))
         txt_vecs = _l2n(np.atleast_2d(np.asarray(txt_vecs, np.float32)))
         payload_ids = np.atleast_1d(np.asarray(payload_ids, np.int64))
+        depths = (np.full(payload_ids.shape, -1, np.int64) if depths is None
+                  else np.atleast_1d(np.asarray(depths, np.int64)))
+        source_ids = (payload_ids if source_ids is None
+                      else np.atleast_1d(np.asarray(source_ids, np.int64)))
         n = img_vecs.shape[0]
         if n > self.capacity:    # oversized insert: only the NEWEST
             drop = n - self.capacity         # capacity rows land (FIFO)
             img_vecs = img_vecs[drop:]
             txt_vecs = txt_vecs[drop:]
             payload_ids = payload_ids[drop:]
+            depths = depths[drop:]
+            source_ids = source_ids[drop:]
             n = self.capacity
         free = np.flatnonzero(~self.valid)
         if len(free) < n:  # overwrite the oldest VALID entries only
@@ -201,8 +221,14 @@ class VectorDB:
         self.valid[slots] = True
         self.insert_time[slots] = t
         self.last_access[slots] = t
-        self.access_count[slots] = 0
+        # fresh entries start at 1, not 0: insertion IS one use.  At 0 a
+        # just-inserted row tied as most-evictable under LFU, so a sweep
+        # right after insertion evicted the newest rows first and the
+        # cache could never learn.
+        self.access_count[slots] = 1
         self.payload_ids[slots] = payload_ids
+        self.depth[slots] = depths
+        self.source_id[slots] = source_ids
         self._cent_sum += self.img_vecs[slots].sum(axis=0)
         self._cent_count += len(slots)
         self._cluster_update(slots)
@@ -220,6 +246,8 @@ class VectorDB:
             self._cent_count -= len(live)
         self.valid[slots] = False
         self.payload_ids[slots] = -1
+        self.depth[slots] = -1
+        self.source_id[slots] = -1
         self._cluster_invalidate(uniq)
         return payloads
 
@@ -360,6 +388,7 @@ class VectorDB:
             "last_access": self.last_access.copy(),
             "access_count": self.access_count.copy(),
             "payload_ids": self.payload_ids.copy(),
+            "depth": self.depth.copy(), "source_id": self.source_id.copy(),
         }
 
     @classmethod

@@ -33,13 +33,16 @@ def build_system(*, n_nodes: int = 4, corpus_n: int = 600,
                  capacity_per_node: int = 400, policy=None,
                  eviction="LCU", use_scheduler=True,
                  use_prompt_optimizer=True, backend=None, seed=0,
-                 node_speeds=None, routing: str = "score"):
+                 node_speeds=None, routing: str = "score",
+                 latent_depths=None):
     """Assemble the full CacheGenius stack over the synthetic corpus.
 
     ``routing`` selects the Schedule stage's mode: ``"score"`` (default)
     routes every request on its true best composite match per node from
     the cluster-wide fused scan; ``"centroid"`` keeps the paper's Eq. 6
-    node-representation baseline."""
+    node-representation baseline.  ``latent_depths`` enables the
+    latent-depth cache (``True`` = the policy's default {K/4, K/2, 3K/4}
+    schedule, or an explicit depth tuple)."""
     images, captions, _ = make_corpus(corpus_n, res=32, seed=seed)
     embedder = ProxyClipEmbedder(render_caption)
     img_vecs = embedder.embed_image(images)
@@ -62,7 +65,8 @@ def build_system(*, n_nodes: int = 4, corpus_n: int = 600,
         latency_model=LatencyModel(), cost_model=CostModel(),
         eviction=POLICIES[eviction], node_speeds=speeds,
         use_scheduler=use_scheduler,
-        use_prompt_optimizer=use_prompt_optimizer, routing=routing)
+        use_prompt_optimizer=use_prompt_optimizer, routing=routing,
+        latent_depths=latent_depths)
     return system, embedder, images, captions
 
 
@@ -70,7 +74,16 @@ class NullBackend(GenerationBackend):
     """Render-based stand-in backend for latency/routing experiments that
     don't need a trained model (benchmarks train the real tiny DiT).
     Deterministic per element (steps/seed are ignored), so batched and
-    sequential drains stay exactly comparable."""
+    sequential drains stay exactly comparable.
+
+    Latent-depth support mirrors the real backend's contract with the
+    cheapest possible model: the "latent" archived at EVERY depth is the
+    finished image itself, and ``resume_batch`` applies the same blend as
+    ``img2img_batch`` — so resuming from depth 0 bitwise-equals full
+    img2img (the parity invariant the real backend must also satisfy),
+    and any-depth resumes stay deterministic."""
+
+    supports_latent_resume = True
 
     def __init__(self, res: int):
         super().__init__()
@@ -88,6 +101,12 @@ class NullBackend(GenerationBackend):
             out.append(0.75 * target
                        + 0.25 * ref[: target.shape[0], : target.shape[1]])
         return np.stack(out)
+
+    def archive_latents_batch(self, images, seeds, depths, steps_total):
+        return np.stack([np.asarray(images)] * len(depths))
+
+    def resume_batch(self, prompts, latents, steps_total, k, seeds):
+        return self.img2img_batch(prompts, latents, steps_total - k, seeds)
 
 
 def _null_backend(corpus_images):
@@ -108,6 +127,13 @@ def main() -> int:
                     "cluster scan; 'centroid' is the Eq. 6 "
                     "node-representation baseline")
     ap.add_argument("--no-prompt-optimizer", action="store_true")
+    ap.add_argument("--latent-cache", action="store_true",
+                    help="archive noised img2img intermediates alongside "
+                    "finished images and resume denoising from them "
+                    "(policy default depths {K/4, K/2, 3K/4})")
+    ap.add_argument("--latent-depths", default=None,
+                    help="comma-separated resume depths, e.g. '5,10,15' "
+                    "(implies --latent-cache)")
     ap.add_argument("--fail-node", type=int, default=None,
                     help="kill node N after half the requests")
     ap.add_argument("--max-batch", "--batch", dest="max_batch", type=int,
@@ -126,11 +152,17 @@ def main() -> int:
     if args.arrival_rate <= 0:
         ap.error("--arrival-rate must be > 0")
 
+    if args.latent_depths is not None:
+        latent_depths = tuple(int(d) for d in args.latent_depths.split(","))
+    elif args.latent_cache:
+        latent_depths = True
+    else:
+        latent_depths = None
     system, _, _, _ = build_system(
         n_nodes=args.nodes, eviction=args.eviction,
         use_scheduler=not args.no_scheduler,
         use_prompt_optimizer=not args.no_prompt_optimizer,
-        routing=args.routing)
+        routing=args.routing, latent_depths=latent_depths)
     engine = ServingEngine(system, max_batch=args.max_batch)
 
     trace = RequestTrace(seed=1)
@@ -170,6 +202,9 @@ def main() -> int:
           + ("" if not args.no_scheduler else " (scheduler disabled)"))
     print(f"route mix          : {st.route_counts}")
     print(f"hit rate           : {st.hit_rate:.3f}")
+    print(f"mean steps/request : {st.mean_steps:.2f}"
+          + (f"   (latent resumes: {st.latent_resumes}, depths "
+             f"{system.latent_depths})" if system.latent_depths else ""))
     print(f"mean latency (Eq.8): {lat.mean():.3f}s   "
           f"p50 {np.percentile(lat, 50):.3f}  p95 {np.percentile(lat, 95):.3f}")
     wall = np.array(st.wall_latencies)

@@ -16,15 +16,20 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.diffusion.schedule import DiffusionSchedule
 
 
 def ddim_timesteps(T: int, steps: int, *, t_start: Optional[int] = None):
     """Strided DDIM sub-sequence, descending. ``t_start`` truncates the chain
-    for SDEdit (start at noise level t_start instead of T)."""
+    for SDEdit (start at noise level t_start instead of T).
+
+    Computed in host numpy: every input is a static Python int, and the
+    archive map (:func:`resume_noise_levels`) indexes the result inside a
+    jitted trace, where a device-side constant would turn into a tracer."""
     hi = T if t_start is None else int(t_start)
-    ts = jnp.linspace(0, hi - 1, steps).round().astype(jnp.int32)
+    ts = np.linspace(0, hi - 1, steps).round().astype(np.int32)
     return ts[::-1]
 
 
@@ -38,6 +43,24 @@ def ddim_step(sched: DiffusionSchedule, x, eps, t, t_prev, *, eta: float = 0.0):
     return jnp.sqrt(ab_p) * x0_pred + dir_xt
 
 
+def _ddim_scan(eps_fn: Callable, sched: DiffusionSchedule, x, ctx, ts,
+               *, eta: float = 0.0, dtype=jnp.float32):
+    """The shared DDIM step loop over an explicit descending timestep
+    vector — one ``lax.scan`` whether the chain is full, truncated
+    (SDEdit), or resumed mid-way (the latent-depth cache)."""
+    b = x.shape[0]
+    ts_prev = jnp.concatenate([ts[1:], jnp.array([-1], jnp.int32)])
+
+    def body(x, tt):
+        t, t_prev = tt
+        t_b = jnp.full((b,), t, jnp.int32)
+        eps = eps_fn(x, t_b, ctx)
+        return ddim_step(sched, x, eps, t, t_prev, eta=eta).astype(dtype), None
+
+    x, _ = jax.lax.scan(body, x, (ts, ts_prev))
+    return x
+
+
 def ddim_sample(eps_fn: Callable, sched: DiffusionSchedule, shape, ctx, key,
                 *, steps: int, eta: float = 0.0, x_init=None,
                 t_start: Optional[int] = None, dtype=jnp.float32):
@@ -49,16 +72,7 @@ def ddim_sample(eps_fn: Callable, sched: DiffusionSchedule, shape, ctx, key,
     k_noise, key = jax.random.split(key)
     x = jax.random.normal(k_noise, shape, dtype) if x_init is None else x_init
     ts = ddim_timesteps(sched.T, steps, t_start=t_start)
-    ts_prev = jnp.concatenate([ts[1:], jnp.array([-1], jnp.int32)])
-
-    def body(x, tt):
-        t, t_prev = tt
-        t_b = jnp.full((shape[0],), t, jnp.int32)
-        eps = eps_fn(x, t_b, ctx)
-        return ddim_step(sched, x, eps, t, t_prev, eta=eta).astype(dtype), None
-
-    x, _ = jax.lax.scan(body, x, (ts, ts_prev))
-    return x
+    return _ddim_scan(eps_fn, sched, x, ctx, ts, eta=eta, dtype=dtype)
 
 
 def sdedit_start(sched: DiffusionSchedule, reference, noise, *,
@@ -90,6 +104,40 @@ def sdedit_sample(eps_fn: Callable, sched: DiffusionSchedule, reference, ctx,
                                    strength=strength, dtype=dtype)
     return ddim_sample(eps_fn, sched, reference.shape, ctx, k2, steps=steps,
                        x_init=x_init, t_start=t_start, dtype=dtype)
+
+
+def resume_noise_levels(sched: DiffusionSchedule, *, steps: int,
+                        strength: float):
+    """Forward-noise level (schedule timestep) of each depth of the
+    truncated img2img DDIM chain — the latent-depth cache's archive map.
+
+    Depth ``k`` means "k chain steps already absorbed": the archived
+    latent for depth k is ``q_sample(z0_finished, levels[k], noise)`` and
+    :func:`resume_sample` runs the remaining ``steps - k`` steps.  Level 0
+    is EXACTLY :func:`sdedit_start`'s ``t_noise`` (``strength·(T-1)``), so
+    resuming from depth 0 replays the full img2img chain; level k >= 1 is
+    ``ts[k]`` of the truncated chain — the noise level the chain sits at
+    after its k-th update.  Keeping both conversions here (one place)
+    pins archive and resume to the same chain geometry."""
+    ts = np.asarray(ddim_timesteps(sched.T, steps,
+                                   t_start=int(strength * sched.T)))
+    levels = [int(strength * (sched.T - 1))]
+    levels += [int(ts[k]) for k in range(1, steps)]
+    return levels
+
+
+def resume_sample(eps_fn: Callable, sched: DiffusionSchedule, latent, ctx,
+                  *, steps: int, k: int, strength: float = 0.6,
+                  dtype=jnp.float32):
+    """Resume the truncated img2img DDIM chain from depth ``k``: run the
+    last ``steps - k`` updates of the SAME ``steps``-step chain
+    :func:`sdedit_sample` would run, starting from an archived latent
+    noised to ``resume_noise_levels(...)[k]``.  ``k == 0`` is the full
+    img2img chain from the SDEdit initial state (identical step sequence
+    and ops to ``ddim_sample(x_init=..., t_start=strength·T)``)."""
+    ts = ddim_timesteps(sched.T, steps, t_start=int(strength * sched.T))
+    return _ddim_scan(eps_fn, sched, latent.astype(dtype), ctx, ts[k:],
+                      dtype=dtype)
 
 
 # ---------------------------------------------------------------------------

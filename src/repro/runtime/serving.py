@@ -44,11 +44,10 @@ permutation (in fact, arrival-order-identical) of fixed-drain results —
 batch partitioning never changes routes, images, cache state, or hit/miss
 stats; widely spaced single submissions reproduce sequential ``serve``
 bitwise; and a run whose group sizes stay inside the precompiled buckets
-triggers no JIT at serve time.  The eviction sweep runs at group
-boundaries (once per micro-batch at most), and ``ServingEngine`` clamps
-``maintenance_interval`` up to ``max_batch`` with a warning — a
-sub-batch interval cannot be honoured at group granularity and would
-make cache state depend on batch partitioning.
+triggers no JIT at serve time.  The eviction sweep fires at EXACT
+request-count crossings inside the Finish stage (archives past the
+boundary are deferred and flushed per request), so sub-batch maintenance
+intervals keep their sequential cadence — no interval clamp is needed.
 """
 from __future__ import annotations
 
@@ -66,7 +65,8 @@ from repro.core.system import CacheGenius, GenerationBackend, ServeResult
 from repro.core.trace import TimedRequest
 from repro.models.diffusion import dit as dit_mod
 from repro.models.diffusion import vae as vae_mod
-from repro.models.diffusion.sampler import ddim_sample, sdedit_start
+from repro.models.diffusion.sampler import (ddim_sample, resume_noise_levels,
+                                            resume_sample, sdedit_start)
 from repro.models.diffusion.schedule import DiffusionSchedule
 from repro.utils import next_pow2
 
@@ -84,7 +84,14 @@ class DiffusionBackend(GenerationBackend):
     Implements the batch-first ``GenerationBackend`` protocol directly
     (``txt2img_batch`` / ``img2img_batch`` are the required surface; the
     scalar overrides below hit the batch=1 AOT bucket without the padding
-    plumbing)."""
+    plumbing), plus the latent-depth cache surface: ``resume_batch``
+    resumes the truncated img2img DDIM chain from an archived depth-k
+    latent (AOT kind ``"resume@k"``), and ``archive_latents_batch``
+    produces the noised intermediates to archive (kind
+    ``"latents@k1,k2,..."``) — both bucketed exactly like the classic
+    kinds, so every (kind, steps, batch) compiles once."""
+
+    supports_latent_resume = True
 
     def __init__(self, net_params, net_cfg: dit_mod.DiTConfig, vae_params,
                  vae_cfg: vae_mod.VAEConfig,
@@ -141,6 +148,33 @@ class DiffusionBackend(GenerationBackend):
                         x_init=x_init, t_start=t_start)
         return vae_mod.decode(vae, self.vae_cfg, z / self.latent_scale)
 
+    def _resume_core(self, net, vae, latent, ctx, steps_total: int, k: int):
+        eps = dit_mod.make_eps_fn(net, self.net_cfg)
+        z = resume_sample(eps, self.sched, latent, ctx, steps=steps_total,
+                          k=k, strength=self.strength)
+        return vae_mod.decode(vae, self.vae_cfg, z / self.latent_scale)
+
+    def _archive_latents_core(self, vae, images, seeds, depths, steps_total):
+        # noised intermediates of the img2img chain each image WOULD run:
+        # the same encode + per-seed noise draw as _img2img_core, pushed
+        # to resume_noise_levels()[k] — depth 0 equals sdedit_start's
+        # x_init exactly, so resume(k=0) replays full img2img
+        mean, _ = vae_mod.encode(vae, self.vae_cfg, images)
+        z0 = mean * self.latent_scale
+
+        def _noise(seed, z1):
+            k1, _ = jax.random.split(jax.random.PRNGKey(seed))
+            return jax.random.normal(k1, (1,) + z1.shape)[0]
+
+        noise = jax.vmap(_noise)(seeds, z0)
+        levels = resume_noise_levels(self.sched, steps=steps_total,
+                                     strength=self.strength)
+        b = images.shape[0]
+        return jnp.stack([
+            self.sched.q_sample(z0, jnp.full((b,), levels[k], jnp.int32),
+                                noise)
+            for k in depths])
+
     # -- AOT bucket management -----------------------------------------------
 
     def _get(self, kind: str, steps: int, batch: int):
@@ -148,11 +182,30 @@ class DiffusionBackend(GenerationBackend):
         if key not in self._compiled:
             t0 = time.perf_counter()
             res = self.vae_cfg.downsample * self.net_cfg.img_res
+            lat_sds = jax.ShapeDtypeStruct(
+                (batch, self.net_cfg.img_res, self.net_cfg.img_res,
+                 self.net_cfg.in_ch), jnp.float32)
             if kind == "txt2img":
                 fn = jax.jit(lambda n, v, c, s: self._txt2img_core(
                     n, v, c, s, steps, batch))
                 args = (self.net_params, self.vae_params,
                         jax.ShapeDtypeStruct((batch, self.net_cfg.ctx_dim),
+                                             jnp.float32),
+                        jax.ShapeDtypeStruct((batch,), jnp.int32))
+            elif kind.startswith("resume@"):
+                k = int(kind.split("@", 1)[1])
+                fn = jax.jit(lambda n, v, l, c: self._resume_core(
+                    n, v, l, c, steps, k))
+                args = (self.net_params, self.vae_params, lat_sds,
+                        jax.ShapeDtypeStruct((batch, self.net_cfg.ctx_dim),
+                                             jnp.float32))
+            elif kind.startswith("latents@"):
+                depths = tuple(int(d) for d in
+                               kind.split("@", 1)[1].split(","))
+                fn = jax.jit(lambda v, i, s: self._archive_latents_core(
+                    v, i, s, depths, steps))
+                args = (self.vae_params,
+                        jax.ShapeDtypeStruct((batch, res, res, 3),
                                              jnp.float32),
                         jax.ShapeDtypeStruct((batch,), jnp.int32))
             else:
@@ -251,6 +304,55 @@ class DiffusionBackend(GenerationBackend):
                  seeds_arr)
         return np.asarray(out[:n])
 
+    # -- latent-depth cache surface -------------------------------------------
+
+    def resume_batch(self, prompts: Sequence[str], latents: np.ndarray,
+                     steps_total: int, k: int,
+                     seeds: Sequence[int]) -> np.ndarray:
+        """Resume the ``steps_total``-step img2img chain from depth ``k``
+        for a stacked batch of archived latents (no noise draw — the
+        latents are pre-noised at archive time, so ``seeds`` only shapes
+        the padding)."""
+        n = len(prompts)
+        if n == 0:
+            res = self.vae_cfg.downsample * self.net_cfg.img_res
+            return np.zeros((0, res, res, 3), np.float32)
+        bucket = self._bucket(n)
+        ctx, _ = self._pad_ctx_seeds(prompts, seeds, bucket)
+        lats = np.asarray(latents, np.float32)
+        pad = bucket - n
+        if pad:
+            lats = np.concatenate([lats, np.repeat(lats[-1:], pad, axis=0)])
+        fn = self._get(f"resume@{int(k)}", steps_total, bucket)
+        out = fn(self.net_params, self.vae_params, jnp.asarray(lats), ctx)
+        return np.asarray(out[:n])
+
+    def archive_latents_batch(self, images: np.ndarray,
+                              seeds: Sequence[int],
+                              depths: Sequence[int],
+                              steps_total: int) -> np.ndarray:
+        """Noised img2img-chain intermediates of each image at every
+        requested depth — ``(len(depths), B, img_res, img_res, in_ch)``.
+        The per-image noise reuses the archive ``seed`` through the SAME
+        draw as ``_img2img_core``, so depth 0 is bitwise the SDEdit
+        initial state of ``img2img(image, seed)``."""
+        imgs = np.asarray(images, np.float32)
+        n = imgs.shape[0]
+        if n == 0:
+            return np.zeros((len(depths), 0, self.net_cfg.img_res,
+                             self.net_cfg.img_res, self.net_cfg.in_ch),
+                            np.float32)
+        bucket = self._bucket(n)
+        pad = bucket - n
+        if pad:
+            imgs = np.concatenate([imgs, np.repeat(imgs[-1:], pad, axis=0)])
+        seeds_arr = jnp.asarray(np.asarray(list(seeds) + [0] * pad,
+                                           np.int32))
+        kind = "latents@" + ",".join(str(int(d)) for d in depths)
+        fn = self._get(kind, steps_total, bucket)
+        out = fn(self.vae_params, jnp.asarray(imgs), seeds_arr)
+        return np.asarray(out)[:, :n]
+
     def as_generation_backend(self) -> GenerationBackend:
         """Compatibility shim: DiffusionBackend now IS a GenerationBackend
         (batch-first protocol), so this is the identity."""
@@ -300,24 +402,11 @@ class ServingEngine:
         self.max_batch = max_batch
         self.queue: List[Request] = []
         self.completed: List[Completed] = []
-        # The pipeline sweeps the cache at GROUP boundaries (at most one
-        # eviction sweep per micro-batch), so an interval below the
-        # micro-batch size cannot be honoured — and would make cache
-        # state depend on how the trace is partitioned into batches,
-        # invalidating the continuous-vs-drain parity contract.  Clamp
-        # up to max_batch and tell the operator.  The clamp is a
-        # PERSISTENT fix to the shared system's config (deliberately —
-        # the sub-batch interval is unhonourable for any engine), not
-        # engine-local state.
-        if system.maintenance_interval < max_batch:
-            import warnings
-            warnings.warn(
-                f"maintenance_interval={system.maintenance_interval} is "
-                f"smaller than max_batch={max_batch}; clamping to "
-                f"{max_batch} (sweeps run at group boundaries, and a "
-                "sub-batch interval would make cache state depend on "
-                "batch partitioning)", RuntimeWarning, stacklevel=2)
-            system.maintenance_interval = max_batch
+        # Maintenance intervals smaller than max_batch are honoured: the
+        # Finish stage sweeps at exact request-count crossings (archives
+        # past a crossing are deferred to the per-request result loop),
+        # so the sweep cadence no longer depends on batch partitioning
+        # and the old clamp-to-max_batch is gone.
 
     # -- legacy closed-loop surface -------------------------------------------
 

@@ -337,37 +337,51 @@ def test_queue_delay_is_time_waited_not_ticks():
 
 
 # ---------------------------------------------------------------------------
-# group-boundary maintenance: small intervals no longer break partitioning
+# exact-crossing maintenance: sub-batch intervals keep their cadence
 # ---------------------------------------------------------------------------
 
 
-def test_maintenance_interval_clamped_with_warning():
-    """The engine cannot honour a sub-batch maintenance interval (sweeps
-    run at group boundaries, at most once per micro-batch) — it clamps up
-    to ``max_batch`` and warns instead of silently under-sweeping."""
+def _count_maintains(system):
+    """Wrap ``system.maintain`` to record the request count at each sweep."""
+    crossings = []
+    orig = system.maintain
+
+    def wrapped():
+        crossings.append(system.stats.requests)
+        return orig()
+
+    system.maintain = wrapped
+    return crossings
+
+
+def test_sub_batch_maintenance_interval_is_honoured():
+    """Regression for the old clamp: ``ServingEngine`` used to clamp a
+    sub-batch ``maintenance_interval`` up to ``max_batch`` with a warning
+    because sweeps only fired at group boundaries.  Sweeps now fire at
+    EXACT request-count crossings inside the Finish stage, so the
+    operator's interval is honoured as-is — no clamp, no warning."""
     system = _system()
     system.maintenance_interval = 2
-    with pytest.warns(RuntimeWarning, match="maintenance_interval"):
-        ServingEngine(system, max_batch=8)
-    assert system.maintenance_interval == 8
-    # at or above max_batch the interval is left alone, silently
-    system.maintenance_interval = 64
     import warnings
     with warnings.catch_warnings():
         warnings.simplefilter("error")
         ServingEngine(system, max_batch=8)
-    assert system.maintenance_interval == 64
+    assert system.maintenance_interval == 2     # left alone
+    crossings = _count_maintains(system)
+    reqs = _trace(8, seed=3)
+    system.serve_batch([r.prompt for r in reqs], seeds=list(range(8)))
+    # one batch of 8 with interval 2 sweeps at requests 2, 4, 6, 8 — the
+    # exact cadence the sequential loop produces
+    assert crossings == [2, 4, 6, 8]
 
 
 def test_group_boundary_maintenance_keeps_partition_parity():
-    """Regression for the maintenance-mid-flight caveat: the sweep now
-    fires at group boundaries whenever the request counter crossed an
-    interval multiple, so at the smallest admissible interval (== the
-    batch size) sequential serve and the batched drain sweep at the SAME
-    request counts — cache state no longer depends on partitioning.
-    (Pre-fix, mid-loop sweeps diverged: a batch crossing the boundary
-    swept before its later members' archives, at a different point than
-    the sequential loop.)"""
+    """Regression for the maintenance-mid-flight caveat: sweeps fire at
+    exact request-count crossings, so sequential serve and the batched
+    drain sweep at the SAME request counts — cache state no longer
+    depends on partitioning.  (Pre-fix, mid-loop sweeps diverged: a batch
+    crossing the boundary swept before its later members' archives, at a
+    different point than the sequential loop.)"""
     reqs = _trace(48, seed=2)
 
     def build():
@@ -392,35 +406,75 @@ def test_group_boundary_maintenance_keeps_partition_parity():
     assert s_seq.total_size <= 100 and s_bat.total_size <= 100
 
 
-def test_direct_serve_batch_warns_when_batch_spans_intervals():
-    """Callers that bypass ServingEngine (so no up-front clamp) must be
-    told when a single batch coalesces several due sweeps into one."""
+def test_sub_batch_interval_ragged_groups_keep_parity():
+    """The previously caveated case, now passing: a maintenance interval
+    SMALLER than max_batch with ragged continuous admission groups.  The
+    old group-boundary sweep shifted its cadence with the partitioning
+    (hence the clamp); exact-crossing sweeps + deferred archives make the
+    (archive, sweep) sequence partition-independent, so sequential serve,
+    fixed drain, and ragged continuous groups all converge to the same
+    cache state and route mix on a verified trace."""
+    reqs = _trace(40, seed=2)
+
+    def build():
+        system = _system()
+        system.maintenance_interval = 4      # < max_batch = 8
+        system.cache_capacity = 100          # tight: sweeps actually evict
+        return system
+
+    s_seq = build()
+    for i, r in enumerate(reqs):
+        s_seq.serve(r.prompt, seed=i, quality_tier=r.quality_tier)
+
+    s_drain = build()
+    ServingEngine(s_drain, max_batch=8).run(
+        trace_arrivals(reqs, [0.0] * len(reqs)), mode="drain")
+
+    s_cont = build()
+    ServingEngine(s_cont, max_batch=8).run(
+        poisson_arrivals(reqs, rate=60.0, seed=2))   # ragged groups
+
+    for sys_b in (s_drain, s_cont):
+        assert s_seq.stats.route_counts == sys_b.stats.route_counts
+        for db_a, db_b in zip(s_seq.dbs, sys_b.dbs):
+            np.testing.assert_array_equal(db_a.valid, db_b.valid)
+            np.testing.assert_array_equal(db_a.payload_ids,
+                                          db_b.payload_ids)
+        assert sys_b.total_size <= 100
+
+
+def test_batch_spanning_intervals_sweeps_at_each_crossing():
+    """Regression for the old coalesced-sweep warning: a single batch
+    spanning several interval multiples used to collapse them into ONE
+    group-boundary sweep (and warn).  Exact-crossing maintenance fires a
+    sweep at EVERY multiple the batch crosses, interleaved with result
+    recording — no warning, no coalescing."""
     system = _system()
     system.maintenance_interval = 4
+    crossings = _count_maintains(system)
     reqs = _trace(12, seed=6)
-    with pytest.warns(RuntimeWarning, match="exceeds maintenance_interval"):
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
         system.serve_batch([r.prompt for r in reqs],
                            seeds=list(range(len(reqs))))
-    # a batch of 6 with interval 4 shifts the sweep cadence even when it
-    # crosses only one boundary — it must warn too
-    system2 = _system()
-    system2.maintenance_interval = 4
-    with pytest.warns(RuntimeWarning, match="exceeds maintenance_interval"):
-        system2.serve_batch([r.prompt for r in reqs[:6]],
-                            seeds=list(range(6)))
+    assert crossings == [4, 8, 12]
+    # a batch of 6 continues on the same counter: next crossing is 16
+    crossings.clear()
+    system.serve_batch([r.prompt for r in reqs[:6]], seeds=list(range(6)))
+    assert crossings == [16]
 
 
-def test_continuous_run_with_clamped_interval_stays_consistent():
-    """A continuous run whose operator asked for a sub-batch interval:
-    after the clamp, sweeps fire at group boundaries — capacity stays
-    bounded and every history entry still resolves to a live blob, even
-    with ragged admission groups."""
+def test_continuous_run_with_sub_batch_interval_stays_consistent():
+    """A continuous run with a sub-batch maintenance interval (the config
+    the engine used to clamp away): sweeps fire at exact crossings inside
+    ragged admission groups — capacity stays bounded and every history
+    entry still resolves to a live blob."""
     reqs = _trace(40, seed=5)
     system = _system()
-    system.maintenance_interval = 2              # will clamp to 8
+    system.maintenance_interval = 2              # honoured as-is now
     system.cache_capacity = 100
-    with pytest.warns(RuntimeWarning):
-        eng = ServingEngine(system, max_batch=8)
+    eng = ServingEngine(system, max_batch=8)
     done = eng.run(poisson_arrivals(reqs, rate=60.0, seed=5))
     assert len(done) == len(reqs)
     assert system.total_size <= 100
