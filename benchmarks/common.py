@@ -63,6 +63,13 @@ CACHE_CAPACITIES: Tuple[int, ...] = (2048, 4096)
 # --hit-rates`.
 HIT_RATES: Tuple[float, ...] = (0.2, 0.5, 0.8)
 
+# Front-door load benchmark axes: tenant-count sweep for the contention
+# phase and the SLA tiers cycled across the paced tenants; overridable
+# via `benchmarks.run --tenants` / `--tiers`.  ARRIVAL_RATES above also
+# drives frontdoor_load's paced phase (wall req/s there).
+TENANT_COUNTS: Tuple[int, ...] = (3,)
+TIER_NAMES: Tuple[str, ...] = ("premium", "standard", "batch")
+
 
 def _vae_cfg():
     return vae_mod.VAEConfig(in_ch=3, base_ch=16, ch_mult=(1, 2), z_ch=4,

@@ -677,6 +677,160 @@ def latent_depth_cache(n_requests: int = 120, corpus_n: int = 32,
     return out
 
 
+def frontdoor_load(corpus_n: int = 80, n_nodes: int = 2,
+                   max_batch: int = 8, n_premium: int = 48,
+                   quota_rate: float = 20.0, quota_burst: int = 8) -> Dict:
+    """Multi-tenant front-door gateway under load: per-tier queue-delay
+    percentiles, quota rejection rate, Jain's fairness index, and the two
+    acceptance gates — TIER ISOLATION (a batch tenant offered 5× its
+    token-bucket quota moves premium p95 queue delay by < 20% of the
+    uncontended run, small absolute floor for CI jitter) and THROUGHPUT
+    (the gateway path serves a merged trace within 10% of a direct
+    ``ServingEngine.run``).
+
+    Three phases: (1) paced multi-tenant traffic at each
+    ``C.ARRIVAL_RATES`` wall rate, tiers from ``C.TIER_NAMES`` cycled
+    across ``max(C.TENANT_COUNTS)`` tenants; (2) the isolation A/B —
+    premium burst alone vs premium burst + ``t-1`` batch tenants flooding
+    5× quota, for each ``t`` in ``C.TENANT_COUNTS``; (3) the throughput
+    ratio.  Stack-free: NullBackend + proxy embedder (the gateway is
+    pure orchestration; pixels come from the render stand-in)."""
+    from repro.core.trace import merge_arrivals, poisson_arrivals
+    from repro.frontdoor import BackpressureError, Gateway
+    from repro.launch.frontdoor import jain_fairness
+    from repro.launch.serve import build_system
+    from repro.runtime.serving import Request, ServingEngine
+
+    trace = RequestTrace(seed=5, n_specs=800)
+    prompts = [r.prompt for r in trace.generate(600)]
+
+    def fresh_engine() -> ServingEngine:
+        system, _, _, _ = build_system(n_nodes=n_nodes, corpus_n=corpus_n,
+                                       capacity_per_node=corpus_n + 400,
+                                       seed=0)
+        engine = ServingEngine(system, max_batch=max_batch)
+        # absorb compile/trace cost before anything is timed
+        engine.serve_group([Request(prompts[i], i)
+                            for i in range(max_batch)])
+        return engine
+
+    def qd(handles, pct):
+        return float(np.percentile([h.meta["queue_delay"]
+                                    for h in handles], pct))
+
+    out: Dict = {"n_nodes": n_nodes, "max_batch": max_batch,
+                 "quota_rate": quota_rate, "quota_burst": quota_burst}
+
+    # -- phase 1: paced multi-tenant traffic per offered wall rate ----------
+    n_tenants = max(C.TENANT_COUNTS)
+    tiers = [C.TIER_NAMES[i % len(C.TIER_NAMES)] for i in range(n_tenants)]
+    n_paced = 36
+    for rate in C.ARRIVAL_RATES:
+        per = [poisson_arrivals(prompts[100 + t * n_paced:]
+                                [:n_paced // n_tenants],
+                                rate / n_tenants, seed=31 + t,
+                                seed_base=t * n_paced,
+                                tenant=f"tenant{t}", tier=tiers[t])
+               for t in range(n_tenants)]
+        merged = merge_arrivals(*per)
+        with Gateway(fresh_engine()) as gw:
+            t0 = time.perf_counter()
+            handles = []
+            for r in merged:
+                time.sleep(max(0.0, t0 + r.arrival_time
+                               - time.perf_counter()))
+                handles.append(gw.submit(r.prompt, tenant=r.tenant,
+                                         tier=r.tier, seed=r.seed))
+            for h in handles:
+                h.wait(timeout=120)
+        by_tier: Dict[str, List] = {}
+        for h in handles:
+            by_tier.setdefault(h.meta["tier"], []).append(h)
+        for tier, hs in sorted(by_tier.items()):
+            out[f"qd_p50_{tier}_rate{rate:g}"] = qd(hs, 50)
+            out[f"qd_p95_{tier}_rate{rate:g}"] = qd(hs, 95)
+        done_per_tenant = [sum(1 for h in handles
+                               if h.meta["tenant"] == f"tenant{t}")
+                           for t in range(n_tenants)]
+        out[f"jain_rate{rate:g}"] = jain_fairness(done_per_tenant)
+
+    # -- phase 2: tier isolation (batch tier offered 5x its quota) ----------
+    def premium_burst(gw):
+        handles = [gw.submit(prompts[300 + i], tenant="prem",
+                             tier="premium", seed=300 + i)
+                   for i in range(n_premium)]
+        for h in handles:
+            h.wait(timeout=120)
+        return handles
+
+    with Gateway(fresh_engine()) as gw:
+        base = premium_burst(gw)
+    p95_uncontended = qd(base, 95)
+    out["premium_qd_p95_uncontended"] = p95_uncontended
+
+    isolation_ok = True
+    for t in C.TENANT_COUNTS:
+        n_flood = max(t - 1, 1)
+        quotas = {f"batch{b}": (quota_rate, float(quota_burst))
+                  for b in range(n_flood)}
+        gw = Gateway(fresh_engine(), quotas=quotas)
+        # flood first, THEN premium: strict tier priority must still put
+        # every premium job ahead of the whole accepted batch backlog
+        offered = 5 * quota_burst
+        rejected = 0
+        for b in range(n_flood):
+            for i in range(offered):
+                try:
+                    gw.submit(prompts[400 + b * offered + i],
+                              tenant=f"batch{b}", tier="batch",
+                              seed=400 + b * offered + i)
+                except BackpressureError:
+                    rejected += 1
+        with gw:
+            contended = premium_burst(gw)
+        p95 = qd(contended, 95)
+        st = gw.stats()
+        out[f"premium_qd_p95_contended_t{t}"] = p95
+        out[f"batch_rejection_rate_t{t}"] = rejected / (n_flood * offered)
+        accepted_per_flood = [st["accepted_by_tenant"].get(f"batch{b}", 0)
+                              for b in range(n_flood)]
+        out[f"jain_batch_accept_t{t}"] = jain_fairness(accepted_per_flood)
+        isolation_ok &= p95 <= max(1.2 * p95_uncontended,
+                                   p95_uncontended + 0.05)
+    out["tier_isolation_ok"] = bool(isolation_ok)
+
+    # -- phase 3: gateway throughput vs direct ServingEngine.run ------------
+    n_tp = 96
+    half = n_tp // 2
+    merged = merge_arrivals(
+        poisson_arrivals(prompts[200:200 + half], 1e9, seed=7,
+                         tenant="a", tier="standard"),
+        poisson_arrivals(prompts[200 + half:200 + n_tp], 1e9, seed=8,
+                         seed_base=half, tenant="b", tier="standard"))
+    direct_rps = gateway_rps = 0.0
+    for _ in range(2):                       # best-of-2 absorbs OS jitter
+        direct = fresh_engine()
+        t0 = time.perf_counter()
+        done = direct.run(merged)
+        direct_rps = max(direct_rps,
+                         len(done) / (time.perf_counter() - t0))
+
+        gw = Gateway(fresh_engine(), max_depth=2 * n_tp, fair=False)
+        handles = [gw.submit(r.prompt, tenant=r.tenant, tier=r.tier,
+                             seed=r.seed) for r in merged]
+        t0 = time.perf_counter()
+        with gw:
+            for h in handles:
+                h.wait(timeout=240)
+        gateway_rps = max(gateway_rps,
+                          len(handles) / (time.perf_counter() - t0))
+    out["direct_rps"] = direct_rps
+    out["gateway_rps"] = gateway_rps
+    out["throughput_ratio"] = gateway_rps / max(direct_rps, 1e-9)
+    out["throughput_ok"] = bool(out["throughput_ratio"] >= 0.9)
+    return out
+
+
 ALL_BENCHMARKS = {
     "fig1_psnr_steps": fig1_psnr_steps,
     "table1_quality": table1_quality,
@@ -693,6 +847,7 @@ ALL_BENCHMARKS = {
     "retrieval_scan": retrieval_scan,
     "scheduling_quality": scheduling_quality,
     "latent_depth_cache": latent_depth_cache,
+    "frontdoor_load": frontdoor_load,
     "fig19_lcu": fig19_lcu,
     "table4_reference": table4_reference,
     "table5_embeddings": table5_embeddings,
@@ -700,4 +855,5 @@ ALL_BENCHMARKS = {
 
 # Benchmarks that never touch the trained diffusion stack — the driver
 # skips the (slow) stack build when only these are selected.
-STACK_FREE = {"retrieval_scan", "scheduling_quality", "latent_depth_cache"}
+STACK_FREE = {"retrieval_scan", "scheduling_quality", "latent_depth_cache",
+              "frontdoor_load"}

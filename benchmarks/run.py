@@ -70,6 +70,15 @@ def _pos_ints(text: str):
     return vals
 
 
+def _tier_names(text: str):
+    names = tuple(t.strip() for t in text.split(","))
+    known = {"premium", "standard", "batch"}
+    if not names or any(n not in known for n in names):
+        raise argparse.ArgumentTypeError(
+            f"tiers must be drawn from {sorted(known)}, got {text!r}")
+    return names
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
@@ -80,8 +89,9 @@ def main() -> int:
                          "serving-throughput benchmark (default: 1,4,8)")
     ap.add_argument("--arrival-rates", type=_arrival_rates, default=None,
                     help="comma-separated offered loads (req/s) for the "
-                         "serving latency-vs-load curve and the "
-                         "scheduling_quality routing comparison "
+                         "serving latency-vs-load curve, the "
+                         "scheduling_quality routing comparison, and the "
+                         "frontdoor_load paced phase (wall req/s there) "
                          "(default: 10,40,160)")
     ap.add_argument("--hit-rates", type=_hit_rates, default=None,
                     help="comma-separated target cache hit-rates "
@@ -94,6 +104,13 @@ def main() -> int:
     ap.add_argument("--cache-capacities", type=_pos_ints, default=None,
                     help="comma-separated per-node cache capacities for the "
                          "retrieval_scan benchmark (default: 2048,4096)")
+    ap.add_argument("--tenants", type=_pos_ints, default=None,
+                    help="comma-separated tenant counts for the "
+                         "frontdoor_load contention sweep (default: 3)")
+    ap.add_argument("--tiers", type=_tier_names, default=None,
+                    help="comma-separated SLA tiers cycled across the "
+                         "frontdoor_load paced tenants "
+                         "(default: premium,standard,batch)")
     args = ap.parse_args()
 
     from benchmarks.paper_figures import ALL_BENCHMARKS, STACK_FREE
@@ -109,6 +126,10 @@ def main() -> int:
         C.NODE_COUNTS = args.nodes
     if args.cache_capacities:
         C.CACHE_CAPACITIES = args.cache_capacities
+    if args.tenants:
+        C.TENANT_COUNTS = args.tenants
+    if args.tiers:
+        C.TIER_NAMES = args.tiers
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     t0 = time.time()

@@ -349,10 +349,20 @@ class RequestScheduler:
         self._hist_vecs = self._hist_vecs[keep]
         self._hist_payloads = [self._hist_payloads[i] for i in keep]
 
-    # -- failures ---------------------------------------------------------------
+    # -- failures / elasticity --------------------------------------------------
 
     def mark_failed(self, node: int) -> None:
         self.nodes[node].alive = False
+
+    def add_node(self, *, speed: float = 1.0) -> int:
+        """Register one fresh node (graceful join): it starts alive with
+        an empty queue and competes for routing immediately — its empty
+        cache means a ~zero centroid/best-match, so traffic shifts to it
+        through the load-balance term first and semantically once
+        archives land.  Returns the new node index."""
+        idx = len(self.nodes)
+        self.nodes.append(NodeInfo(idx, speed=speed))
+        return idx
 
     @property
     def history_hits(self) -> int:

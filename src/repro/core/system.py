@@ -344,6 +344,43 @@ class CacheGenius:
         if self.classifier is not None:
             self.classifier.reassign_failed_node(self.dbs, node, self.clock)
 
+    def join_node(self, *, speed: float = 1.0,
+                  capacity: Optional[int] = None) -> int:
+        """Graceful node JOIN: grow the fleet by one fresh, empty node.
+
+        The new node gets its own ``VectorDB`` (``capacity`` defaults to
+        node 0's), a scheduler slot at ``speed``, and a share of the
+        fleet cache budget (``cache_capacity`` grows by the new node's
+        capacity).  The device-resident ``ClusterIndex`` slabs are
+        fixed-shape ``(2, nodes, capacity, dim)``, so a join re-stacks
+        them once from the fleet's numpy state (ONE upload — the same
+        cost as construction; steady-state incremental updates resume
+        immediately after).  Safe between micro-batches: routing reads
+        the fleet only at batch admission, so callers (e.g. the
+        front-door dispatcher) apply joins at group boundaries.
+
+        Returns the new node's index.  The storage classifier's K-means
+        centroids are left untouched — the joined node earns its
+        semantic identity from the archives routed to it.
+        """
+        if not self.dbs:
+            raise RuntimeError("cannot join a node into an empty fleet")
+        ref = self.dbs[0]
+        cap = int(capacity) if capacity is not None else ref.capacity
+        if cap < 1:
+            raise ValueError(f"capacity must be >= 1, got {cap}")
+        node = len(self.dbs)
+        db = VectorDB(ref.dim, cap, name=f"node{node}",
+                      use_pallas=ref.use_pallas, interpret=ref.interpret)
+        self.dbs.append(db)
+        self.scheduler.add_node(speed=speed)
+        self.cache_capacity += cap
+        if self.cluster_index is not None:
+            for d in self.dbs:
+                d.unregister_cluster(self.cluster_index)
+            self.cluster_index = ClusterIndex.from_dbs(self.dbs)
+        return node
+
     @property
     def total_size(self) -> int:
         return sum(db.size for db in self.dbs)

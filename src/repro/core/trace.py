@@ -25,6 +25,11 @@ three generators build the processes the experiments need:
     boundary wait out a whole burst period).
 
 All three preserve request order and are deterministic in their seed.
+Multi-tenant traffic is built by tagging each process with a
+``tenant``/``tier`` and interleaving them with :func:`merge_arrivals`
+(stable, deterministic tie-break on equal timestamps) — one trace
+generator becomes one client among many at the front door
+(:mod:`repro.frontdoor`).
 """
 from __future__ import annotations
 
@@ -177,24 +182,34 @@ class TimedRequest:
     quality_tier: bool = False
     spec: Optional[SceneSpec] = None
     is_repeat: bool = False
+    # multi-tenant serving tags (None = untagged legacy traffic): which
+    # tenant issued the request and at which SLA tier.  The front-door
+    # gateway and the tagged-percentile stats key on these; every
+    # existing untagged call site is unchanged.
+    tenant: Optional[str] = None
+    tier: Optional[str] = None
 
 
 def _as_timed(reqs: Iterable, times: Sequence[float],
-              seed_base: int = 0) -> List[TimedRequest]:
+              seed_base: int = 0, tenant: Optional[str] = None,
+              tier: Optional[str] = None) -> List[TimedRequest]:
     out: List[TimedRequest] = []
     for i, (r, t) in enumerate(zip(reqs, times)):
         if isinstance(r, TraceRequest):
             out.append(TimedRequest(float(t), r.prompt, seed=seed_base + i,
                                     quality_tier=r.quality_tier,
-                                    spec=r.spec, is_repeat=r.is_repeat))
+                                    spec=r.spec, is_repeat=r.is_repeat,
+                                    tenant=tenant, tier=tier))
         else:
-            out.append(TimedRequest(float(t), str(r), seed=seed_base + i))
+            out.append(TimedRequest(float(t), str(r), seed=seed_base + i,
+                                    tenant=tenant, tier=tier))
     return out
 
 
 def poisson_arrivals(reqs: Iterable, rate: float, *, seed: int = 0,
-                     start: float = 0.0,
-                     seed_base: int = 0) -> List[TimedRequest]:
+                     start: float = 0.0, seed_base: int = 0,
+                     tenant: Optional[str] = None,
+                     tier: Optional[str] = None) -> List[TimedRequest]:
     """Open-loop Poisson arrivals at ``rate`` requests/second.
 
     Inter-arrival gaps are i.i.d. exponential with mean ``1/rate``;
@@ -202,6 +217,8 @@ def poisson_arrivals(reqs: Iterable, rate: float, *, seed: int = 0,
     objects or bare prompt strings.  Generation seeds are assigned as
     ``seed_base + position`` — offset ``seed_base`` when timing a later
     slice of a longer trace so seeds stay distinct across slices.
+    ``tenant``/``tier`` tag every request (one arrival process = one
+    tenant's traffic; interleave tenants with :func:`merge_arrivals`).
     """
     if rate <= 0:
         raise ValueError(f"arrival rate must be > 0, got {rate}")
@@ -209,11 +226,12 @@ def poisson_arrivals(reqs: Iterable, rate: float, *, seed: int = 0,
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(1.0 / rate, size=len(reqs))
     times = start + np.cumsum(gaps)
-    return _as_timed(reqs, times, seed_base)
+    return _as_timed(reqs, times, seed_base, tenant, tier)
 
 
 def trace_arrivals(reqs: Iterable, timestamps: Sequence[float],
-                   *, seed_base: int = 0) -> List[TimedRequest]:
+                   *, seed_base: int = 0, tenant: Optional[str] = None,
+                   tier: Optional[str] = None) -> List[TimedRequest]:
     """Trace-driven arrivals: replay explicit per-request timestamps.
 
     ``timestamps`` must be non-decreasing and as long as ``reqs`` — this is
@@ -226,13 +244,37 @@ def trace_arrivals(reqs: Iterable, timestamps: Sequence[float],
         raise ValueError(f"{len(reqs)} requests but {len(times)} timestamps")
     if any(b < a for a, b in zip(times, times[1:])):
         raise ValueError("timestamps must be non-decreasing")
-    return _as_timed(reqs, times, seed_base)
+    return _as_timed(reqs, times, seed_base, tenant, tier)
+
+
+def merge_arrivals(*processes: Sequence[TimedRequest]) -> List[TimedRequest]:
+    """Interleave per-tenant arrival processes into one timeline.
+
+    The merge is by ``arrival_time`` with a DETERMINISTIC, STABLE
+    tie-break: requests landing at the same instant keep the order of
+    their processes in the argument list, and within one process their
+    original order — so ``merge_arrivals(a, b)`` is reproducible and
+    ``merge_arrivals(a) == list(a)``.  Tags travel with the requests
+    (build each process with its own ``tenant``/``tier``).
+
+    Seed discipline: each process assigns generation seeds as
+    ``seed_base + position``, so give every process a distinct
+    ``seed_base`` (e.g. ``i * len(reqs_i)``) to keep seeds unique in the
+    merged stream.
+    """
+    tagged = [(r.arrival_time, pi, j, r)
+              for pi, proc in enumerate(processes)
+              for j, r in enumerate(proc)]
+    tagged.sort(key=lambda x: (x[0], x[1], x[2]))
+    return [r for _, _, _, r in tagged]
 
 
 def bursty_arrivals(reqs: Iterable, *, burst_size: int, burst_gap: float,
                     within_burst_gap: float = 0.0,
                     start: float = 0.0,
-                    seed_base: int = 0) -> List[TimedRequest]:
+                    seed_base: int = 0,
+                    tenant: Optional[str] = None,
+                    tier: Optional[str] = None) -> List[TimedRequest]:
     """Synchronized bursts: ``burst_size`` requests land together every
     ``burst_gap`` seconds (spaced ``within_burst_gap`` apart inside the
     burst).  This is the fixed-drain worst case: a request that misses a
@@ -248,4 +290,4 @@ def bursty_arrivals(reqs: Iterable, *, burst_size: int, burst_gap: float,
     times = [start + (i // burst_size) * burst_gap
              + (i % burst_size) * within_burst_gap
              for i in range(len(reqs))]
-    return _as_timed(reqs, times, seed_base)
+    return _as_timed(reqs, times, seed_base, tenant, tier)

@@ -1,0 +1,34 @@
+"""Front door: async multi-tenant serving gateway over the engine.
+
+Four pieces (one module each):
+
+* :mod:`repro.frontdoor.queue` — SLA-tier priority queue with per-tenant
+  token-bucket quotas, weighted-fair dequeue, deadline escalation, and
+  typed backpressure rejections;
+* :mod:`repro.frontdoor.dispatcher` — worker-thread bridge admitting the
+  fair-share head of the queue into ``ServingEngine.serve_group`` at
+  every step-group boundary (plus graceful node join/leave);
+* :mod:`repro.frontdoor.results` — pluggable result stores (memory /
+  filesystem) and the completion handles clients poll or await;
+* :mod:`repro.frontdoor.gateway` — the client-facing API tying them
+  together.
+
+``python -m repro.launch.frontdoor`` drives it with N concurrent
+synthetic tenant clients; the ``frontdoor_load`` benchmark measures tier
+isolation, quota enforcement and fairness.
+"""
+from repro.frontdoor.dispatcher import Dispatcher
+from repro.frontdoor.gateway import Gateway
+from repro.frontdoor.queue import (BackpressureError, DEFAULT_TIERS,
+                                   FrontDoorQueue, Job, QuotaExceededError,
+                                   TierSpec, TokenBucket)
+from repro.frontdoor.results import (FileResultStore, GatewayClosedError,
+                                     MemoryResultStore, ResultHandle,
+                                     ResultStore)
+
+__all__ = [
+    "BackpressureError", "DEFAULT_TIERS", "Dispatcher", "FileResultStore",
+    "FrontDoorQueue", "Gateway", "GatewayClosedError", "Job",
+    "MemoryResultStore", "QuotaExceededError", "ResultHandle",
+    "ResultStore", "TierSpec", "TokenBucket",
+]

@@ -21,7 +21,7 @@ from repro.core.latency_model import CostModel, LatencyModel
 from repro.core.lcu import POLICIES
 from repro.core.policy import GenerationPolicy, Route
 from repro.core.system import CacheGenius, GenerationBackend
-from repro.core.trace import RequestTrace, poisson_arrivals
+from repro.core.trace import RequestTrace, merge_arrivals, poisson_arrivals
 from repro.core.vdb import BlobStore
 from repro.core.embeddings import ProxyClipEmbedder
 from repro.core.storage_classifier import StorageClassifier
@@ -146,11 +146,21 @@ def main() -> int:
     ap.add_argument("--arrival-rate", type=float, default=50.0,
                     help="offered load for --continuous, requests/second "
                     "on the virtual serving clock")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="with --continuous: split the trace round-robin "
+                    "across N tagged tenants (tiers cycle premium/"
+                    "standard/batch), merge their Poisson processes "
+                    "deterministically, and print per-tenant/tier "
+                    "queue-delay + wall percentiles")
     args = ap.parse_args()
     if args.max_batch < 1:
         ap.error("--max-batch must be >= 1")
     if args.arrival_rate <= 0:
         ap.error("--arrival-rate must be > 0")
+    if args.tenants < 0:
+        ap.error("--tenants must be >= 0")
+    if args.tenants > 1 and not args.continuous:
+        ap.error("--tenants requires --continuous")
 
     if args.latent_depths is not None:
         latent_depths = tuple(int(d) for d in args.latent_depths.split(","))
@@ -169,7 +179,21 @@ def main() -> int:
     reqs = list(trace.generate(args.requests))
     half = len(reqs) // 2
     if args.continuous:
-        arrivals = poisson_arrivals(reqs, args.arrival_rate, seed=1)
+        if args.tenants > 1:
+            # one client among many: each tenant is its own tagged
+            # Poisson process, interleaved deterministically
+            tier_cycle = ("premium", "standard", "batch")
+            procs, offset = [], 0
+            for ti in range(args.tenants):
+                chunk = reqs[ti::args.tenants]
+                procs.append(poisson_arrivals(
+                    chunk, args.arrival_rate / args.tenants, seed=1 + ti,
+                    seed_base=offset, tenant=f"tenant{ti}",
+                    tier=tier_cycle[ti % len(tier_cycle)]))
+                offset += len(chunk)
+            arrivals = merge_arrivals(*procs)
+        else:
+            arrivals = poisson_arrivals(reqs, args.arrival_rate, seed=1)
         if args.fail_node is not None:
             done = engine.run(arrivals[:half])
             print(f"--- failing node {args.fail_node} ---")
@@ -230,6 +254,15 @@ def main() -> int:
         f"{name} {np.percentile(v, 50) * 1e3:.1f}/"
         f"{np.percentile(v, 95) * 1e3:.1f}ms"
         for name, v in _stage_wall_arrays(done).items()))
+    tagged = engine.tagged_stats()
+    if tagged:
+        print("per-tenant/tier    : (queue-delay, wall p50/p95 ms)")
+        for (tenant, tier), s in tagged.items():
+            print(f"  {tenant or '-'}/{tier or '-':<9} n={s['n']:<4.0f} "
+                  f"qd {s['queue_delay_p50'] * 1e3:.2f}/"
+                  f"{s['queue_delay_p95'] * 1e3:.2f}  "
+                  f"wall {s['wall_p50'] * 1e3:.2f}/"
+                  f"{s['wall_p95'] * 1e3:.2f}")
     return 0
 
 

@@ -376,6 +376,11 @@ class Request:
     seed: int = 0
     quality_tier: bool = False
     submitted_at: float = 0.0   # perf_counter (drain) / virtual clock (run)
+    # multi-tenant tags (None = untagged single-tenant traffic): set by
+    # the front-door gateway and by tagged arrival processes; surfaced in
+    # the per-(tenant, tier) latency percentiles (tenant_tier_stats)
+    tenant: Optional[str] = None
+    tier: Optional[str] = None
 
 
 @dataclass
@@ -415,6 +420,30 @@ class ServingEngine:
         self.queue.append(Request(prompt, seed, quality_tier,
                                   submitted_at=time.perf_counter()))
 
+    def serve_group(self, batch: Sequence[Request]) -> List[Completed]:
+        """Serve ONE micro-batch (one step group) right now, wall-clock.
+
+        This is the group-boundary primitive the front-door dispatcher
+        pumps (``repro.frontdoor.dispatcher``): requests go through one
+        staged-pipeline pass, ``queue_delay`` reports submission →
+        pipeline admission on ``time.perf_counter`` (the clock
+        ``submitted_at`` must be on), and completions are appended to
+        ``self.completed`` in submission order.
+        """
+        if not batch:
+            return []
+        results = self.system.serve_batch(
+            [r.prompt for r in batch],
+            seeds=[r.seed for r in batch],
+            quality_tiers=[r.quality_tier for r in batch],
+            submitted_ats=[r.submitted_at for r in batch])
+        done_at = time.perf_counter()
+        out = [Completed(req, res, queue_delay=res.queue_delay,
+                         finished_at=done_at)
+               for req, res in zip(batch, results)]
+        self.completed.extend(out)
+        return out
+
     def drain(self) -> List[Completed]:
         """Serve the whole queue in FIFO micro-batches of ``max_batch``.
 
@@ -428,16 +457,7 @@ class ServingEngine:
         while self.queue:
             batch, self.queue = (self.queue[: self.max_batch],
                                  self.queue[self.max_batch:])
-            results = self.system.serve_batch(
-                [r.prompt for r in batch],
-                seeds=[r.seed for r in batch],
-                quality_tiers=[r.quality_tier for r in batch],
-                submitted_ats=[r.submitted_at for r in batch])
-            done_at = time.perf_counter()
-            out.extend(Completed(req, res, queue_delay=res.queue_delay,
-                                 finished_at=done_at)
-                       for req, res in zip(batch, results))
-        self.completed.extend(out)
+            out.extend(self.serve_group(batch))
         return out
 
     # -- continuous batching ----------------------------------------------------
@@ -504,7 +524,8 @@ class ServingEngine:
             for r, res in zip(batch, results):
                 res.queue_delay = admitted - r.arrival_time
                 req = Request(r.prompt, r.seed, r.quality_tier,
-                              submitted_at=r.arrival_time)
+                              submitted_at=r.arrival_time,
+                              tenant=r.tenant, tier=r.tier)
                 out.append(Completed(req, res, queue_delay=res.queue_delay,
                                      finished_at=now))
         self.completed.extend(out)
@@ -512,6 +533,58 @@ class ServingEngine:
 
     def fail_node(self, node: int) -> None:
         self.system.fail_node(node)
+
+    def join_node(self, *, speed: float = 1.0,
+                  capacity: Optional[int] = None) -> int:
+        """Grow the fleet by one fresh node (see ``CacheGenius
+        .join_node``); returns the new node index.  Safe between groups —
+        routing only consults the fleet at batch admission."""
+        return self.system.join_node(speed=speed, capacity=capacity)
+
+    def tagged_stats(self) -> Dict[Tuple[Optional[str], Optional[str]],
+                                   Dict[str, float]]:
+        """Per-(tenant, tier) latency percentiles over everything this
+        engine has completed (empty when traffic is untagged) — see
+        :func:`tenant_tier_stats`."""
+        return tenant_tier_stats(self.completed)
+
+
+def tenant_tier_stats(completed: Sequence[Completed],
+                      ) -> Dict[Tuple[Optional[str], Optional[str]],
+                                Dict[str, float]]:
+    """Queue-delay and wall-latency percentiles per (tenant, tier).
+
+    Groups tagged completions (requests whose ``tenant`` or ``tier`` is
+    set) and reports, per group: ``n``, ``queue_delay_p50/p95``,
+    ``wall_p50/p95`` (per-request measured pipeline wall ``wall_total``,
+    falling back to the batch-amortised ``wall_latency`` when a caller
+    built results without stage timestamps) and ``e2e_p50/p95``
+    (queue delay + wall).  Untagged completions are skipped; fully
+    untagged traffic returns ``{}``, which is the "don't print the
+    table" signal the serve CLI keys on.
+    """
+    groups: Dict[Tuple[Optional[str], Optional[str]], List[Completed]] = {}
+    for c in completed:
+        if c.request.tenant is None and c.request.tier is None:
+            continue
+        groups.setdefault((c.request.tenant, c.request.tier), []).append(c)
+    out: Dict[Tuple[Optional[str], Optional[str]], Dict[str, float]] = {}
+    for key in sorted(groups, key=lambda k: (str(k[0]), str(k[1]))):
+        cs = groups[key]
+        qd = np.array([c.queue_delay for c in cs])
+        wall = np.array([c.result.wall_total if c.result.wall_total > 0
+                         else c.result.wall_latency for c in cs])
+        e2e = qd + wall
+        out[key] = {
+            "n": len(cs),
+            "queue_delay_p50": float(np.percentile(qd, 50)),
+            "queue_delay_p95": float(np.percentile(qd, 95)),
+            "wall_p50": float(np.percentile(wall, 50)),
+            "wall_p95": float(np.percentile(wall, 95)),
+            "e2e_p50": float(np.percentile(e2e, 50)),
+            "e2e_p95": float(np.percentile(e2e, 95)),
+        }
+    return out
 
 
 # ---------------------------------------------------------------------------

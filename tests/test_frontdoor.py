@@ -1,0 +1,480 @@
+"""Front-door gateway: fairness/quota/escalation properties on the
+deterministic queue core, result-store roundtrips, graceful node
+leave/join with zero accepted-job loss, and bitwise parity between the
+gateway path and a direct ``ServingEngine.run`` over the merged trace.
+
+The queue takes an explicit ``now`` everywhere, so the property tests
+replay admission and dequeue policy on a synthetic clock with no threads
+and no sleeps; only the integration tests at the bottom spin up the real
+worker-thread dispatcher against a real CacheGenius fleet.
+"""
+from __future__ import annotations
+
+import asyncio
+import math
+
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # offline container: seeded-random shim
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro.core.trace import (RequestTrace, bursty_arrivals, merge_arrivals,
+                              poisson_arrivals, trace_arrivals)
+from repro.data.synthetic import all_specs, caption_of
+from repro.frontdoor import (BackpressureError, DEFAULT_TIERS, Dispatcher,
+                             FileResultStore, FrontDoorQueue, Gateway,
+                             GatewayClosedError, Job, MemoryResultStore,
+                             QuotaExceededError, ResultHandle, TierSpec,
+                             TokenBucket)
+from repro.launch.frontdoor import jain_fairness
+from repro.launch.serve import build_system
+from repro.runtime.serving import (Request, ServingEngine,
+                                   tenant_tier_stats)
+
+
+def _q(**kw) -> FrontDoorQueue:
+    return FrontDoorQueue(**kw)
+
+
+def _job(tenant="t0", tier="standard", prompt="p", seed=0, **kw) -> Job:
+    return Job(tenant=tenant, tier=tier, prompt=prompt, seed=seed, **kw)
+
+
+# ---------------------------------------------------------------------------
+# tiers, escalation, typed rejections (unit)
+# ---------------------------------------------------------------------------
+
+
+def test_tier_priority_and_mixed_batches():
+    q = _q()
+    q.submit(_job(tier="batch", prompt="b"), now=0.0)
+    q.submit(_job(tier="standard", prompt="s"), now=0.0)
+    q.submit(_job(tier="premium", prompt="p"), now=0.0)
+    got = q.next_batch(3, now=0.0)
+    # strict priority order, and one batch may mix tiers
+    assert [j.tier for j in got] == ["premium", "standard", "batch"]
+    assert len(q) == 0
+
+
+def test_deadline_escalation_promotes_overdue():
+    q = _q()  # DEFAULT_TIERS: batch escalates after 30s, standard after 4s
+    q.submit(_job(tier="batch", prompt="old"), now=0.0)
+    q.submit(_job(tier="batch", prompt="young"), now=25.0)
+    q.submit(_job(tier="standard", prompt="mid"), now=29.0)
+    got = q.next_batch(3, now=31.0)
+    # the 31s-old batch job escalated: it joins the TAIL of standard (so
+    # behind "mid", which was already there) but now outranks every
+    # batch-tier job
+    assert [j.prompt for j in got] == ["mid", "old", "young"]
+    assert got[1].effective_tier == "standard" and got[1].escalations == 1
+    assert got[1].tier == "batch"            # original tier preserved
+    assert q.stats.escalations == 1
+    # premium (level 0) can never escalate; math.inf disables it
+    assert not math.isfinite(DEFAULT_TIERS[0].escalation_wait)
+
+
+def test_escalation_can_cascade_to_premium():
+    q = _q()
+    q.submit(_job(tier="batch"), now=0.0)
+    q.next_batch(0, now=100.0)    # two escalation passes, no dequeue
+    q.next_batch(0, now=200.0)
+    [j] = q.next_batch(1, now=200.0)
+    assert j.effective_tier == "premium" and j.escalations == 2
+
+
+def test_typed_backpressure_and_quota_errors():
+    q = _q(max_depth=2, quotas={"t0": TokenBucket(rate=1.0, burst=2)})
+    q.submit(_job(), now=0.0)
+    q.submit(_job(), now=0.0)
+    # depth bound first: the queue is full regardless of tenant
+    with pytest.raises(BackpressureError) as ei:
+        q.submit(_job(tenant="other"), now=0.0)
+    assert not isinstance(ei.value, QuotaExceededError)
+    assert ei.value.depth == 2 and ei.value.bound == 2
+    assert ei.value.tenant == "other"
+    # drain, then exhaust t0's bucket: burst=2 already spent at now=0
+    q.next_batch(2, now=0.0)
+    with pytest.raises(QuotaExceededError) as ei:
+        q.submit(_job(), now=0.0)
+    assert ei.value.retry_after == pytest.approx(1.0)
+    assert isinstance(ei.value, BackpressureError)   # subtype relation
+    # after one refill interval the tenant is admitted again
+    q.submit(_job(), now=1.0)
+    with pytest.raises(ValueError):
+        q.submit(_job(tier="nope"), now=0.0)
+    s = q.stats
+    assert (s.accepted, s.rejected_backpressure, s.rejected_quota) \
+        == (3, 1, 1)
+    assert s.rejected_by_tenant == {"other": 1, "t0": 1}
+
+
+def test_tier_validation():
+    with pytest.raises(ValueError):
+        FrontDoorQueue(tiers=(TierSpec("a", 0, 1.0), TierSpec("b", 2, 1.0)))
+    with pytest.raises(ValueError):
+        FrontDoorQueue(max_depth=0)
+    with pytest.raises(ValueError):
+        TokenBucket(rate=0.0, burst=1.0)
+
+
+# ---------------------------------------------------------------------------
+# property (a): no tenant starves under overload
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(hogs=st.integers(1, 4), flood=st.integers(20, 80),
+       batch=st.sampled_from([1, 4, 8]))
+def test_quiet_tenant_never_starves(hogs, flood, batch):
+    """A tenant with one queued job is served within its first fair-share
+    turn no matter how many jobs the flooding tenants piled up first."""
+    q = _q(max_depth=10_000)
+    for h in range(hogs):
+        for i in range(flood):
+            q.submit(_job(tenant=f"hog{h}", prompt=f"h{h}.{i}"), now=0.0)
+    q.submit(_job(tenant="quiet", prompt="q0"), now=1.0)
+    served = []
+    while len(q):
+        served.extend(j.tenant for j in q.next_batch(batch, now=2.0))
+    # fair share: the quiet tenant's job lands in the first round-robin
+    # turn across tenants, not behind `hogs * flood` flooded jobs
+    assert "quiet" in served[:hogs + 1]
+    assert len(served) == hogs * flood + 1       # nothing lost, no dups
+
+
+@settings(max_examples=6, deadline=None)
+@given(wq=st.sampled_from([1.0, 2.0, 4.0]))
+def test_weighted_fair_share_ratio(wq):
+    """With weights (wq, 1) and saturated backlogs, the share of dequeues
+    the weighted tenant wins tracks wq/(wq+1)."""
+    q = _q(max_depth=10_000, tenant_weights={"a": wq, "b": 1.0})
+    for i in range(400):
+        q.submit(_job(tenant="a", prompt=f"a{i}"), now=0.0)
+        q.submit(_job(tenant="b", prompt=f"b{i}"), now=0.0)
+    first = [j.tenant for j in q.next_batch(200, now=0.0)]
+    share = first.count("a") / len(first)
+    assert abs(share - wq / (wq + 1.0)) < 0.05
+    # fairness over full service is perfect once both backlogs drain
+    while len(q):
+        q.next_batch(64, now=0.0)
+    assert q.stats.dispatched == 800
+
+
+def test_fifo_mode_ignores_fair_share():
+    q = _q(fair=False)
+    q.submit(_job(tenant="a", prompt="a0"), now=0.0)
+    q.submit(_job(tenant="a", prompt="a1"), now=1.0)
+    q.submit(_job(tenant="b", prompt="b0"), now=0.5)
+    assert [j.prompt for j in q.next_batch(3, now=2.0)] \
+        == ["a0", "b0", "a1"]
+
+
+# ---------------------------------------------------------------------------
+# property (b): token-bucket quotas enforced within one refill window
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(rate=st.sampled_from([1.0, 5.0, 20.0]),
+       burst=st.sampled_from([1, 3, 10]),
+       attempts_per_s=st.sampled_from([10, 50, 200]))
+def test_quota_enforced_within_refill_window(rate, burst, attempts_per_s):
+    """Over any window [0, W] the accepted count never exceeds
+    ``burst + rate * W`` (the token-bucket invariant), and the bucket
+    admits again within one refill interval of a rejection."""
+    q = _q(max_depth=100_000,
+           quotas={"t0": TokenBucket(rate=rate, burst=float(burst))})
+    window = 2.0
+    accepted_times = []
+    n = int(window * attempts_per_s)
+    for i in range(n):
+        now = i / attempts_per_s
+        try:
+            q.submit(_job(), now=now)
+            accepted_times.append(now)
+        except QuotaExceededError as e:
+            assert e.retry_after <= 1.0 / rate + 1e-9
+    for w_end in (0.25, 0.5, 1.0, 2.0):
+        in_window = sum(1 for t in accepted_times if t <= w_end)
+        assert in_window <= burst + rate * w_end + 1e-9
+    # the bucket is a rate limit, not a ban: something was accepted, and
+    # if the offered rate exceeds the quota something was rejected too
+    assert accepted_times
+    if attempts_per_s > rate * 2 and n > burst:
+        assert q.stats.rejected_quota > 0
+
+
+def test_quota_is_per_tenant():
+    q = _q(quotas={"metered": TokenBucket(rate=1.0, burst=1)})
+    q.submit(_job(tenant="metered"), now=0.0)
+    with pytest.raises(QuotaExceededError):
+        q.submit(_job(tenant="metered"), now=0.0)
+    for _ in range(5):          # unmetered tenants are unaffected
+        q.submit(_job(tenant="free"), now=0.0)
+
+
+# ---------------------------------------------------------------------------
+# merge_arrivals (satellite)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 30), seed=st.integers(0, 20),
+       rate=st.sampled_from([5.0, 50.0]))
+def test_merge_arrivals_properties(n, seed, rate):
+    reqs = list(RequestTrace(seed=seed).generate(n))
+    a = poisson_arrivals(reqs, rate, seed=seed, tenant="a", tier="premium")
+    b = bursty_arrivals(reqs, burst_size=4, burst_gap=0.2, seed_base=n,
+                        tenant="b", tier="batch")
+    m = merge_arrivals(a, b)
+    assert len(m) == 2 * n
+    times = [r.arrival_time for r in m]
+    assert times == sorted(times)                         # merged timeline
+    assert merge_arrivals(a, b) == m                      # deterministic
+    assert merge_arrivals(a) == list(a)                   # identity
+    # per-tenant order is preserved and tags travel with the requests
+    assert [r.seed for r in m if r.tenant == "a"] == [r.seed for r in a]
+    assert [r.seed for r in m if r.tenant == "b"] == [r.seed for r in b]
+    assert {r.tier for r in m} == {"premium", "batch"}
+    # distinct seed_bases keep generation seeds unique across the merge
+    assert len({(r.tenant, r.seed) for r in m}) == 2 * n
+
+
+def test_merge_arrivals_stable_tie_break():
+    reqs = ["p0", "p1"]
+    a = trace_arrivals(reqs, [0.0, 1.0], tenant="a")
+    b = trace_arrivals(reqs, [0.0, 1.0], tenant="b", seed_base=2)
+    m = merge_arrivals(a, b)
+    # equal timestamps: argument order wins, then within-process order
+    assert [(r.tenant, r.seed) for r in m] \
+        == [("a", 0), ("b", 2), ("a", 1), ("b", 3)]
+    assert merge_arrivals(b, a)[0].tenant == "b"
+
+
+# ---------------------------------------------------------------------------
+# result stores + handles (satellite)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["memory", "file"])
+def test_result_store_roundtrip(kind, tmp_path):
+    store = MemoryResultStore() if kind == "memory" \
+        else FileResultStore(str(tmp_path))
+    img = np.arange(12, dtype=np.float32).reshape(2, 2, 3)
+    ref = store.put(7, img, {"tenant": "t0", "tier": "premium"})
+    assert len(store) == 1
+    assert np.array_equal(store.get(ref), img)
+    assert store.meta(ref)["tier"] == "premium"
+    ref2 = store.put(8, img * 2)                  # no metadata
+    assert store.meta(ref2) == {}
+    assert np.array_equal(store.get(ref2), img * 2)
+    if kind == "file":
+        assert ref.endswith("7.npy")              # survives the process
+    else:
+        assert ref == "mem:7"
+
+
+def test_result_handle_sync_async_and_failure():
+    store = MemoryResultStore()
+    h = ResultHandle(1, store)
+    assert not h.done() and h.ref is None
+    ref = store.put(1, np.zeros((2, 2, 3), np.float32), {"k": "v"})
+    h._resolve(ref, {"k": "v"})
+    assert h.done() and h.wait(0.1) == ref and h.meta == {"k": "v"}
+    assert h.image().shape == (2, 2, 3)
+    assert asyncio.run(h.wait_async()) == ref     # stdlib asyncio bridge
+    h2 = ResultHandle(2, store)
+    h2._fail(GatewayClosedError("closed"))
+    with pytest.raises(GatewayClosedError):
+        h2.wait(0.1)
+
+
+def test_jain_fairness_index():
+    assert jain_fairness([5, 5, 5, 5]) == pytest.approx(1.0)
+    assert jain_fairness([10, 0, 0, 0]) == pytest.approx(0.25)
+    assert jain_fairness([]) == 1.0 and jain_fairness([0, 0]) == 1.0
+
+
+def test_tenant_tier_stats_keys_and_untagged():
+    assert tenant_tier_stats([]) == {}
+
+
+# ---------------------------------------------------------------------------
+# integration: real dispatcher + real fleet
+# ---------------------------------------------------------------------------
+
+
+def _system(n_nodes=2):
+    system, _, _, _ = build_system(n_nodes=n_nodes, corpus_n=60,
+                                   capacity_per_node=80, seed=0)
+    return system
+
+
+# distinct scene captions (arbitrary free text all collapses onto one
+# history-cache key under the proxy embedder, which would short-circuit
+# routing entirely)
+_PROMPTS = [caption_of(s) for s in all_specs()]
+
+
+def _submit_wave(gw, n, *, tenant="t0", tier="standard", base_seed=0):
+    return [gw.submit(_PROMPTS[(base_seed + i) % len(_PROMPTS)],
+                      tenant=tenant, tier=tier, seed=base_seed + i)
+            for i in range(n)]
+
+
+def test_node_leave_mid_run_zero_accepted_job_loss():
+    """Property (c): draining a node between waves loses nothing — every
+    accepted handle resolves, and post-leave work routes to survivors."""
+    system = _system(n_nodes=3)
+    gw = Gateway(ServingEngine(system, max_batch=4))
+    with gw:
+        first = _submit_wave(gw, 8)
+        for h in first:
+            h.wait(timeout=120)
+        gw.leave_node(1)
+        second = _submit_wave(gw, 12, base_seed=100)
+        for h in second:
+            h.wait(timeout=120)
+    st = gw.stats()
+    assert st["accepted"] == st["jobs_served"] == 20   # zero loss
+    assert all(h.done() for h in first + second)
+    # everything admitted after the boundary rerouted off node 1
+    # (node -1 = cache-hit fast path, which touches no node at all)
+    assert all(h.meta["node"] != 1 for h in second)
+    assert {h.meta["node"] for h in second} <= {0, 2, -1}
+    assert any(h.meta["node"] in (0, 2) for h in second)
+    assert all(h.image() is not None for h in second)
+
+
+def test_node_join_mid_run_grows_fleet_and_routes():
+    system = _system(n_nodes=2)
+    engine = ServingEngine(system, max_batch=4)
+    gw = Gateway(engine)
+    with gw:
+        first = _submit_wave(gw, 4)
+        for h in first:
+            h.wait(timeout=120)
+        gw.join_node(speed=50.0)     # much faster than the incumbents
+        second = _submit_wave(gw, 8, tenant="t1", base_seed=100)
+        for h in second:
+            h.wait(timeout=120)
+    assert len(system.dbs) == 3
+    assert system.scheduler.nodes[2].speed == 50.0
+    assert system.cluster_index.n_nodes == 3           # index rebuilt
+    st = gw.stats()
+    assert st["accepted"] == st["jobs_served"] == 12   # zero loss
+
+
+def test_engine_join_node_direct():
+    system = _system(n_nodes=2)
+    engine = ServingEngine(system, max_batch=4)
+    cap_before = system.cache_capacity
+    idx = engine.join_node(speed=50.0)
+    assert idx == 2 and len(system.dbs) == 3
+    assert system.cache_capacity == cap_before + system.dbs[0].capacity
+    # the joiner serves work: a quality-tier repeat whose history entry
+    # was evicted (cache maintenance removes image files synchronously)
+    # pins to the fastest alive node via the priority fast path — now
+    # the joiner
+    engine.serve_group([Request(_PROMPTS[7], 0, quality_tier=True)])
+    sched = system.scheduler
+    sched.invalidate_payloads(list(sched._hist_payloads))
+    [done] = engine.serve_group([Request(_PROMPTS[7], 1,
+                                         quality_tier=True)])
+    assert done.result.fast_path == "priority"
+    assert done.result.node == 2
+    # a join clones node 0's VDB config; an empty fleet has none to clone
+    system.dbs.clear()
+    with pytest.raises(RuntimeError):
+        system.join_node()
+
+
+def test_gateway_backpressure_and_no_drain_close():
+    system = _system(n_nodes=2)
+    gw = Gateway(ServingEngine(system, max_batch=4), max_depth=3)
+    # not started: jobs queue up, fourth submit hits the depth bound
+    handles = _submit_wave(gw, 3)
+    with pytest.raises(BackpressureError):
+        gw.submit("overflow", tenant="t0")
+    # close without drain fails still-queued handles typed
+    gw.start()
+    gw.close(drain=False)
+    for h in handles:
+        if not h.done():
+            continue
+    failed = 0
+    for h in handles:
+        try:
+            h.wait(timeout=5)
+        except GatewayClosedError:
+            failed += 1
+    assert failed + gw.stats()["jobs_served"] == 3
+
+
+def test_gateway_parity_with_direct_run():
+    """Property (d): the gateway path (queue -> dispatcher -> serve_group
+    -> result store) returns bitwise the images a direct
+    ``ServingEngine.run`` produces over the same merged trace.
+
+    Uses a verified parity trace seed (see test_serving_continuous) so
+    batch partitioning cannot change results, and FIFO dequeue so group
+    order matches submission order.
+    """
+    n, tseed = 16, 3
+    reqs = list(RequestTrace(seed=tseed).generate(n))
+    zeros = [0.0] * (n // 2)
+    merged = merge_arrivals(
+        trace_arrivals(reqs[:n // 2], zeros, tenant="a", tier="standard"),
+        trace_arrivals(reqs[n // 2:], zeros, tenant="b", tier="standard",
+                       seed_base=n // 2))
+
+    direct = ServingEngine(_system(), max_batch=4)
+    direct_done = direct.run(merged)
+    assert len(direct_done) == n
+
+    gw = Gateway(ServingEngine(_system(), max_batch=4), fair=False)
+    handles = [gw.submit(r.prompt, tenant=r.tenant, tier=r.tier,
+                         seed=r.seed, quality_tier=r.quality_tier)
+               for r in merged]                     # queued before start
+    with gw:
+        for h in handles:
+            h.wait(timeout=240)
+
+    for h, comp in zip(handles, direct_done):
+        assert np.array_equal(h.image(), comp.result.image), \
+            f"gateway image diverged for job {h.job_id}"
+        assert h.meta["route"] == (comp.result.fast_path
+                                   or comp.result.route.value)
+        assert h.meta["node"] == comp.result.node
+    # both paths carry the tenant/tier tags into the same stats keys
+    for eng in (direct, gw.engine):
+        tagged = tenant_tier_stats(eng.completed)
+        assert set(tagged) == {("a", "standard"), ("b", "standard")}
+        assert all(s["n"] == n // 2 for s in tagged.values())
+
+
+def test_premium_tier_maps_to_priority_fast_path():
+    """The dispatcher derives ``quality_tier`` from the tier (premium =
+    level 0 ⇒ True), so a premium repeat whose history entry was evicted
+    rides the scheduler's priority pin path."""
+    system = _system(n_nodes=2)
+    gw = Gateway(ServingEngine(system, max_batch=2))
+    with gw:
+        gw.submit(_PROMPTS[3], tenant="t0", tier="premium",
+                  seed=0).wait(timeout=120)
+        # cache maintenance dropped the archived image (worker is idle
+        # here, so poking the scheduler between groups is race-free)
+        sched = system.scheduler
+        sched.invalidate_payloads(list(sched._hist_payloads))
+        repeat = gw.submit(_PROMPTS[3], tenant="t0", tier="premium",
+                           seed=1)
+        # a standard-tier job is NOT quality traffic: same repeat, no pin
+        plain = gw.submit(_PROMPTS[3], tenant="t0", tier="standard",
+                          seed=2)
+        repeat.wait(timeout=120)
+        plain.wait(timeout=120)
+    assert repeat.meta["route"] == "priority"
+    assert plain.meta["route"] != "priority"
