@@ -70,6 +70,12 @@ HIT_RATES: Tuple[float, ...] = (0.2, 0.5, 0.8)
 TENANT_COUNTS: Tuple[int, ...] = (3,)
 TIER_NAMES: Tuple[str, ...] = ("premium", "standard", "batch")
 
+# Step-level continuous-batching axis for serving_latency_curve: the
+# bursty step-level arm (and its step_beats_cont_bursty gate) always
+# runs; flipping this on (`benchmarks.run --step-level`) extends the
+# step-level arm to the whole per-rate Poisson sweep.
+STEP_LEVEL: bool = False
+
 
 def _vae_cfg():
     return vae_mod.VAEConfig(in_ch=3, base_ch=16, ch_mult=(1, 2), z_ch=4,
@@ -557,7 +563,12 @@ def run_serving_latency_curve(stack: TrainedStack, *, n_requests: int = 96,
     time); service advances the same clock by measured wall time, so the
     curve composes simulated load with real CPU compute.  A bursty trace
     (bursts wider than ``max_batch``, idle gaps between them) is appended
-    as the fixed-drain worst case.
+    as the fixed-drain worst case, and a step-level arm (ragged slot
+    admission, ``ServingEngine.run(step_level=True)``) runs on the same
+    bursty trace — the ISSUE-8 yardstick ``step_beats_cont_bursty``
+    (its p95 queue delay strictly below group-level continuous at equal
+    throughput).  ``STEP_LEVEL`` (the ``--step-level`` CLI axis) extends
+    the step-level arm to the whole per-rate Poisson sweep.
     """
     from repro.core.trace import RequestTrace, bursty_arrivals, poisson_arrivals
     from repro.launch.serve import build_system
@@ -568,7 +579,7 @@ def run_serving_latency_curve(stack: TrainedStack, *, n_requests: int = 96,
     reqs = list(RequestTrace(seed=3).generate(n_requests))
     dbe = stack.backend(tiny=True)
 
-    def run_mode(arrivals, mode):
+    def run_mode(arrivals, mode, *, step_level=False):
         policy = GenerationPolicy(steps_full=steps_full, steps_ref=steps_ref)
         system, _, _, _ = build_system(
             n_nodes=2, corpus_n=150, capacity_per_node=150, policy=policy,
@@ -576,32 +587,49 @@ def run_serving_latency_curve(stack: TrainedStack, *, n_requests: int = 96,
         _precompile_serving_buckets(dbe, system, max_batch=max_batch,
                                     steps_full=steps_full,
                                     steps_ref=steps_ref)
+        if step_level:
+            dbe.precompile_step_level(max_batch)
         engine = ServingEngine(system, max_batch=max_batch)
-        done = engine.run(arrivals, mode=mode)
+        done = engine.run(arrivals, mode=mode, step_level=step_level)
         assert len(done) == len(arrivals)
         qd = np.array([c.queue_delay for c in done])
         makespan = max(c.finished_at for c in done)
-        return {"qd_p50": float(np.percentile(qd, 50)),
-                "qd_p95": float(np.percentile(qd, 95)),
-                "rps": len(done) / makespan}
+        r = {"qd_p50": float(np.percentile(qd, 50)),
+             "qd_p95": float(np.percentile(qd, 95)),
+             "rps": len(done) / makespan}
+        if step_level:
+            occ = np.array(engine.slot_occupancy or [0])
+            r["occ_p50"] = float(np.percentile(occ, 50))
+            r["occ_p95"] = float(np.percentile(occ, 95))
+        return r
 
-    out: Dict = {"n_requests": n_requests, "max_batch": max_batch}
+    arms = [("continuous", "cont", False), ("drain", "drain", False)]
+    if STEP_LEVEL:
+        arms.append(("continuous", "step", True))
+    out: Dict = {"n_requests": n_requests, "max_batch": max_batch,
+                 "step_level_axis": bool(STEP_LEVEL)}
     for rate in rates:
         arrivals = poisson_arrivals(reqs, rate, seed=5)
-        for mode, tag in (("continuous", "cont"), ("drain", "drain")):
-            r = run_mode(arrivals, mode)
+        for mode, tag, sl in arms:
+            r = run_mode(arrivals, mode, step_level=sl)
             for k, v in r.items():
                 out[f"{k}_{tag}_rate{rate:g}"] = v
     bursty = bursty_arrivals(reqs, burst_size=max_batch + max_batch // 2,
                              burst_gap=2.0)
     cont = run_mode(bursty, "continuous")
     drain = run_mode(bursty, "drain")
+    step = run_mode(bursty, "continuous", step_level=True)
     for k, v in cont.items():
         out[f"{k}_cont_bursty"] = v
     for k, v in drain.items():
         out[f"{k}_drain_bursty"] = v
+    for k, v in step.items():
+        out[f"{k}_step_bursty"] = v
     out["bursty_p95_speedup"] = drain["qd_p95"] / max(cont["qd_p95"], 1e-9)
     out["cont_beats_drain_bursty"] = bool(cont["qd_p95"] < drain["qd_p95"])
+    out["bursty_p95_speedup_step_vs_cont"] = (
+        cont["qd_p95"] / max(step["qd_p95"], 1e-9))
+    out["step_beats_cont_bursty"] = bool(step["qd_p95"] < cont["qd_p95"])
     return out
 
 

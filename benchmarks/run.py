@@ -111,6 +111,11 @@ def main() -> int:
                     help="comma-separated SLA tiers cycled across the "
                          "frontdoor_load paced tenants "
                          "(default: premium,standard,batch)")
+    ap.add_argument("--step-level", action="store_true",
+                    help="extend serving_latency_curve's step-level "
+                         "continuous-batching arm (ragged slot admission) "
+                         "to the whole per-rate Poisson sweep; the bursty "
+                         "step-level arm always runs")
     args = ap.parse_args()
 
     from benchmarks.paper_figures import ALL_BENCHMARKS, STACK_FREE
@@ -130,6 +135,8 @@ def main() -> int:
         C.TENANT_COUNTS = args.tenants
     if args.tiers:
         C.TIER_NAMES = args.tiers
+    if args.step_level:
+        C.STEP_LEVEL = True
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     t0 = time.time()

@@ -262,6 +262,14 @@ class BatchContext:
     states: List[RequestState]
     t_wall0: float
     pvecs: Optional[np.ndarray] = None   # (B, 512) stacked text embeddings
+    # step-level admission: (qvec, handle) of every earlier gen-plan
+    # request that is still in flight or awaiting finalize — requests a
+    # sequential loop would already have archived.  The Plan stage seeds
+    # its coalescing set with these, encoding the out-of-batch handle as
+    # a NEGATIVE alias target (-(handle + 1)); the step-level driver
+    # resolves those aliases when the target's image lands.  None (the
+    # group-mode default) leaves Plan's behaviour untouched.
+    inflight: Optional[List[Tuple[np.ndarray, int]]] = None
 
 
 # ---------------------------------------------------------------------------
@@ -484,6 +492,13 @@ class PlanStage:
         system = ctx.system
         pending_vecs: List[np.ndarray] = []
         pending_req: List[int] = []
+        if ctx.inflight:
+            # step-level admission: earlier unfinalized gen requests join
+            # the coalescing set first (they precede this batch in
+            # submission order), with negative-encoded handles as targets
+            for qv, handle in ctx.inflight:
+                pending_vecs.append(qv)
+                pending_req.append(-(int(handle) + 1))
         for s in ctx.states:
             d = s.decision
             pend_sim, pend_j = -np.inf, -1
@@ -865,3 +880,97 @@ class ServePipeline:
             if s.submitted_at is not None:
                 s.result.queue_delay = s.admitted_at - s.submitted_at
         return states
+
+    # -- step-level split: admit now, generate over many boundaries, -----------
+    #    finalize per slot in submission order
+
+    def _stage_index(self, name: str) -> int:
+        for i, st in enumerate(self.stages):
+            if st.name == name:
+                return i
+        raise ValueError(
+            f"stage {name!r} not in pipeline {self.stage_names} — the "
+            "step-level split needs the default Generate/Archive/Finish "
+            "stage shape")
+
+    def run_admission(self, system, prompts: Sequence[str], *,
+                      seeds: Optional[Sequence[int]] = None,
+                      quality_tiers: Optional[Sequence[bool]] = None,
+                      submitted_ats: Optional[Sequence[float]] = None,
+                      inflight: Optional[List[Tuple[np.ndarray, int]]] = None,
+                      ) -> List[RequestState]:
+        """Run every stage BEFORE Generate (Embed..Plan) for a fresh
+        admission group and return the planned states.
+
+        This is the front half of :meth:`run` for the step-level serving
+        engine: each state leaves with its ``plan`` set (clock ticked,
+        Embed..Plan timestamps stamped) but no image/result — generation
+        happens over many step boundaries in the caller's slot engine, and
+        Archive/Finish land per slot via :meth:`finalize`.  ``inflight``
+        seeds the Plan stage's coalescing set with earlier unfinalized gen
+        requests (see :class:`BatchContext`)."""
+        n = len(prompts)
+        if n == 0:
+            return []
+        gen_i = self._stage_index("Generate")
+        t0 = time.perf_counter()
+        seeds = list(seeds) if seeds is not None else [0] * n
+        tiers = (list(quality_tiers) if quality_tiers is not None
+                 else [False] * n)
+        subs = (list(submitted_ats) if submitted_ats is not None
+                else [None] * n)
+        states = [RequestState(index=i, raw_prompt=str(p), prompt=str(p),
+                               seed=seeds[i], quality_tier=tiers[i],
+                               clock=system.clock + i + 1,
+                               submitted_at=subs[i], admitted_at=t0)
+                  for i, p in enumerate(prompts)]
+        system.clock += n
+        ctx = BatchContext(system=system, states=states, t_wall0=t0,
+                           inflight=inflight)
+        for stage in self.stages[:gen_i]:
+            stage.run(ctx)
+            ts = time.perf_counter()
+            for s in states:
+                s.stage_ts[stage.name] = ts
+        return states
+
+    def finalize(self, system, state: RequestState) -> RequestState:
+        """Run Archive + Finish for ONE retired request (the back half of
+        the step-level split) and back-fill its per-request timing.
+
+        The caller must have set ``state.image`` for gen plans (the slot
+        engine's decode) and resolved negative alias targets into
+        ``history`` plans.  A singleton batch has no interior maintenance
+        boundary, so the Archive stage lands the blob/VDB insert eagerly
+        and the Finish stage sweeps at the exact request-count crossing —
+        calling this in submission order reproduces the sequential loop's
+        (archive, sweep) sequence exactly.
+
+        Timing is stamped PER SLOT, never per group: Embed..Plan carry the
+        admission-time stamps, Generate the retirement stamp (filled at
+        finalize start if the driver didn't reach it — cached/history/alias
+        plans), Archive/Finish land here, and ``stage_walls`` /
+        ``wall_total`` / ``queue_delay`` are derived from this slot's own
+        trail — retirement order never smears one slot's walls onto
+        another's."""
+        arch_i = self._stage_index("Archive")
+        t0 = time.perf_counter()
+        for name in self.stage_names[:arch_i]:
+            state.stage_ts.setdefault(name, t0)
+        ctx = BatchContext(system=system, states=[state], t_wall0=t0)
+        for stage in self.stages[arch_i:]:
+            stage.run(ctx)
+            ts = time.perf_counter()
+            state.stage_ts[stage.name] = ts
+        if state.result is not None:
+            prev = state.admitted_at
+            walls: Dict[str, float] = {}
+            for name in self.stage_names:
+                walls[name] = state.stage_ts[name] - prev
+                prev = state.stage_ts[name]
+            state.result.stage_walls = walls
+            state.result.wall_total = (state.stage_ts[self.stages[-1].name]
+                                       - state.admitted_at)
+            if state.submitted_at is not None:
+                state.result.queue_delay = state.admitted_at - state.submitted_at
+        return state

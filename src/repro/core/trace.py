@@ -161,6 +161,41 @@ def band_mutation_trace(n: int, *, band_fraction: float = 0.5,
     return out
 
 
+def mixed_hit_trace(n: int, *, band_fraction: float = 0.35,
+                    repeat_fraction: float = 0.25,
+                    seed: int = 0) -> List[TraceRequest]:
+    """Hit-rate-mix workload: every route class in one stream.
+
+    Extends :func:`band_mutation_trace` with VERBATIM repeats of earlier
+    requests, so a single trace exercises txt2img misses (novel bases),
+    img2img band hits and latent-depth resumes (mutations), AND
+    HIT_RETURN / history fast paths (repeats) — the full step-count
+    spread the step-level serving engine's ragged admission has to
+    interleave (its property suite draws hit mixes from here).  Each
+    request is a repeat with probability ``repeat_fraction``, else a
+    mutation with probability ``band_fraction``, else a fresh base.
+    Deterministic in ``seed``; repeats are tagged ``is_repeat``.
+    """
+    if not 0.0 <= repeat_fraction <= 1.0:
+        raise ValueError(f"repeat_fraction must be in [0, 1], "
+                         f"got {repeat_fraction}")
+    if not 0.0 <= band_fraction <= 1.0:
+        raise ValueError(f"band_fraction must be in [0, 1], "
+                         f"got {band_fraction}")
+    rng = np.random.default_rng(seed + 7)
+    body = band_mutation_trace(n, band_fraction=band_fraction, seed=seed)
+    out: List[TraceRequest] = []
+    for req in body:
+        if out and rng.random() < repeat_fraction:
+            prev = out[int(rng.integers(len(out)))]
+            out.append(TraceRequest(prev.prompt, prev.spec,
+                                    quality_tier=prev.quality_tier,
+                                    is_repeat=True))
+        else:
+            out.append(req)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # arrival processes (timestamped traffic for the continuous-batching engine)
 # ---------------------------------------------------------------------------

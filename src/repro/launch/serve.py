@@ -146,6 +146,15 @@ def main() -> int:
     ap.add_argument("--arrival-rate", type=float, default=50.0,
                     help="offered load for --continuous, requests/second "
                     "on the virtual serving clock")
+    ap.add_argument("--step-level", action="store_true",
+                    help="with --continuous: step-level continuous "
+                    "batching — a persistent slot engine admits arrivals "
+                    "at ANY denoising-step boundary instead of waiting "
+                    "for the in-flight step group; prints slot-occupancy "
+                    "p50/p95 alongside the queue-delay percentiles")
+    ap.add_argument("--slot-capacity", type=int, default=None,
+                    help="slot-buffer capacity for --step-level "
+                    "(default: --max-batch)")
     ap.add_argument("--tenants", type=int, default=0,
                     help="with --continuous: split the trace round-robin "
                     "across N tagged tenants (tiers cycle premium/"
@@ -161,6 +170,12 @@ def main() -> int:
         ap.error("--tenants must be >= 0")
     if args.tenants > 1 and not args.continuous:
         ap.error("--tenants requires --continuous")
+    if args.step_level and not args.continuous:
+        ap.error("--step-level requires --continuous")
+    if args.slot_capacity is not None and not args.step_level:
+        ap.error("--slot-capacity requires --step-level")
+    if args.slot_capacity is not None and args.slot_capacity < 1:
+        ap.error("--slot-capacity must be >= 1")
 
     if args.latent_depths is not None:
         latent_depths = tuple(int(d) for d in args.latent_depths.split(","))
@@ -194,17 +209,24 @@ def main() -> int:
             arrivals = merge_arrivals(*procs)
         else:
             arrivals = poisson_arrivals(reqs, args.arrival_rate, seed=1)
+        step_kw = (dict(step_level=True, slot_capacity=args.slot_capacity)
+                   if args.step_level else {})
+        occupancy = []
         if args.fail_node is not None:
-            done = engine.run(arrivals[:half])
+            done = engine.run(arrivals[:half], **step_kw)
+            occupancy += engine.slot_occupancy
             print(f"--- failing node {args.fail_node} ---")
             engine.fail_node(args.fail_node)
             # resume on the same timeline: backlog from the first half
             # (service overrunning the arrival spread) carries over
             done += engine.run(
                 arrivals[half:],
-                start=max((c.finished_at for c in done), default=0.0))
+                start=max((c.finished_at for c in done), default=0.0),
+                **step_kw)
+            occupancy += engine.slot_occupancy
         else:
-            done = engine.run(arrivals)
+            done = engine.run(arrivals, **step_kw)
+            occupancy = list(engine.slot_occupancy)
     else:
         for i, r in enumerate(reqs):
             if args.fail_node is not None and i == half:
@@ -247,9 +269,17 @@ def main() -> int:
     qd = np.array([c.queue_delay for c in done])
     mode = (f"continuous, {args.arrival_rate:g} req/s offered"
             if args.continuous else "drain path, actual wait")
+    if args.step_level:
+        mode = "step-level " + mode
     print(f"queue delay        : mean {qd.mean() * 1e3:.2f}ms   "
           f"p50 {np.percentile(qd, 50) * 1e3:.2f}ms  "
           f"p95 {np.percentile(qd, 95) * 1e3:.2f}ms  ({mode})")
+    if args.step_level and occupancy:
+        occ = np.array(occupancy)
+        cap = args.slot_capacity or args.max_batch
+        print(f"slot occupancy     : p50 {np.percentile(occ, 50):.0f}  "
+              f"p95 {np.percentile(occ, 95):.0f}  of {cap} slots  "
+              f"({len(occ)} step launches)")
     print("stage walls        : " + "  ".join(
         f"{name} {np.percentile(v, 50) * 1e3:.1f}/"
         f"{np.percentile(v, 95) * 1e3:.1f}ms"

@@ -1,4 +1,11 @@
 """Diffusion model family: noise schedules, samplers (DDIM / SDEdit /
-rectified flow), VAE, DiT, SD1.5-class UNet, Flux-class MMDiT."""
+rectified flow), VAE, DiT, SD1.5-class UNet, Flux-class MMDiT.
+
+``step_slots`` / ``ddim_step_slots`` are the step-level serving
+primitives: one ragged denoising step over a fixed-capacity slot buffer
+with per-slot timesteps (see ``repro.runtime.serving.DiffusionSlotEngine``
+for the persistent engine built on them)."""
 from repro.models.diffusion.schedule import DiffusionSchedule  # noqa: F401
 from repro.models.diffusion import sampler  # noqa: F401
+from repro.models.diffusion.sampler import (ddim_step_slots,  # noqa: F401
+                                            step_slots)

@@ -43,6 +43,45 @@ def ddim_step(sched: DiffusionSchedule, x, eps, t, t_prev, *, eta: float = 0.0):
     return jnp.sqrt(ab_p) * x0_pred + dir_xt
 
 
+def ddim_step_slots(sched: DiffusionSchedule, x, eps, t, t_prev, *,
+                    eta: float = 0.0):
+    """One DDIM update (Eq. 3) with PER-ELEMENT timesteps: ``t`` and
+    ``t_prev`` are ``(B,)`` int32 vectors, so every batch element can sit
+    at a different point of a different-length chain.  This is the ragged
+    counterpart of :func:`ddim_step` — same x0-clip / direction math, with
+    the schedule coefficients gathered per element and broadcast over the
+    spatial axes.  ``t_prev < 0`` marks an element's final update (alpha-bar
+    snaps to 1), exactly as the scalar step treats the chain tail."""
+    shape = (-1,) + (1,) * (x.ndim - 1)
+    ab_t = sched.alphas_bar[t].reshape(shape)
+    ab_p = jnp.where(t_prev >= 0,
+                     sched.alphas_bar[jnp.maximum(t_prev, 0)],
+                     1.0).reshape(shape)
+    x0_pred = (x - jnp.sqrt(1.0 - ab_t) * eps) / jnp.sqrt(ab_t)
+    x0_pred = jnp.clip(x0_pred, -4.0, 4.0)
+    dir_xt = jnp.sqrt(jnp.maximum(1.0 - ab_p, 0.0)) * eps
+    return jnp.sqrt(ab_p) * x0_pred + dir_xt
+
+
+def step_slots(eps_fn: Callable, sched: DiffusionSchedule, x, ctx, t, t_prev,
+               active, *, dtype=jnp.float32):
+    """ONE denoising step over a ragged slot buffer — the step-level
+    continuous-batching primitive.
+
+    ``x`` is the fixed-capacity ``(S, ...)`` latent buffer, ``ctx`` the
+    per-slot conditioning, ``t``/``t_prev`` the per-slot schedule
+    timesteps (host-supplied from each slot's own chain — txt2img,
+    truncated img2img, or a ``resume@k`` tail), and ``active`` a ``(S,)``
+    bool mask.  Inactive slots pass through UNCHANGED, so retired/free
+    slots cost one masked select, never a recompile: the whole serving
+    engine advances with a single compiled program per slot capacity,
+    whatever mix of chains is in flight."""
+    eps = eps_fn(x, t, ctx)
+    x_new = ddim_step_slots(sched, x, eps, t, t_prev).astype(dtype)
+    mask = active.reshape((-1,) + (1,) * (x.ndim - 1))
+    return jnp.where(mask, x_new, x)
+
+
 def _ddim_scan(eps_fn: Callable, sched: DiffusionSchedule, x, ctx, ts,
                *, eta: float = 0.0, dtype=jnp.float32):
     """The shared DDIM step loop over an explicit descending timestep

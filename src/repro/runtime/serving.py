@@ -24,7 +24,14 @@ queue" in front of the Fig. 5 pipeline.  Three pieces:
     load: a bucket closes only when ``max_batch`` requests have arrived
     (or the trace ends), so stragglers wait out the fill time — the
     behaviour whose p95 queue delay the continuous mode beats under
-    bursty traffic.
+    bursty traffic.  ``run(..., step_level=True)`` sharpens admission
+    from step-GROUP to step granularity: a persistent slot engine
+    (:class:`DiffusionSlotEngine` / :class:`EmulatedSlotEngine`)
+    advances a ragged in-flight set one denoising step per compiled
+    ``step_slots`` launch, admitting arrivals into free slots at ANY
+    step boundary and retiring each chain the step it ends, while
+    Archive/Finish run in submission order so every observable matches
+    the group modes exactly.
   - ``submit`` + ``drain()`` — the legacy closed-loop surface: everything
     is queued up front and drained in FIFO micro-batches.
 
@@ -38,13 +45,17 @@ queue" in front of the Fig. 5 pipeline.  Three pieces:
   in front of decode; exact analog of Algorithm 1's HIT_RETURN branch with
   no img2img middle band (tokens are discrete).
 
-Invariants (pinned by ``tests/test_serving_continuous.py``): on traces
-where batched/sequential parity holds, continuous-mode results are a
-permutation (in fact, arrival-order-identical) of fixed-drain results —
-batch partitioning never changes routes, images, cache state, or hit/miss
-stats; widely spaced single submissions reproduce sequential ``serve``
+Invariants (pinned by ``tests/test_serving_continuous.py`` and, for the
+step-level mode, the ragged-admission property suite in
+``tests/test_step_level.py``): on traces where batched/sequential parity
+holds, continuous-mode results are a permutation (in fact,
+arrival-order-identical) of fixed-drain results — batch partitioning
+never changes routes, images, cache state, or hit/miss stats, and
+step-level slot admission reproduces both bitwise for any slot capacity;
+widely spaced single submissions reproduce sequential ``serve``
 bitwise; and a run whose group sizes stay inside the precompiled buckets
-triggers no JIT at serve time.  The eviction sweep fires at EXACT
+triggers no JIT at serve time (step-level runs reuse exactly ONE
+``step_slots`` executable per slot capacity).  The eviction sweep fires at EXACT
 request-count crossings inside the Finish stage (archives past the
 boundary are deferred and flushed per request), so sub-batch maintenance
 intervals keep their sequential cadence — no interval clamp is needed.
@@ -61,12 +72,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.system import CacheGenius, GenerationBackend, ServeResult
+from repro.core.system import CacheGenius, GenerationBackend, Plan, \
+    ServeResult
 from repro.core.trace import TimedRequest
 from repro.models.diffusion import dit as dit_mod
 from repro.models.diffusion import vae as vae_mod
-from repro.models.diffusion.sampler import (ddim_sample, resume_noise_levels,
-                                            resume_sample, sdedit_start)
+from repro.models.diffusion.sampler import (ddim_sample, ddim_timesteps,
+                                            resume_noise_levels,
+                                            resume_sample, sdedit_start,
+                                            step_slots)
 from repro.models.diffusion.schedule import DiffusionSchedule
 from repro.utils import next_pow2
 
@@ -154,6 +168,43 @@ class DiffusionBackend(GenerationBackend):
                           k=k, strength=self.strength)
         return vae_mod.decode(vae, self.vae_cfg, z / self.latent_scale)
 
+    def _step_slots_core(self, net, x, ctx, t, t_prev, active):
+        # ONE ragged denoising step over the slot buffer: per-slot
+        # timesteps, inactive slots pass through (see sampler.step_slots)
+        eps = dit_mod.make_eps_fn(net, self.net_cfg)
+        return step_slots(eps, self.sched, x, ctx, t, t_prev, active)
+
+    def _slot_noise_core(self, seeds):
+        # txt2img slot init: EXACTLY _txt2img_core's per-seed noise draw,
+        # so a slot trajectory starts where the batched sampler would
+        el_shape = (self.net_cfg.img_res, self.net_cfg.img_res,
+                    self.net_cfg.in_ch)
+
+        def _noise(seed):
+            k_noise, _ = jax.random.split(jax.random.PRNGKey(seed))
+            return jax.random.normal(k_noise, (1,) + el_shape)[0]
+
+        return jax.vmap(_noise)(seeds)
+
+    def _slot_img_init_core(self, vae, ref_img, seeds):
+        # img2img slot init: _img2img_core's encode + per-seed noise +
+        # SDEdit start, stopping BEFORE the chain (the chain runs in the
+        # step-level engine, one step_slots launch per boundary)
+        mean, _ = vae_mod.encode(vae, self.vae_cfg, ref_img)
+        z_ref = mean * self.latent_scale
+
+        def _noise(seed, z1):
+            k1, _ = jax.random.split(jax.random.PRNGKey(seed))
+            return jax.random.normal(k1, (1,) + z1.shape)[0]
+
+        noise = jax.vmap(_noise)(seeds, z_ref)
+        x_init, _ = sdedit_start(self.sched, z_ref, noise,
+                                 strength=self.strength)
+        return x_init
+
+    def _slot_decode_core(self, vae, z):
+        return vae_mod.decode(vae, self.vae_cfg, z / self.latent_scale)
+
     def _archive_latents_core(self, vae, images, seeds, depths, steps_total):
         # noised intermediates of the img2img chain each image WOULD run:
         # the same encode + per-seed noise draw as _img2img_core, pushed
@@ -208,6 +259,30 @@ class DiffusionBackend(GenerationBackend):
                         jax.ShapeDtypeStruct((batch, res, res, 3),
                                              jnp.float32),
                         jax.ShapeDtypeStruct((batch,), jnp.int32))
+            elif kind == "step_slots":
+                # steps is 0 for slot kinds: ONE compiled program per slot
+                # capacity covers every mixture of per-slot step counts
+                fn = jax.jit(lambda n, x, c, t, tp, a: self._step_slots_core(
+                    n, x, c, t, tp, a))
+                args = (self.net_params, lat_sds,
+                        jax.ShapeDtypeStruct((batch, self.net_cfg.ctx_dim),
+                                             jnp.float32),
+                        jax.ShapeDtypeStruct((batch,), jnp.int32),
+                        jax.ShapeDtypeStruct((batch,), jnp.int32),
+                        jax.ShapeDtypeStruct((batch,), jnp.bool_))
+            elif kind == "slot_noise":
+                fn = jax.jit(self._slot_noise_core)
+                args = (jax.ShapeDtypeStruct((batch,), jnp.int32),)
+            elif kind == "slot_img_init":
+                fn = jax.jit(lambda v, r, s: self._slot_img_init_core(
+                    v, r, s))
+                args = (self.vae_params,
+                        jax.ShapeDtypeStruct((batch, res, res, 3),
+                                             jnp.float32),
+                        jax.ShapeDtypeStruct((batch,), jnp.int32))
+            elif kind == "slot_decode":
+                fn = jax.jit(lambda v, z: self._slot_decode_core(v, z))
+                args = (self.vae_params, lat_sds)
             else:
                 fn = jax.jit(lambda n, v, r, c, s: self._img2img_core(
                     n, v, r, c, s, steps))
@@ -234,6 +309,21 @@ class DiffusionBackend(GenerationBackend):
                 for kind in kinds:
                     self._get(kind, s, b)
         return time.perf_counter() - t0
+
+    def precompile_step_level(self, slot_capacity: int) -> float:
+        """Compile the step-level serving buckets: ONE ``step_slots``
+        program at the slot capacity (covering every ragged step mixture)
+        plus the batch-of-one slot init/decode programs.  Returns total
+        seconds."""
+        t0 = time.perf_counter()
+        self._get("step_slots", 0, slot_capacity)
+        self._get("slot_noise", 0, 1)
+        self._get("slot_img_init", 0, 1)
+        self._get("slot_decode", 0, 1)
+        return time.perf_counter() - t0
+
+    def make_slot_engine(self, capacity: int) -> "DiffusionSlotEngine":
+        return DiffusionSlotEngine(self, capacity)
 
     # -- GenerationBackend interface ------------------------------------------
 
@@ -366,6 +456,199 @@ def _to_sds(x):
 
 
 # ---------------------------------------------------------------------------
+# step-level slot engines (ragged in-flight set, one denoising step / call)
+# ---------------------------------------------------------------------------
+
+
+class DiffusionSlotEngine:
+    """Persistent step-wise sampler over a fixed-capacity slot buffer.
+
+    Each occupied slot holds one in-flight generation request's latent,
+    conditioning vector and DDIM timestep sub-sequence; every
+    :meth:`step` call advances ALL active slots one denoising step through
+    a single AOT-compiled ``("step_slots", 0, capacity)`` launch with
+    per-slot timesteps, so requests with mixed step counts (K-step
+    txt2img misses, truncated img2img band hits, ``resume@k`` latent-depth
+    hits) enter and retire at ANY step boundary.
+
+    Slot init reuses the batched cores' exact seed→noise draws
+    (``slot_noise`` / ``slot_img_init``) and the per-kind timestep
+    geometry of ``ddim_sample`` / ``resume_sample``, so a slot trajectory
+    is the same chain the group sampler would run — only the launch
+    granularity changes.  ``progress[handle]`` records the slot's step
+    index after each advance (strictly monotone; pinned by the
+    ragged-admission property suite) and ``step_calls`` counts compiled
+    launches (exactly one executable per slot capacity)."""
+
+    def __init__(self, backend: "DiffusionBackend", capacity: int):
+        self.backend = backend
+        self.capacity = int(capacity)
+        cfg = backend.net_cfg
+        self._lat = np.zeros((capacity, cfg.img_res, cfg.img_res,
+                              cfg.in_ch), np.float32)
+        self._ctx = np.zeros((capacity, cfg.ctx_dim), np.float32)
+        self._active = np.zeros((capacity,), bool)
+        self._ts: List[Optional[np.ndarray]] = [None] * capacity
+        self._pos = [0] * capacity
+        self._state: List[Optional[object]] = [None] * capacity
+        self._handle = [-1] * capacity
+        self.progress: Dict[int, List[int]] = {}
+        self.step_calls = 0
+
+    def free_count(self) -> int:
+        return int(self.capacity - self._active.sum())
+
+    def active_count(self) -> int:
+        return int(self._active.sum())
+
+    def admit(self, state, handle: int) -> None:
+        """Seat one planned ``gen`` request in a free slot: compute its
+        initial latent (per-request seed-noise semantics preserved) and
+        its DDIM timestep sub-sequence."""
+        b = self.backend
+        plan = state.plan
+        slot = int(np.argmin(self._active))
+        if self._active[slot]:
+            raise RuntimeError("slot engine is full")
+        seeds = jnp.asarray([state.seed], jnp.int32)
+        if plan.latent is not None:
+            # resume@k: the last steps of the steps_total-step truncated
+            # img2img chain (same geometry as resume_sample)
+            steps_total = int(plan.steps) + int(plan.resume_k)
+            ts = ddim_timesteps(b.sched.T, steps_total,
+                                t_start=int(b.strength * b.sched.T))
+            ts = np.asarray(ts[int(plan.resume_k):])
+            x0 = np.asarray(plan.latent, np.float32)
+        elif plan.ref is not None:
+            ts = np.asarray(ddim_timesteps(
+                b.sched.T, int(plan.steps),
+                t_start=int(b.strength * b.sched.T)))
+            fn = b._get("slot_img_init", 0, 1)
+            x0 = np.asarray(fn(b.vae_params,
+                               jnp.asarray(plan.ref, jnp.float32)[None],
+                               seeds)[0])
+        else:
+            ts = np.asarray(ddim_timesteps(b.sched.T, int(plan.steps)))
+            fn = b._get("slot_noise", 0, 1)
+            x0 = np.asarray(fn(seeds)[0])
+        self._lat[slot] = x0
+        self._ctx[slot] = np.asarray(b.embed_prompt(state.prompt),
+                                     np.float32)
+        self._ts[slot] = ts
+        self._pos[slot] = 0
+        self._state[slot] = state
+        self._handle[slot] = int(handle)
+        self._active[slot] = True
+        self.progress[int(handle)] = [0]
+
+    def step(self) -> List[Tuple[int, object]]:
+        """Advance every active slot one DDIM step (one compiled launch);
+        decode and free slots whose chain just finished.  Returns the
+        retired ``(handle, state)`` pairs (``state.image`` set)."""
+        b = self.backend
+        t = np.zeros((self.capacity,), np.int32)
+        tp = np.full((self.capacity,), -1, np.int32)
+        for i in range(self.capacity):
+            if not self._active[i]:
+                continue
+            ts, p = self._ts[i], self._pos[i]
+            t[i] = ts[p]
+            tp[i] = ts[p + 1] if p + 1 < len(ts) else -1
+        fn = b._get("step_slots", 0, self.capacity)
+        out = fn(b.net_params, jnp.asarray(self._lat),
+                 jnp.asarray(self._ctx), jnp.asarray(t), jnp.asarray(tp),
+                 jnp.asarray(self._active))
+        self._lat = np.array(out)   # copy: the slot buffer stays writable
+        self.step_calls += 1
+        retired: List[Tuple[int, object]] = []
+        dec = b._get("slot_decode", 0, 1)
+        for i in range(self.capacity):
+            if not self._active[i]:
+                continue
+            self._pos[i] += 1
+            self.progress[self._handle[i]].append(self._pos[i])
+            if self._pos[i] >= len(self._ts[i]):
+                img = np.asarray(dec(b.vae_params,
+                                     jnp.asarray(self._lat[i])[None])[0])
+                st = self._state[i]
+                st.image = img
+                retired.append((self._handle[i], st))
+                self._active[i] = False
+                self._ts[i] = None
+                self._state[i] = None
+                self._handle[i] = -1
+        return retired
+
+
+class EmulatedSlotEngine:
+    """Slot-engine surface for generic :class:`GenerationBackend`\\ s (no
+    resident latent state).  Each admitted request's image is computed at
+    admission as a batch of ONE — element-for-element the call sequential
+    ``serve`` makes, so step-level serving stays bitwise-identical on any
+    deterministic backend — and the slot then counts down its plan's step
+    budget so admission/retirement interleaving (and therefore clock,
+    archive and maintenance order) matches the real slot engine's ragged
+    schedule."""
+
+    def __init__(self, system: CacheGenius, capacity: int):
+        self.system = system
+        self.capacity = int(capacity)
+        self._remaining: List[int] = [0] * capacity
+        self._state: List[Optional[object]] = [None] * capacity
+        self._handle = [-1] * capacity
+        self._active = np.zeros((capacity,), bool)
+        self.progress: Dict[int, List[int]] = {}
+        self.step_calls = 0
+
+    def free_count(self) -> int:
+        return int(self.capacity - self._active.sum())
+
+    def active_count(self) -> int:
+        return int(self._active.sum())
+
+    def admit(self, state, handle: int) -> None:
+        backend = self.system.backend
+        plan = state.plan
+        slot = int(np.argmin(self._active))
+        if self._active[slot]:
+            raise RuntimeError("slot engine is full")
+        if plan.latent is not None:
+            img = backend.resume_batch(
+                [state.prompt], np.asarray(plan.latent)[None],
+                int(plan.steps) + int(plan.resume_k), int(plan.resume_k),
+                [state.seed])[0]
+        elif plan.ref is not None:
+            img = backend.img2img_batch(
+                [state.prompt], np.asarray(plan.ref)[None],
+                int(plan.steps), [state.seed])[0]
+        else:
+            img = backend.txt2img_batch(
+                [state.prompt], int(plan.steps), [state.seed])[0]
+        state.image = np.asarray(img)
+        self._remaining[slot] = max(int(plan.steps), 1)
+        self._state[slot] = state
+        self._handle[slot] = int(handle)
+        self._active[slot] = True
+        self.progress[int(handle)] = [0]
+
+    def step(self) -> List[Tuple[int, object]]:
+        self.step_calls += 1
+        retired: List[Tuple[int, object]] = []
+        for i in range(self.capacity):
+            if not self._active[i]:
+                continue
+            self._remaining[i] -= 1
+            h = self._handle[i]
+            self.progress[h].append(self.progress[h][-1] + 1)
+            if self._remaining[i] <= 0:
+                retired.append((h, self._state[i]))
+                self._active[i] = False
+                self._state[i] = None
+                self._handle[i] = -1
+        return retired
+
+
+# ---------------------------------------------------------------------------
 # batched request engine
 # ---------------------------------------------------------------------------
 
@@ -407,6 +690,11 @@ class ServingEngine:
         self.max_batch = max_batch
         self.queue: List[Request] = []
         self.completed: List[Completed] = []
+        # step-level telemetry: active-slot count sampled before every
+        # step launch of the most recent step_level=True run, plus the
+        # engine itself (step_calls / progress / capacity introspection)
+        self.slot_occupancy: List[int] = []
+        self.last_slot_engine: Optional[object] = None
         # Maintenance intervals smaller than max_batch are honoured: the
         # Finish stage sweeps at exact request-count crossings (archives
         # past a crossing are deferred to the per-request result loop),
@@ -463,7 +751,10 @@ class ServingEngine:
     # -- continuous batching ----------------------------------------------------
 
     def run(self, arrivals: Iterable[TimedRequest], *,
-            mode: str = "continuous", start: float = 0.0) -> List[Completed]:
+            mode: str = "continuous", start: float = 0.0,
+            step_level: bool = False, slot_capacity: Optional[int] = None,
+            on_step: Optional[Callable[[int], None]] = None,
+            ) -> List[Completed]:
         """Serve a timestamped arrival process; returns arrival order.
 
         The virtual clock starts at ``start`` and advances two ways: idling
@@ -488,13 +779,36 @@ class ServingEngine:
         ``result.queue_delay``, overriding the pipeline's perf-counter
         figure, which has no meaning on a virtual timeline) and
         ``finished_at`` = the group's completion instant.
+
+        ``step_level=True`` (continuous mode only) switches admission from
+        step-GROUP to step granularity: a persistent slot engine of
+        ``slot_capacity`` slots (default ``max_batch``) advances every
+        in-flight generation one denoising step per launch, admitting
+        arrivals into free slots at ANY step boundary and retiring
+        finished slots through per-request Archive/Finish passes in
+        submission order (exact maintenance crossings preserved).
+        ``on_step(step_no)`` is called before each step launch — the
+        fault-injection hook (e.g. ``fail_node`` while slots are
+        mid-flight).  See :class:`DiffusionSlotEngine` /
+        :class:`EmulatedSlotEngine` and ``docs/ARCHITECTURE.md``.
         """
         if mode not in ("continuous", "drain"):
             raise ValueError(f"unknown mode {mode!r}")
+        if step_level and mode != "continuous":
+            raise ValueError("step_level=True requires mode='continuous'")
+        if not step_level and (slot_capacity is not None
+                               or on_step is not None):
+            raise ValueError(
+                "slot_capacity/on_step only apply with step_level=True")
         if self.queue:
             raise RuntimeError(
                 "ServingEngine.run would strand the submit() queue "
                 f"({len(self.queue)} pending requests) — drain() it first")
+        if step_level:
+            return self._run_step_level(
+                arrivals, start=start,
+                slot_capacity=slot_capacity or self.max_batch,
+                on_step=on_step)
         pending = deque(sorted(arrivals, key=lambda a: a.arrival_time))
         ready: List[TimedRequest] = []
         out: List[Completed] = []
@@ -528,6 +842,152 @@ class ServingEngine:
                               tenant=r.tenant, tier=r.tier)
                 out.append(Completed(req, res, queue_delay=res.queue_delay,
                                      finished_at=now))
+        self.completed.extend(out)
+        return out
+
+    def _run_step_level(self, arrivals: Iterable[TimedRequest], *,
+                        start: float, slot_capacity: int,
+                        on_step: Optional[Callable[[int], None]],
+                        ) -> List[Completed]:
+        """Step-level continuous batching over a persistent slot engine.
+
+        Event loop invariants (the ragged-admission property suite pins
+        each of these against group-continuous and sequential ``serve``):
+
+        * ADMISSION — whenever slots are free and requests have arrived,
+          one Embed..Plan pass (``ServePipeline.run_admission``) plans the
+          admission group against the current cache snapshot; ``gen``
+          plans are seated in slots, everything else completes
+          immediately.  Earlier unfinalized gen requests seed the Plan
+          stage's coalescing set, so a near-duplicate arriving mid-flight
+          aliases onto the in-flight slot exactly as it would alias
+          inside one group.
+        * RETIREMENT — a slot retires the step its chain ends; the image
+          is decoded per slot, but Archive/Finish run in SUBMISSION order
+          (``ServePipeline.finalize`` per request), so blob ids, history
+          records, eviction sweeps at exact maintenance crossings, and
+          per-request stats all match the sequential loop regardless of
+          retirement interleaving.
+        * TIMING — the virtual clock advances by the measured wall time
+          of every admission pass, step launch, and finalize pass;
+          ``queue_delay`` is admission instant − arrival instant, and
+          per-request ``wall_total`` / ``stage_walls`` are stamped from
+          the slot's OWN timestamp trail (never group-smeared).
+        * FAULTS — a node death mid-flight (``on_step`` → ``fail_node``)
+          never loses an accepted job: occupied slots finish their chain
+          and their archive/accounting reroute to a surviving node at
+          finalize, leaving the dead node's VectorDB untouched.
+        """
+        system = self.system
+        make = getattr(system.backend, "make_slot_engine", None)
+        engine = (make(slot_capacity) if make is not None
+                  else EmulatedSlotEngine(system, slot_capacity))
+        self.last_slot_engine = engine
+        self.slot_occupancy = []
+        pending = deque(sorted(arrivals, key=lambda a: a.arrival_time))
+        ready: List[TimedRequest] = []
+        out: List[Completed] = []
+        now = float(start)
+        states: Dict[int, object] = {}
+        arr_of: Dict[int, TimedRequest] = {}
+        admit_t: Dict[int, float] = {}
+        img_ready: Dict[int, bool] = {}
+        alias_target: Dict[int, int] = {}
+        inflight_gen: List[int] = []   # unfinalized gen handles, ascending
+        next_handle = 0
+        next_fin = 0
+        step_no = 0
+
+        def admit_arrived() -> None:
+            while pending and pending[0].arrival_time <= now + 1e-12:
+                ready.append(pending.popleft())
+
+        def do_admission() -> None:
+            nonlocal now, next_handle
+            free = engine.free_count()
+            batch, rest = ready[:free], ready[free:]
+            ready[:] = rest
+            base = next_handle
+            admitted = now
+            inflight = [(states[h].qvec, h) for h in inflight_gen]
+            t0 = time.perf_counter()
+            planned = system.pipeline.run_admission(
+                system, [r.prompt for r in batch],
+                seeds=[r.seed for r in batch],
+                quality_tiers=[r.quality_tier for r in batch],
+                inflight=inflight or None)
+            for s, r in zip(planned, batch):
+                h = base + s.index
+                states[h], arr_of[h], admit_t[h] = s, r, admitted
+                if s.plan.kind == "gen":
+                    engine.admit(s, h)
+                    inflight_gen.append(h)
+                    img_ready[h] = False
+                elif s.plan.kind == "alias":
+                    t = s.plan.target
+                    alias_target[h] = base + t if t >= 0 else -(t + 1)
+            next_handle += len(batch)
+            now = admitted + (time.perf_counter() - t0)
+
+        def finalize_due() -> None:
+            nonlocal now, next_fin
+            while next_fin < next_handle:
+                st = states[next_fin]
+                if st.plan.kind == "gen" and not img_ready[next_fin]:
+                    break      # submission-order gate: wait for the slot
+                if st.plan.kind == "alias":
+                    # target is an earlier gen request — already retired
+                    # (and finalized) by the submission-order gate, so its
+                    # image is available; this is the history fast path
+                    # sequential serve takes once the target is recorded
+                    st.plan = Plan(kind="history",
+                                   image=states[alias_target[next_fin]].image)
+                elif st.plan.kind == "gen":
+                    node = st.plan.node
+                    if (0 <= node < len(system.dbs)
+                            and not system.scheduler.nodes[node].alive):
+                        alive = [i for i in range(len(system.dbs))
+                                 if system.scheduler.nodes[i].alive]
+                        if alive:   # reroute archive + accounting off the
+                            st.plan.node = alive[0]   # dead node's VDB
+                t0 = time.perf_counter()
+                system.pipeline.finalize(system, st)
+                now += time.perf_counter() - t0
+                r = arr_of[next_fin]
+                res = st.result
+                res.queue_delay = admit_t[next_fin] - r.arrival_time
+                req = Request(r.prompt, r.seed, r.quality_tier,
+                              submitted_at=r.arrival_time,
+                              tenant=r.tenant, tier=r.tier)
+                out.append(Completed(req, res, queue_delay=res.queue_delay,
+                                     finished_at=now))
+                if inflight_gen and inflight_gen[0] == next_fin:
+                    inflight_gen.pop(0)
+                next_fin += 1
+
+        while pending or ready or next_fin < next_handle:
+            admit_arrived()
+            if ready and engine.free_count() > 0:
+                do_admission()
+                finalize_due()     # cached/history/alias complete at once
+            if engine.active_count() > 0:
+                if on_step is not None:
+                    on_step(step_no)
+                self.slot_occupancy.append(engine.active_count())
+                t0 = time.perf_counter()
+                retired = engine.step()
+                now += time.perf_counter() - t0
+                step_no += 1
+                for h, st in retired:
+                    st.stage_ts["Generate"] = time.perf_counter()
+                    img_ready[h] = True
+                finalize_due()
+            elif not ready:
+                finalize_due()
+                if pending:
+                    now = max(now, pending[0].arrival_time)
+                elif next_fin >= next_handle:
+                    break
         self.completed.extend(out)
         return out
 
