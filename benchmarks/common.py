@@ -70,6 +70,13 @@ HIT_RATES: Tuple[float, ...] = (0.2, 0.5, 0.8)
 TENANT_COUNTS: Tuple[int, ...] = (3,)
 TIER_NAMES: Tuple[str, ...] = ("premium", "standard", "batch")
 
+# Fault-recovery benchmark axes: where in the trace the victim node
+# crashes (fraction of requests served first) and what fraction of the
+# blob store a corruption event damages; overridable via `benchmarks.run
+# --crash-at` / `--corrupt-frac`.
+CRASH_AT: float = 0.5
+CORRUPT_FRAC: float = 0.25
+
 # Step-level continuous-batching axis for serving_latency_curve: the
 # bursty step-level arm (and its step_beats_cont_bursty gate) always
 # runs; flipping this on (`benchmarks.run --step-level`) extends the

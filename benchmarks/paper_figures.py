@@ -831,6 +831,141 @@ def frontdoor_load(corpus_n: int = 80, n_nodes: int = 2,
     return out
 
 
+def fault_recovery(n_requests: int = 160, corpus_n: int = 120,
+                   n_nodes: int = 3) -> Dict:
+    """Crash-restart economics: journaled rejoin vs cold rejoin.
+
+    Two identically built fleets replay the IDENTICAL Zipf trace.  At
+    ``C.CRASH_AT`` of the trace the busiest node hard-crashes
+    (``CacheGenius.crash_node``: cache lost, nothing reassigned) and
+    immediately rejoins — from its ``CacheJournal`` replay in one arm,
+    cold in the other.  The journaled arm must restore the victim's
+    VectorDB bitwise (every ``snapshot()`` array) and, on the post-crash
+    half of the trace, beat the cold arm's cache-match hit rate (the
+    ``journaled_beats_cold_hit_rate`` gate — history fast-path hits are
+    excluded because they serve from the shared blob store and survive
+    either way).  A final phase corrupts ``C.CORRUPT_FRAC`` of the blob
+    store and replays hot prompts: every corrupted hit must degrade to
+    the full-generation miss path with zero failed serves.
+
+    Also reports journal-replay wall time against cache size (the
+    restart-latency scaling a deployment actually budgets for).
+
+    Stack-free: NullBackend + proxy embedder, same as latent_depth_cache."""
+    import shutil
+    import tempfile
+
+    from repro.faults import attach_journals
+    from repro.launch.serve import build_system
+
+    cut = min(n_requests - 1, max(1, int(n_requests * C.CRASH_AT)))
+    reqs = list(RequestTrace(seed=3).generate(n_requests))
+    out: Dict = {"n_requests": n_requests, "corpus_n": corpus_n,
+                 "n_nodes": n_nodes, "crash_at": C.CRASH_AT,
+                 "corrupt_frac": C.CORRUPT_FRAC}
+
+    def _db_hits(st):
+        rc = st.route_counts
+        return rc.get("hit_return", 0) + rc.get("img2img", 0)
+
+    arms: Dict[str, Dict] = {}
+    roots = []
+    for tag in ("journaled", "cold"):
+        system, _, _, _ = build_system(
+            n_nodes=n_nodes, corpus_n=corpus_n,
+            capacity_per_node=4 * corpus_n, seed=0)
+        journals = None
+        if tag == "journaled":
+            root = tempfile.mkdtemp(prefix="fault_recovery_")
+            roots.append(root)
+            journals = attach_journals(system, root, snapshot_every=32)
+        for i, r in enumerate(reqs[:cut]):
+            system.serve(r.prompt, seed=i)
+        victim = max(range(n_nodes), key=lambda n: system.dbs[n].size)
+        pre = system.dbs[victim].size
+        old = system.crash_node(victim)
+        t0 = time.perf_counter()
+        if journals is not None:
+            j = journals[victim]
+            db = j.replay(old.dim, old.capacity, name=old.name,
+                          use_pallas=old.use_pallas,
+                          interpret=old.interpret)
+            db.attach_journal(j)
+            system.rejoin_node(victim, db)
+            live, rest = old.snapshot(), db.snapshot()
+            out["bitwise_restore_ok"] = bool(
+                set(live) == set(rest)
+                and all(np.array_equal(live[k], rest[k]) for k in live))
+        else:
+            system.rejoin_node(victim)
+        recovery_s = time.perf_counter() - t0
+        restored = system.dbs[victim].size
+        hits0, req0 = _db_hits(system.stats), system.stats.requests
+        for i, r in enumerate(reqs[cut:]):
+            system.serve(r.prompt, seed=cut + i)
+        post_n = system.stats.requests - req0
+        arms[tag] = {
+            "victim": victim, "pre_crash_entries": pre,
+            "restored_entries": restored if tag == "journaled" else None,
+            "recovery_s": recovery_s,
+            "post_hit_rate": (_db_hits(system.stats) - hits0)
+            / max(post_n, 1),
+            "system": system,
+        }
+        out[f"recovery_s_{tag}"] = recovery_s
+        out[f"post_crash_hit_rate_{tag}"] = arms[tag]["post_hit_rate"]
+    out["victim_node"] = arms["journaled"]["victim"]
+    out["victim_entries"] = arms["journaled"]["pre_crash_entries"]
+    out["restored_entries"] = arms["journaled"]["restored_entries"]
+    out["journaled_beats_cold_hit_rate"] = bool(
+        arms["journaled"]["post_hit_rate"]
+        > arms["cold"]["post_hit_rate"])
+
+    # -- degraded-mode phase: corrupt a fraction of the blob store and
+    # replay the hottest prompts — corrupted hits must degrade to the
+    # full miss path, never fail
+    system = arms["journaled"]["system"]
+    store = system.blob_store
+    rng = np.random.default_rng(11)
+    bids = sorted(store._blobs)
+    k = max(1, int(round(len(bids) * C.CORRUPT_FRAC)))
+    for bid in rng.choice(np.asarray(bids), size=k, replace=False):
+        store.corrupt(int(bid), rng)
+    ch0, dg0 = system.stats.corrupt_hits, system.stats.degraded_serves
+    t0 = time.perf_counter()
+    served = 0
+    for i, r in enumerate(reqs[:cut]):
+        res = system.serve(r.prompt, seed=n_requests + i)
+        served += res.image is not None
+    out["degraded_rps"] = served / max(time.perf_counter() - t0, 1e-9)
+    out["corrupt_hits"] = system.stats.corrupt_hits - ch0
+    out["degraded_serves"] = system.stats.degraded_serves - dg0
+    out["degraded_zero_failures"] = bool(served == cut)
+
+    # -- restart-latency scaling: journal-replay wall vs cache size
+    for frac, label in ((0.5, "half"), (1.0, "full")):
+        cn = max(8, int(corpus_n * frac))
+        system, _, _, _ = build_system(
+            n_nodes=n_nodes, corpus_n=cn, capacity_per_node=4 * corpus_n,
+            seed=0)
+        root = tempfile.mkdtemp(prefix="fault_recovery_scale_")
+        roots.append(root)
+        journals = attach_journals(system, root, snapshot_every=32)
+        victim = max(range(n_nodes), key=lambda n: system.dbs[n].size)
+        old = system.crash_node(victim)
+        t0 = time.perf_counter()
+        db = journals[victim].replay(
+            old.dim, old.capacity, name=old.name,
+            use_pallas=old.use_pallas, interpret=old.interpret)
+        out[f"replay_s_{label}_cache"] = time.perf_counter() - t0
+        out[f"replay_entries_{label}_cache"] = int(db.size)
+    for root in roots:
+        shutil.rmtree(root, ignore_errors=True)
+    arms["journaled"].pop("system")
+    arms["cold"].pop("system")
+    return out
+
+
 ALL_BENCHMARKS = {
     "fig1_psnr_steps": fig1_psnr_steps,
     "table1_quality": table1_quality,
@@ -848,6 +983,7 @@ ALL_BENCHMARKS = {
     "scheduling_quality": scheduling_quality,
     "latent_depth_cache": latent_depth_cache,
     "frontdoor_load": frontdoor_load,
+    "fault_recovery": fault_recovery,
     "fig19_lcu": fig19_lcu,
     "table4_reference": table4_reference,
     "table5_embeddings": table5_embeddings,
@@ -856,4 +992,4 @@ ALL_BENCHMARKS = {
 # Benchmarks that never touch the trained diffusion stack — the driver
 # skips the (slow) stack build when only these are selected.
 STACK_FREE = {"retrieval_scan", "scheduling_quality", "latent_depth_cache",
-              "frontdoor_load"}
+              "frontdoor_load", "fault_recovery"}

@@ -111,12 +111,22 @@ def main() -> int:
                     help="comma-separated SLA tiers cycled across the "
                          "frontdoor_load paced tenants "
                          "(default: premium,standard,batch)")
+    ap.add_argument("--crash-at", type=float, default=None,
+                    help="fault_recovery: fraction of the trace served "
+                         "before the victim node crashes (default: 0.5)")
+    ap.add_argument("--corrupt-frac", type=float, default=None,
+                    help="fault_recovery: fraction of the blob store the "
+                         "corruption phase damages (default: 0.25)")
     ap.add_argument("--step-level", action="store_true",
                     help="extend serving_latency_curve's step-level "
                          "continuous-batching arm (ragged slot admission) "
                          "to the whole per-rate Poisson sweep; the bursty "
                          "step-level arm always runs")
     args = ap.parse_args()
+    if args.crash_at is not None and not 0.0 < args.crash_at < 1.0:
+        ap.error("--crash-at must be in (0, 1)")
+    if args.corrupt_frac is not None and not 0.0 < args.corrupt_frac <= 1.0:
+        ap.error("--corrupt-frac must be in (0, 1]")
 
     from benchmarks.paper_figures import ALL_BENCHMARKS, STACK_FREE
     from benchmarks import common as C
@@ -135,6 +145,10 @@ def main() -> int:
         C.TENANT_COUNTS = args.tenants
     if args.tiers:
         C.TIER_NAMES = args.tiers
+    if args.crash_at is not None:
+        C.CRASH_AT = args.crash_at
+    if args.corrupt_frac is not None:
+        C.CORRUPT_FRAC = args.corrupt_frac
     if args.step_level:
         C.STEP_LEVEL = True
 

@@ -63,6 +63,20 @@ from repro.core.scheduler import ScheduleDecision
 from repro.utils import l2n, stable_hash
 
 
+class TransientBackendError(RuntimeError):
+    """A denoiser call failed in a way worth retrying (flaky accelerator,
+    dropped RPC).  The Generate stage retries the group up to
+    ``system.transient_retries`` times, charging each attempt to the
+    node's health; the front-door dispatcher adds backoff on top."""
+
+
+class CorruptReferenceError(RuntimeError):
+    """An archived blob failed its checksum at hit time.  Raised by the
+    Plan stage's verified fetches AFTER the corrupt entry has been purged
+    (VDB slots evicted, blob deleted, history invalidated); the stage
+    catches it and degrades the request to the txt2img miss path."""
+
+
 # ---------------------------------------------------------------------------
 # generation backend — batch-first protocol
 # ---------------------------------------------------------------------------
@@ -220,6 +234,7 @@ class Plan:
     image: Optional[np.ndarray] = None
     resume_k: int = 0                    # latent-depth resume depth
     latent: Optional[np.ndarray] = None  # archived noised latent (depth k)
+    degraded: bool = False               # corrupt reference → miss path
 
 
 @dataclass
@@ -484,7 +499,16 @@ class PlanStage:
     """Algorithm 1 routing in submission order.  Near-duplicates of
     in-flight (will-archive) batch members coalesce onto that member's
     generation — exactly the history fast path the sequential loop takes
-    once the earlier result is recorded."""
+    once the earlier result is recorded.
+
+    Every blob this stage fetches (history image, cached return, img2img
+    reference, archived latent) goes through a verified fetch: a blob
+    whose bytes no longer match the CRC recorded at archive time is
+    PURGED (VDB slots evicted — journaled like any eviction — blob
+    deleted, scheduler history invalidated, a fault charged to the owning
+    node's health) and the request DEGRADES to the full txt2img miss path
+    — a correct image at full step cost, never a result conditioned on
+    garbage (``Plan.degraded`` marks these for the stats)."""
 
     name = "Plan"
 
@@ -500,66 +524,135 @@ class PlanStage:
                 pending_vecs.append(qv)
                 pending_req.append(-(int(handle) + 1))
         for s in ctx.states:
-            d = s.decision
             pend_sim, pend_j = -np.inf, -1
             if pending_vecs:
                 sims = np.stack(pending_vecs) @ s.qvec
                 pj = int(np.argmax(sims))
                 pend_sim, pend_j = float(sims[pj]), pending_req[pj]
-            if d.fast_path == "history":
-                if pend_sim > d.match_score:   # later history entry wins
-                    s.plan = Plan(kind="alias", target=pend_j)
-                else:
-                    s.plan = Plan(kind="history", image=system.blob_store.get(
-                        d.history_payload))
-                continue
-            if (system.use_scheduler
-                    and pend_sim >= system.scheduler.dedup_threshold):
-                # sequential serve would history-hit the in-flight record
-                system.scheduler.count_history_hit()
-                system.scheduler.uncount_prompt(s.pkey)
+            try:
+                self._plan_one(system, s, pend_sim, pend_j)
+            except CorruptReferenceError:
+                self._degrade(system, s)
+            if s.plan.kind == "gen":
+                pending_vecs.append(s.qvec)
+                pending_req.append(s.index)
+
+    def _plan_one(self, system, s: RequestState, pend_sim: float,
+                  pend_j: int) -> None:
+        """Set ``s.plan`` for one request (the Algorithm 1 walk body).
+        Raises :class:`CorruptReferenceError` if any blob it needs fails
+        verification — the caller degrades the request."""
+        d = s.decision
+        if d.fast_path == "history":
+            if pend_sim > d.match_score:   # later history entry wins
                 s.plan = Plan(kind="alias", target=pend_j)
-                continue
-            node = d.node
-            if d.fast_path == "priority":
-                s.plan = Plan(kind="gen", node=node, route=Route.TXT2IMG,
-                              steps=system.policy.steps_full,
-                              fast="priority", score=0.0)
-                pending_vecs.append(s.qvec)
-                pending_req.append(s.index)
-                continue
-            if s.score_thunk is not None:
-                s.score_thunk()
-            db = system.dbs[node]
-            route = (system.policy.route(s.best_score) if s.best_slot >= 0
-                     else Route.TXT2IMG)
-            steps = system.policy.steps_for(route)
-            if route is not Route.TXT2IMG:
-                plan = self._depth_plan(system, s, db, node, route)
-                if plan is not None:
-                    s.plan = plan
-                    if plan.kind == "gen":
-                        pending_vecs.append(s.qvec)
-                        pending_req.append(s.index)
-                    continue
-            if route is Route.HIT_RETURN:
-                db.mark_access(np.array([s.best_slot]), s.clock)
-                s.plan = Plan(kind="cached", node=node, score=s.best_score,
-                              image=system.blob_store.get(
-                                  int(db.payload_ids[s.best_slot])))
-            elif route is Route.IMG2IMG:
-                db.mark_access(np.array([s.best_slot]), s.clock)
-                s.plan = Plan(kind="gen", node=node, route=route, steps=steps,
-                              score=s.best_score,
-                              ref=system.blob_store.get(
-                                  int(db.payload_ids[s.best_slot])))
-                pending_vecs.append(s.qvec)
-                pending_req.append(s.index)
             else:
-                s.plan = Plan(kind="gen", node=node, route=route, steps=steps,
-                              score=s.best_score)
-                pending_vecs.append(s.qvec)
-                pending_req.append(s.index)
+                s.plan = Plan(kind="history", image=self._fetch_payload(
+                    system, int(d.history_payload)))
+            return
+        if (system.use_scheduler
+                and pend_sim >= system.scheduler.dedup_threshold):
+            # sequential serve would history-hit the in-flight record
+            system.scheduler.count_history_hit()
+            system.scheduler.uncount_prompt(s.pkey)
+            s.plan = Plan(kind="alias", target=pend_j)
+            return
+        node = d.node
+        if d.fast_path == "priority":
+            s.plan = Plan(kind="gen", node=node, route=Route.TXT2IMG,
+                          steps=system.policy.steps_full,
+                          fast="priority", score=0.0)
+            return
+        if s.score_thunk is not None:
+            s.score_thunk()
+        db = system.dbs[node]
+        route = (system.policy.route(s.best_score) if s.best_slot >= 0
+                 else Route.TXT2IMG)
+        steps = system.policy.steps_for(route)
+        if route is not Route.TXT2IMG:
+            plan = self._depth_plan(system, s, db, node, route)
+            if plan is not None:
+                s.plan = plan
+                return
+        if route is Route.HIT_RETURN:
+            s.plan = Plan(kind="cached", node=node, score=s.best_score,
+                          image=self._fetch_slot(system, db, s.best_slot,
+                                                 s.clock))
+        elif route is Route.IMG2IMG:
+            s.plan = Plan(kind="gen", node=node, route=route, steps=steps,
+                          score=s.best_score,
+                          ref=self._fetch_slot(system, db, s.best_slot,
+                                               s.clock))
+        else:
+            s.plan = Plan(kind="gen", node=node, route=route, steps=steps,
+                          score=s.best_score)
+
+    # -- verified fetches / degraded mode -------------------------------------
+
+    @staticmethod
+    def _fetch_payload(system, payload: int) -> np.ndarray:
+        """Blob fetch with verify-on-hit: checksum-failing blobs are
+        quarantined and the fetch raises instead of returning bytes."""
+        store = system.blob_store
+        verify = getattr(store, "verify", None)
+        if verify is not None and not verify(payload):
+            PlanStage._quarantine(system, payload)
+            raise CorruptReferenceError(
+                f"archived blob {payload} failed its checksum")
+        return store.get(payload)
+
+    @staticmethod
+    def _fetch_slot(system, db, slot: int, clock: float) -> np.ndarray:
+        """Verified fetch of a VDB slot's blob; marks the access (exactly
+        the pre-verify behaviour) only once the bytes check out."""
+        payload = int(db.payload_ids[slot])
+        store = system.blob_store
+        verify = getattr(store, "verify", None)
+        if verify is not None and not verify(payload):
+            PlanStage._quarantine(system, payload)
+            raise CorruptReferenceError(
+                f"archived blob {payload} failed its checksum")
+        db.mark_access(np.array([slot]), clock)
+        return store.get(payload)
+
+    @staticmethod
+    def _quarantine(system, payload: int) -> None:
+        """Purge one checksum-failing blob everywhere it is referenced:
+        evict its VDB slots (journaled like any eviction, cluster rows
+        invalidated by the eviction observer), delete the blob, drop it
+        from scheduler history, and charge a fault to the owning node's
+        health.  After this no path can ever serve the bytes."""
+        owner = -1
+        for node, db in enumerate(getattr(system, "dbs", ())):
+            slots = np.flatnonzero(db.valid & (db.payload_ids == payload))
+            if len(slots):
+                if owner < 0:
+                    owner = node
+                db.evict_slots(slots)
+        system.blob_store.delete(payload)
+        if getattr(system, "use_scheduler", False):
+            system.scheduler.invalidate_payloads([payload])
+            if owner >= 0:
+                system.scheduler.observe_fault(owner, kind="corrupt")
+        stats = getattr(system, "stats", None)
+        if stats is not None:
+            stats.corrupt_hits += 1
+
+    @staticmethod
+    def _degrade(system, s: RequestState) -> None:
+        """Corrupt reference detected mid-plan: serve the request through
+        the full txt2img miss path (correct image, full step cost).  The
+        corrupt entry was already purged by :meth:`_quarantine`."""
+        node = s.decision.node
+        if node < 0:    # history fast path carries no node
+            if getattr(system, "use_scheduler", False):
+                node = max(system.scheduler._routable_nodes(),
+                           key=lambda n: n.speed).index
+            else:
+                node = int(s.clock) % len(system.dbs)
+        s.plan = Plan(kind="gen", node=node, route=Route.TXT2IMG,
+                      steps=system.policy.steps_full, score=0.0,
+                      degraded=True)
 
     @staticmethod
     def _depth_plan(system, s: RequestState, db, node: int,
@@ -596,22 +689,20 @@ class PlanStage:
         matched_finished = int(db.depth[s.best_slot]) < 0
 
         def resume(k: int, slot: int) -> Plan:
-            db.mark_access(np.array([slot]), s.clock)
             return Plan(kind="gen", node=node, route=Route.IMG2IMG,
                         steps=system.policy.steps_for_resume(k),
                         score=s.best_score, resume_k=k,
-                        latent=system.blob_store.get(
-                            int(db.payload_ids[slot])))
+                        latent=PlanStage._fetch_slot(system, db, slot,
+                                                     s.clock))
 
         if route is Route.HIT_RETURN:
             if fin:
                 if matched_finished:
                     return None         # classic cached return
                 slot = fin[0]
-                db.mark_access(np.array([slot]), s.clock)
                 return Plan(kind="cached", node=node, score=s.best_score,
-                            image=system.blob_store.get(
-                                int(db.payload_ids[slot])))
+                            image=PlanStage._fetch_slot(system, db, slot,
+                                                        s.clock))
             if not lat:
                 return None
             k = max(lat)                # strongest match → resume deepest
@@ -628,12 +719,11 @@ class PlanStage:
             if matched_finished:
                 return None
             slot = fin[0]
-            db.mark_access(np.array([slot]), s.clock)
             return Plan(kind="gen", node=node, route=Route.IMG2IMG,
                         steps=system.policy.steps_for(Route.IMG2IMG),
                         score=s.best_score,
-                        ref=system.blob_store.get(
-                            int(db.payload_ids[slot])))
+                        ref=PlanStage._fetch_slot(system, db, slot,
+                                                  s.clock))
         else:
             k = min(lat)                # overshoot: shallowest latent left
         return resume(k, lat[k])
@@ -642,7 +732,14 @@ class PlanStage:
 class GenerateStage:
     """One padded backend call per (node, workflow, steps) group; latent
     resumes additionally group by depth (same AOT bucket family — one
-    compiled program per (resume depth, steps, batch bucket))."""
+    compiled program per (resume depth, steps, batch bucket)).
+
+    Every backend call runs through :meth:`_call`: a
+    :class:`TransientBackendError` is retried up to
+    ``system.transient_retries`` times, with each failed attempt charged
+    to the group's node health (``scheduler.observe_fault``) and each
+    success clearing the streak (``observe_ok``) — fault-free runs keep
+    health at exactly 1.0, so routing stays bit-identical."""
 
     name = "Generate"
 
@@ -662,25 +759,51 @@ class GenerateStage:
             grp = img_groups if s.plan.ref is not None else txt_groups
             grp.setdefault((s.plan.node, s.plan.steps), []).append(s)
         for (node, steps), members in txt_groups.items():
-            out = np.asarray(system.backend.txt2img_batch(
-                [m.prompt for m in members], steps,
-                [m.seed for m in members]))
+            out = self._call(system, node, system.backend.txt2img_batch,
+                             [m.prompt for m in members], steps,
+                             [m.seed for m in members])
             for j, m in enumerate(members):
                 m.image = np.asarray(out[j])
         for (node, steps), members in img_groups.items():
             refs = np.stack([m.plan.ref for m in members])
-            out = np.asarray(system.backend.img2img_batch(
-                [m.prompt for m in members], refs, steps,
-                [m.seed for m in members]))
+            out = self._call(system, node, system.backend.img2img_batch,
+                             [m.prompt for m in members], refs, steps,
+                             [m.seed for m in members])
             for j, m in enumerate(members):
                 m.image = np.asarray(out[j])
         for (node, k, steps), members in res_groups.items():
             lats = np.stack([m.plan.latent for m in members])
-            out = np.asarray(system.backend.resume_batch(
-                [m.prompt for m in members], lats, steps + k, k,
-                [m.seed for m in members]))
+            out = self._call(system, node, system.backend.resume_batch,
+                             [m.prompt for m in members], lats, steps + k, k,
+                             [m.seed for m in members])
             for j, m in enumerate(members):
                 m.image = np.asarray(out[j])
+
+    @staticmethod
+    def _call(system, node: int, fn, *args) -> np.ndarray:
+        """One backend call with transient-fault retry and health
+        bookkeeping; the final failed attempt re-raises so no request is
+        ever silently dropped."""
+        retries = getattr(system, "transient_retries", 0)
+        sched = (system.scheduler
+                 if getattr(system, "use_scheduler", False) else None)
+        attempt = 0
+        while True:
+            try:
+                out = np.asarray(fn(*args))
+            except TransientBackendError:
+                if sched is not None and 0 <= node < len(sched.nodes):
+                    sched.observe_fault(node, kind="transient")
+                stats = getattr(system, "stats", None)
+                if stats is not None:
+                    stats.transient_retries += 1
+                attempt += 1
+                if attempt > retries:
+                    raise
+                continue
+            if sched is not None and 0 <= node < len(sched.nodes):
+                sched.observe_ok(node)
+            return out
 
 
 def _do_archive(system, s: RequestState) -> None:
@@ -791,7 +914,8 @@ class FinishStage:
                     s.image, p.route, p.node, p.score, wall,
                     steps=p.steps,
                     resumed_from=(p.resume_k if p.latent is not None
-                                  else -1))
+                                  else -1),
+                    degraded=p.degraded)
             # exact crossing: sweep the moment the counter hits a multiple
             if system.stats.requests % interval == 0:
                 system.maintain()

@@ -44,17 +44,47 @@ from repro.core.vdb import VectorDB
 from repro.utils import l2n
 
 
+class UnknownNodeError(ValueError):
+    """A node index outside the fleet was passed to a scheduler/fleet
+    operation (``mark_failed`` / ``fail_node`` / ``rejoin_node`` / ...).
+    Raised instead of letting Python's negative indexing silently alias
+    the LAST node — the bug class this error type exists to surface."""
+
+
+@dataclass
+class NodeHealth:
+    """Per-node health state driving degraded-mode serving.
+
+    ``ewma`` is an exponentially weighted success score in [0, 1]: every
+    observed fault (transient backend error, stall, corrupt reference)
+    decays it toward 0, every success pulls it back toward 1.  A
+    fault-free node stays at EXACTLY 1.0 (``1 + a*(1-1) == 1``), so the
+    routing penalty is exactly 0 and fault-free routing is bitwise
+    unchanged.  The circuit breaker quarantines a node after
+    ``breaker_threshold`` consecutive faults (``state="open"`` — treated
+    like dead by routing while alternatives exist), then probes it back
+    in after ``breaker_cooldown`` scheduling rounds (``"half_open"``:
+    routable again, one success closes it, one fault reopens it)."""
+
+    ewma: float = 1.0
+    consecutive_faults: int = 0
+    state: str = "closed"        # closed | open | half_open
+    cooldown: int = 0            # scheduling rounds until open -> half_open
+
+
 @dataclass
 class NodeInfo:
     """Per-node scheduling state: relative denoise-step throughput
     (``speed``, the paper's heterogeneous RTX mix), current ``queue_depth``
-    (the load-penalty input), and liveness (``alive=False`` nodes are
-    never routed to — see ``CacheGenius.fail_node``)."""
+    (the load-penalty input), liveness (``alive=False`` nodes are
+    never routed to — see ``CacheGenius.fail_node``), and the fault
+    ``health`` score / circuit-breaker state (see :class:`NodeHealth`)."""
 
     index: int
     speed: float = 1.0           # relative denoise-step throughput (RTX mix)
     queue_depth: int = 0
     alive: bool = True
+    health: NodeHealth = field(default_factory=NodeHealth)
 
 
 @dataclass
@@ -101,6 +131,13 @@ class RequestScheduler:
     history_capacity: int = 4096
     affinity_weight: float = 0.10
     latency_weight: float = 0.05
+    # health-aware degraded-mode serving (see NodeHealth): EWMA decay per
+    # observation, routing penalty per unit of lost health, consecutive
+    # faults before the breaker opens, scheduling rounds before probing
+    health_alpha: float = 0.25
+    health_weight: float = 0.20
+    breaker_threshold: int = 3
+    breaker_cooldown: int = 8
     policy: Optional[object] = None          # GenerationPolicy (score mode)
     latency_model: Optional[object] = None   # LatencyModel (score mode)
     _hist_vecs: np.ndarray = field(default=None, repr=False)  # type: ignore
@@ -143,13 +180,13 @@ class RequestScheduler:
             return ScheduleDecision(node=-1, fast_path="history",
                                     history_payload=hist, match_score=1.0)
 
+        self._breaker_tick()
         # fast path 2: quality-aware priority scheduling for repeated prompts
         if prompt_key is not None:
             c = self._prompt_counts.get(prompt_key, 0)
             self._prompt_counts[prompt_key] = c + 1
             if quality_tier and c > 0:
-                fastest = max((n for n in self.nodes if n.alive),
-                              key=lambda n: n.speed)
+                fastest = max(self._routable_nodes(), key=lambda n: n.speed)
                 fastest.queue_depth += 1
                 return ScheduleDecision(node=fastest.index, fast_path="priority")
 
@@ -157,11 +194,15 @@ class RequestScheduler:
         reps = self.node_vectors(dbs)
         q = prompt_vec / max(np.linalg.norm(prompt_vec), 1e-12)
         sims = reps @ q
+        routable = {n.index for n in self._routable_nodes()}
         for n in self.nodes:
-            if not n.alive:
+            if n.index not in routable:
                 sims[n.index] = -np.inf
             else:
                 sims[n.index] -= self.balance_weight * n.queue_depth
+                pen = self.health_weight * (1.0 - n.health.ewma)
+                if pen:
+                    sims[n.index] -= pen
         node = int(np.argmax(sims))
         self.nodes[node].queue_depth += 1
         return ScheduleDecision(node=node, match_score=float(sims[node]))
@@ -197,6 +238,7 @@ class RequestScheduler:
         ``match_score`` so callers can arbitrate against in-flight
         (not-yet-archived) batch members.
         """
+        self._breaker_tick()
         P = np.atleast_2d(np.asarray(prompt_vecs, np.float32))
         b = P.shape[0]
         tiers = list(quality_tiers) if quality_tiers is not None else [False] * b
@@ -224,7 +266,7 @@ class RequestScheduler:
                 c = self._prompt_counts.get(keys[i], 0)
                 self._prompt_counts[keys[i]] = c + 1
                 if tiers[i] and c > 0:
-                    fastest = max((n for n in self.nodes if n.alive),
+                    fastest = max(self._routable_nodes(),
                                   key=lambda n: n.speed)
                     decisions.append(ScheduleDecision(node=fastest.index,
                                                       fast_path="priority"))
@@ -237,11 +279,15 @@ class RequestScheduler:
                     node=node, match_score=float(node_scores[i][node])))
                 continue
             sims = base_sims[i].copy()
+            routable = {n.index for n in self._routable_nodes()}
             for n in self.nodes:
-                if not n.alive:
+                if n.index not in routable:
                     sims[n.index] = -np.inf
                 else:
                     sims[n.index] -= self.balance_weight * n.queue_depth
+                    pen = self.health_weight * (1.0 - n.health.ewma)
+                    if pen:
+                        sims[n.index] -= pen
             node = int(np.argmax(sims))
             decisions.append(ScheduleDecision(node=node,
                                               match_score=float(sims[node])))
@@ -275,11 +321,15 @@ class RequestScheduler:
         """
         util = (np.asarray(best_row, np.float64)
                 + self.affinity_weight * np.asarray(centroid_row, np.float64))
+        routable = {n.index for n in self._routable_nodes()}
         for n in self.nodes:
-            if not n.alive:
+            if n.index not in routable:
                 util[n.index] = -np.inf
                 continue
             util[n.index] -= self.balance_weight * n.queue_depth
+            pen = self.health_weight * (1.0 - n.health.ewma)
+            if pen:
+                util[n.index] -= pen
             if lat_full:
                 route = self.policy.route(float(best_row[n.index]))
                 lat = self.latency_model.latency(
@@ -349,10 +399,76 @@ class RequestScheduler:
         self._hist_vecs = self._hist_vecs[keep]
         self._hist_payloads = [self._hist_payloads[i] for i in keep]
 
+    # -- health / circuit breaker ------------------------------------------------
+
+    def _check_node(self, node: int) -> None:
+        if not (0 <= node < len(self.nodes)):
+            raise UnknownNodeError(
+                f"unknown node index {node} (fleet has {len(self.nodes)} "
+                f"nodes; negative indices are rejected, not aliased)")
+
+    def observe_fault(self, node: int, kind: str = "transient") -> None:
+        """Record one fault observation against ``node`` (transient
+        backend error, stall, corrupt blob).  Decays the health EWMA and
+        advances the circuit breaker: ``breaker_threshold`` consecutive
+        faults — or any fault while half-open — open it."""
+        self._check_node(node)
+        h = self.nodes[node].health
+        h.ewma = (1.0 - self.health_alpha) * h.ewma
+        h.consecutive_faults += 1
+        if (h.state == "half_open"
+                or h.consecutive_faults >= self.breaker_threshold):
+            h.state = "open"
+            h.cooldown = self.breaker_cooldown
+            h.consecutive_faults = 0
+
+    def observe_ok(self, node: int) -> None:
+        """Record one successful serve: health recovers toward 1.0, the
+        consecutive-fault streak resets, and a half-open breaker closes
+        (the probe succeeded)."""
+        self._check_node(node)
+        h = self.nodes[node].health
+        h.ewma += self.health_alpha * (1.0 - h.ewma)
+        h.consecutive_faults = 0
+        if h.state == "half_open":
+            h.state = "closed"
+
+    def _breaker_tick(self) -> None:
+        """One scheduling round: open breakers count down their cooldown
+        and transition to half-open (routable again, one strike allowed)
+        when it expires."""
+        for n in self.nodes:
+            h = n.health
+            if h.state == "open":
+                h.cooldown -= 1
+                if h.cooldown <= 0:
+                    h.state = "half_open"
+
+    def _routable_nodes(self) -> List[NodeInfo]:
+        """Alive nodes minus open-breaker quarantine, in fleet order (so
+        tie-breaks match the pre-health router bit-for-bit).  If EVERY
+        alive node is quarantined, degrade to all alive nodes — serving
+        beats refusing.  No alive nodes at all is a hard error."""
+        alive = [n for n in self.nodes if n.alive]
+        if not alive:
+            raise RuntimeError("no alive nodes to route to")
+        routable = [n for n in alive if n.health.state != "open"]
+        return routable or alive
+
     # -- failures / elasticity --------------------------------------------------
 
     def mark_failed(self, node: int) -> None:
+        self._check_node(node)
         self.nodes[node].alive = False
+
+    def mark_alive(self, node: int) -> None:
+        """Rejoin a previously failed node: alive, empty queue, fresh
+        health (speed is a property of the hardware and survives)."""
+        self._check_node(node)
+        n = self.nodes[node]
+        n.alive = True
+        n.queue_depth = 0
+        n.health = NodeHealth()
 
     def add_node(self, *, speed: float = 1.0) -> int:
         """Register one fresh node (graceful join): it starts alive with

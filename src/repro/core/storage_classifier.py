@@ -23,6 +23,9 @@ class StorageClassifier:
         self.n_nodes = n_nodes
         self.iters = iters
         self.centroids: Optional[np.ndarray] = None  # (n_nodes, d)
+        # node index owning each centroid row — failures drop rows, so
+        # after the first reassignment row i is NOT node i anymore
+        self.centroid_nodes: List[int] = list(range(n_nodes))
         self.modal_consistency: Optional[float] = None
 
     def fit(self, img_vecs: np.ndarray, txt_vecs: Optional[np.ndarray] = None,
@@ -34,6 +37,7 @@ class StorageClassifier:
         """
         state = kmeans_fit(jnp.asarray(img_vecs), k=self.n_nodes, iters=self.iters)
         self.centroids = np.asarray(state.centroids)
+        self.centroid_nodes = list(range(self.n_nodes))
         assignment = np.asarray(state.assignment)
         if txt_vecs is not None:
             t_state = kmeans_fit(jnp.asarray(txt_vecs), k=self.n_nodes,
@@ -67,25 +71,42 @@ class StorageClassifier:
         return dbs
 
     def reassign_failed_node(self, dbs: Sequence[VectorDB], failed: int,
-                             t: float) -> None:
+                             t: float,
+                             survivors: Optional[Sequence[int]] = None,
+                             ) -> None:
         """Node-failure recovery: move the failed node's entries to the
-        nearest surviving centroid's VDB and drop the failed centroid."""
+        nearest surviving centroid's VDB and drop the failed centroid.
+
+        ``centroid_nodes`` maps centroid rows back to node indices —
+        failures drop rows, so after one failure row i no longer belongs
+        to node i and a second failure must look its row up.  ``survivors``
+        restricts receivers (callers pass the ALIVE fleet so entries are
+        never reassigned onto an earlier casualty); default: every node
+        that still owns a centroid row, minus ``failed``."""
         assert self.centroids is not None
         db = dbs[failed]
-        survivors = [i for i in range(len(dbs)) if i != failed]
-        surv_cents = self.centroids[survivors]
+        if survivors is None:
+            survivors = [n for n in self.centroid_nodes if n != failed]
+        surv_rows = [r for r, n in enumerate(self.centroid_nodes)
+                     if n in set(survivors) and n != failed]
+        surv_nodes = [self.centroid_nodes[r] for r in surv_rows]
+        if not surv_nodes:
+            return
+        surv_cents = self.centroids[surv_rows]
         sel = np.flatnonzero(db.valid)
         if sel.size:
             idx, _ = kmeans_assign(jnp.asarray(db.img_vecs[sel]),
                                    jnp.asarray(surv_cents))
             idx = np.asarray(idx)
-            for j, ni in enumerate(survivors):
+            for j, ni in enumerate(surv_nodes):
                 pick = sel[idx == j]
                 if pick.size:
                     dbs[ni].add(db.img_vecs[pick], db.txt_vecs[pick],
                                 db.payload_ids[pick], t=t)
             db.evict_slots(sel)
-        self.centroids = surv_cents
+        keep = [r for r, n in enumerate(self.centroid_nodes) if n != failed]
+        self.centroids = self.centroids[keep]
+        self.centroid_nodes = [self.centroid_nodes[r] for r in keep]
 
 
 def _cluster_agreement(a: np.ndarray, b: np.ndarray, k: int) -> float:

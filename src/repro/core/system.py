@@ -104,6 +104,9 @@ class ServeResult:
     queue_delay: float = 0.0  # submission -> pipeline admission (caller clock)
     wall_total: float = 0.0   # pipeline admission -> Finish, measured
     stage_walls: Dict[str, float] = field(default_factory=dict)
+    # degraded mode: the matched reference failed its checksum and the
+    # request was served through the full txt2img miss path instead
+    degraded: bool = False
 
 
 @dataclass
@@ -121,6 +124,11 @@ class ServeStats:
     reference_hits: int = 0    # IMG2IMG
     total_steps: int = 0       # denoising steps actually executed
     latent_resumes: int = 0    # requests resumed from an archived latent
+    # fault-domain accounting (repro.core.pipeline verified fetches /
+    # transient retry; repro.faults chaos harness)
+    corrupt_hits: int = 0      # checksum-failing blobs caught at hit time
+    degraded_serves: int = 0   # requests degraded to the txt2img miss path
+    transient_retries: int = 0  # failed backend attempts that were retried
 
     def record(self, r: ServeResult) -> None:
         self.requests += 1
@@ -132,6 +140,8 @@ class ServeStats:
         self.total_steps += r.steps
         if r.resumed_from >= 0:
             self.latent_resumes += 1
+        if r.degraded:
+            self.degraded_serves += 1
         if r.route is Route.HIT_RETURN or r.fast_path == "history":
             self.cache_hits += 1
         elif r.route is Route.IMG2IMG:
@@ -163,6 +173,7 @@ class CacheGenius:
                  cache_capacity: Optional[int] = None,
                  maintenance_interval: int = 200,
                  topk: int = 8,
+                 transient_retries: int = 2,
                  use_scheduler: bool = True,
                  use_prompt_optimizer: bool = True,
                  use_cluster_index: bool = True,
@@ -188,6 +199,9 @@ class CacheGenius:
         self.cache_capacity = cache_capacity or sum(db.capacity for db in self.dbs)
         self.maintenance_interval = maintenance_interval
         self.topk = topk
+        # how many times the Generate stage retries a backend call that
+        # raised TransientBackendError before letting it propagate
+        self.transient_retries = int(transient_retries)
         self.use_scheduler = use_scheduler
         self.use_prompt_optimizer = use_prompt_optimizer
         # device-resident cross-node retrieval engine: the fleet's cache
@@ -309,7 +323,7 @@ class CacheGenius:
         self.scheduler.record_result(pvec, pid)
 
     def _finish(self, img, route, node, score, wall, *, steps, retrieved=True,
-                fast=None, resumed_from=-1) -> ServeResult:
+                fast=None, resumed_from=-1, degraded=False) -> ServeResult:
         speed = (self.scheduler.nodes[node].speed if 0 <= node < len(self.dbs)
                  else max(n.speed for n in self.scheduler.nodes))
         lat = self.latency_model.latency(route, steps, node_speed=speed,
@@ -322,7 +336,7 @@ class CacheGenius:
         res = ServeResult(image=img, route=route, node=node, score=score,
                           latency=lat, wall_latency=wall,
                           steps=steps, fast_path=fast,
-                          resumed_from=resumed_from)
+                          resumed_from=resumed_from, degraded=degraded)
         self.stats.record(res)
         return res
 
@@ -339,10 +353,86 @@ class CacheGenius:
         return evicted
 
     def fail_node(self, node: int) -> None:
-        """Edge-node failure: reassign its VDB shard, stop routing to it."""
+        """GRACEFUL edge-node failure: reassign its VDB shard, stop
+        routing to it.
+
+        Hardened edges (pinned by tests): an unknown node index raises
+        :class:`repro.core.scheduler.UnknownNodeError`; failing an
+        already-dead node is a NO-OP (a second call must not re-run the
+        classifier reassignment, which would shrink its centroids
+        again); failing the last alive node raises ``RuntimeError`` —
+        an empty fleet cannot serve."""
+        self.scheduler._check_node(node)
+        if not self.scheduler.nodes[node].alive:
+            return
+        if sum(n.alive for n in self.scheduler.nodes) == 1:
+            raise RuntimeError(
+                f"cannot fail node {node}: it is the last alive node")
         self.scheduler.mark_failed(node)
         if self.classifier is not None:
-            self.classifier.reassign_failed_node(self.dbs, node, self.clock)
+            alive = [n.index for n in self.scheduler.nodes if n.alive]
+            self.classifier.reassign_failed_node(self.dbs, node, self.clock,
+                                                 survivors=alive)
+
+    def crash_node(self, node: int) -> VectorDB:
+        """HARD crash: the node stops routing and its in-memory cache is
+        LOST — unlike :meth:`fail_node`, nothing is reassigned (a crash
+        takes its data down with it; durability comes from the node's
+        :class:`repro.core.journal.CacheJournal`, if one was attached).
+        The node's ``VectorDB`` is swapped for a fresh empty one and the
+        cluster slabs are re-stacked.  Returns the dead db (diagnostic
+        surface — e.g. to compare against a journal replay)."""
+        self.scheduler._check_node(node)
+        if not self.scheduler.nodes[node].alive:
+            raise RuntimeError(f"node {node} is already dead")
+        if sum(n.alive for n in self.scheduler.nodes) == 1:
+            raise RuntimeError(
+                f"cannot crash node {node}: it is the last alive node")
+        self.scheduler.mark_failed(node)
+        old = self.dbs[node]
+        old.detach_journal()
+        fresh = VectorDB(old.dim, old.capacity, name=old.name,
+                         use_pallas=old.use_pallas, interpret=old.interpret)
+        if self.cluster_index is not None:
+            old.unregister_cluster(self.cluster_index)
+        self.dbs[node] = fresh
+        self._restack_cluster()
+        return old
+
+    def rejoin_node(self, node: int,
+                    db: Optional[VectorDB] = None) -> None:
+        """Rejoin a failed/crashed node through the join-path machinery
+        (scheduler slot revived, cluster slabs re-stacked via
+        ``ClusterIndex.from_dbs`` — ONE upload, same as :meth:`join_node`).
+
+        ``db`` replaces the node's current ``VectorDB`` before rejoining —
+        the durability path hands a ``CacheJournal.replay`` result here so
+        the node comes back with its pre-crash cache instead of cold.
+        ``None`` rejoins with whatever the node holds (empty after a
+        crash, its old shard after a graceful fail)."""
+        self.scheduler._check_node(node)
+        if self.scheduler.nodes[node].alive:
+            raise RuntimeError(f"node {node} is alive — nothing to rejoin")
+        if db is not None:
+            cur = self.dbs[node]
+            if (db.dim, db.capacity) != (cur.dim, cur.capacity):
+                raise ValueError(
+                    f"replacement db shape ({db.dim}, {db.capacity}) != "
+                    f"node {node} shape ({cur.dim}, {cur.capacity})")
+            if self.cluster_index is not None:
+                cur.unregister_cluster(self.cluster_index)
+            self.dbs[node] = db
+        self.scheduler.mark_alive(node)
+        self._restack_cluster()
+
+    def _restack_cluster(self) -> None:
+        """Rebuild the device-resident cluster slabs from the fleet's
+        current numpy state (one upload; see :meth:`join_node`)."""
+        if self.cluster_index is None:
+            return
+        for d in self.dbs:
+            d.unregister_cluster(self.cluster_index)
+        self.cluster_index = ClusterIndex.from_dbs(self.dbs)
 
     def join_node(self, *, speed: float = 1.0,
                   capacity: Optional[int] = None) -> int:
@@ -375,10 +465,7 @@ class CacheGenius:
         self.dbs.append(db)
         self.scheduler.add_node(speed=speed)
         self.cache_capacity += cap
-        if self.cluster_index is not None:
-            for d in self.dbs:
-                d.unregister_cluster(self.cluster_index)
-            self.cluster_index = ClusterIndex.from_dbs(self.dbs)
+        self._restack_cluster()
         return node
 
     @property

@@ -22,6 +22,7 @@ paper's NFS layer).
 """
 from __future__ import annotations
 
+import zlib
 from functools import partial
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -37,16 +38,26 @@ _SCORE_FLOOR = -1e29
 
 
 class BlobStore:
-    """The shared image store (paper: 500GB NFS PersistentVolume)."""
+    """The shared image store (paper: 500GB NFS PersistentVolume).
+
+    Every ``put`` records the blob's CRC32 so hits can be verified before
+    a cached/reference image is ever conditioned on (``verify`` — the
+    Plan stage's verify-on-hit path; see ``repro.core.pipeline``).
+    ``corrupt`` is the deterministic chaos surface: it perturbs the
+    stored pixels WITHOUT refreshing the checksum, modelling silent NFS
+    bit-rot that only a verify-on-hit can catch."""
 
     def __init__(self):
         self._blobs: Dict[int, np.ndarray] = {}
+        self._sums: Dict[int, int] = {}
         self._next = 0
 
     def put(self, blob: np.ndarray) -> int:
         bid = self._next
         self._next += 1
-        self._blobs[bid] = np.asarray(blob)
+        blob = np.asarray(blob)
+        self._blobs[bid] = blob
+        self._sums[bid] = zlib.crc32(blob.tobytes())
         return bid
 
     def get(self, bid: int) -> np.ndarray:
@@ -54,6 +65,30 @@ class BlobStore:
 
     def delete(self, bid: int) -> None:
         self._blobs.pop(bid, None)
+        self._sums.pop(bid, None)
+
+    def verify(self, bid: int) -> bool:
+        """True iff the blob exists and its bytes still match the
+        checksum recorded at ``put`` time."""
+        blob = self._blobs.get(bid)
+        if blob is None:
+            return False
+        return zlib.crc32(blob.tobytes()) == self._sums.get(bid)
+
+    def corrupt(self, bid: int, rng: Optional[np.random.Generator] = None,
+                ) -> None:
+        """Deterministically damage a stored blob in place (chaos/test
+        surface): a seeded perturbation of its pixels, leaving the
+        recorded checksum stale so ``verify`` fails."""
+        blob = self._blobs.get(bid)
+        if blob is None:
+            return
+        rng = rng or np.random.default_rng(bid)
+        noisy = np.asarray(blob, np.float32).copy()
+        flat = noisy.reshape(-1)
+        idx = rng.integers(0, flat.size, size=max(1, flat.size // 16))
+        flat[idx] += rng.standard_normal(len(idx)).astype(np.float32) * 8.0
+        self._blobs[bid] = noisy.reshape(np.shape(blob))
 
     def __len__(self) -> int:
         return len(self._blobs)
@@ -151,6 +186,23 @@ class VectorDB:
         self._cent_count = 0
         # ClusterIndex views over this node's slab (usually 0 or 1)
         self._clusters: List[Tuple[object, int]] = []
+        # durability journal (repro.core.journal) — every mutation below
+        # records its RAW arguments before the slab changes
+        self._journal = None
+
+    # -- durability journal -------------------------------------------------
+
+    def attach_journal(self, journal) -> None:
+        """Attach a :class:`repro.core.journal.CacheJournal`: every
+        ``add`` / ``evict_slots`` / ``mark_access`` appends one WAL
+        record (raw call arguments) BEFORE mutating the slab, so a crash
+        at any instant replays to exactly the pre-crash state."""
+        self._journal = journal
+        journal.bind(self)
+
+    def detach_journal(self):
+        j, self._journal = self._journal, None
+        return j
 
     # -- cluster registration ----------------------------------------------
 
@@ -189,6 +241,9 @@ class VectorDB:
         depth -1 (the default) marks a finished image, k >= 0 a noised
         latent resumable at chain depth k; ``source_ids`` defaults to
         ``payload_ids`` (every finished image is its own source)."""
+        if self._journal is not None:   # WAL: raw args, before mutation
+            self._journal.record_add(img_vecs, txt_vecs, payload_ids, t,
+                                     depths, source_ids)
         img_vecs = _l2n(np.atleast_2d(np.asarray(img_vecs, np.float32)))
         txt_vecs = _l2n(np.atleast_2d(np.asarray(txt_vecs, np.float32)))
         payload_ids = np.atleast_1d(np.asarray(payload_ids, np.int64))
@@ -237,6 +292,8 @@ class VectorDB:
     def evict_slots(self, slots: np.ndarray) -> np.ndarray:
         """Invalidate slots; returns the payload ids to delete from the blob
         store (the paper synchronously removes image files for consistency)."""
+        if self._journal is not None:
+            self._journal.record_evict(slots)
         slots = np.atleast_1d(np.asarray(slots))
         payloads = self.payload_ids[slots].copy()
         uniq = np.unique(slots)
@@ -252,6 +309,8 @@ class VectorDB:
         return payloads
 
     def mark_access(self, slots: np.ndarray, t: float) -> None:
+        if self._journal is not None:
+            self._journal.record_access(slots, t)
         slots = np.atleast_1d(np.asarray(slots))
         self.access_count[slots] += 1
         self.last_access[slots] = t

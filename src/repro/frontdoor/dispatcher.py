@@ -33,8 +33,10 @@ from __future__ import annotations
 
 import threading
 import time
+import warnings
 from typing import Callable, List, Optional
 
+from repro.core.pipeline import TransientBackendError
 from repro.frontdoor.queue import FrontDoorQueue, Job
 from repro.frontdoor.results import GatewayClosedError, ResultStore
 from repro.runtime.serving import Request, ServingEngine
@@ -49,12 +51,18 @@ class Dispatcher:
     def __init__(self, engine: ServingEngine, queue: FrontDoorQueue,
                  store: ResultStore, *,
                  clock: Callable[[], float] = time.perf_counter,
-                 idle_wait: float = 0.005):
+                 idle_wait: float = 0.005,
+                 max_group_retries: int = 3,
+                 retry_backoff: float = 0.01):
         self.engine = engine
         self.queue = queue
         self.store = store
         self.clock = clock
         self.idle_wait = idle_wait
+        # transiently failed groups retry with doubling backoff before
+        # the whole group is failed to its handles
+        self.max_group_retries = int(max_group_retries)
+        self.retry_backoff = float(retry_backoff)
         self.groups_served = 0
         self.jobs_served = 0
         self._control: List[Callable[[], None]] = []
@@ -77,12 +85,25 @@ class Dispatcher:
              timeout: Optional[float] = None) -> None:
         """Stop the worker.  ``drain=True`` (default) serves everything
         already accepted first — the graceful path; ``drain=False`` fails
-        still-queued jobs with :class:`GatewayClosedError`."""
+        still-queued jobs with :class:`GatewayClosedError`.
+
+        If ``timeout`` expires with the worker still alive, a
+        ``RuntimeWarning`` is issued and the thread handle is KEPT (so
+        ``running`` stays truthful and a later ``stop`` can join it) —
+        earlier revisions dropped the handle silently, making hung
+        shutdowns invisible."""
         self._drain_on_stop = drain
         self._stop.set()
         self.queue.kick()
         if self._thread is not None:
             self._thread.join(timeout)
+            if self._thread.is_alive():
+                warnings.warn(
+                    f"dispatcher worker did not stop within {timeout}s "
+                    f"({len(self.queue)} jobs still queued); thread handle "
+                    "kept — call stop() again to re-join",
+                    RuntimeWarning, stacklevel=2)
+                return
             self._thread = None
 
     @property
@@ -149,13 +170,28 @@ class Dispatcher:
                          submitted_at=j.submitted_at,
                          tenant=j.tenant, tier=j.tier)
                  for j in jobs]
-        try:
-            completed = self.engine.serve_group(batch)
-        except Exception as exc:                 # fail the whole group
-            for j in jobs:
-                if j.handle is not None:
-                    j.handle._fail(exc)
-            return
+        backoff = self.retry_backoff
+        attempt = 0
+        while True:
+            try:
+                completed = self.engine.serve_group(batch)
+                break
+            except TransientBackendError as exc:
+                # transiently failed group: back off and retry (on top of
+                # the Generate stage's own in-call retry budget)
+                attempt += 1
+                if attempt > self.max_group_retries:
+                    for j in jobs:
+                        if j.handle is not None:
+                            j.handle._fail(exc)
+                    return
+                time.sleep(backoff)
+                backoff *= 2.0
+            except Exception as exc:             # fail the whole group
+                for j in jobs:
+                    if j.handle is not None:
+                        j.handle._fail(exc)
+                return
         done_at = self.clock()
         for job, comp in zip(jobs, completed):
             job.admitted_at = job.submitted_at + comp.queue_delay

@@ -24,6 +24,8 @@ from repro.core.system import CacheGenius, GenerationBackend
 from repro.core.trace import RequestTrace, merge_arrivals, poisson_arrivals
 from repro.core.vdb import BlobStore
 from repro.core.embeddings import ProxyClipEmbedder
+from repro.faults import FaultInjector, FaultSchedule, attach_journals
+from repro.faults.schedule import PRESETS as FAULT_PRESETS
 from repro.core.storage_classifier import StorageClassifier
 from repro.data.synthetic import make_corpus, render_caption
 from repro.runtime.serving import ServingEngine
@@ -155,6 +157,20 @@ def main() -> int:
     ap.add_argument("--slot-capacity", type=int, default=None,
                     help="slot-buffer capacity for --step-level "
                     "(default: --max-batch)")
+    ap.add_argument("--fault-schedule", default=None,
+                    choices=sorted(FAULT_PRESETS),
+                    help="with --continuous: run under a scripted chaos "
+                    "schedule (repro.faults preset, scaled to the fleet "
+                    "and trace), print the injector's audit report, and "
+                    "exit nonzero if ANY accepted job is lost")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the fault schedule's deterministic "
+                    "random draws (which blobs corrupt, etc.)")
+    ap.add_argument("--journal-dir", default=None,
+                    help="attach a per-node cache durability journal "
+                    "(WAL + snapshots) under this directory; crashed "
+                    "nodes in a --fault-schedule run then rejoin with "
+                    "their journal-replayed cache instead of cold")
     ap.add_argument("--tenants", type=int, default=0,
                     help="with --continuous: split the trace round-robin "
                     "across N tagged tenants (tiers cycle premium/"
@@ -172,6 +188,11 @@ def main() -> int:
         ap.error("--tenants requires --continuous")
     if args.step_level and not args.continuous:
         ap.error("--step-level requires --continuous")
+    if args.fault_schedule is not None and not args.continuous:
+        ap.error("--fault-schedule requires --continuous")
+    if args.fault_schedule is not None and args.fail_node is not None:
+        ap.error("--fault-schedule already scripts failures; "
+                 "drop --fail-node")
     if args.slot_capacity is not None and not args.step_level:
         ap.error("--slot-capacity requires --step-level")
     if args.slot_capacity is not None and args.slot_capacity < 1:
@@ -189,6 +210,20 @@ def main() -> int:
         use_prompt_optimizer=not args.no_prompt_optimizer,
         routing=args.routing, latent_depths=latent_depths)
     engine = ServingEngine(system, max_batch=args.max_batch)
+
+    journals = (attach_journals(system, args.journal_dir)
+                if args.journal_dir is not None else None)
+    injector = None
+    if args.fault_schedule is not None:
+        # horizon = injection boundaries the run will see: every
+        # denoising step in step-level mode, every admission group
+        # otherwise (events land at fixed fractions of it)
+        horizon = (args.requests if args.step_level
+                   else max(10, args.requests // args.max_batch))
+        schedule = FaultSchedule.preset(
+            args.fault_schedule, nodes=args.nodes, horizon=horizon,
+            seed=args.fault_seed)
+        injector = FaultInjector(system, schedule, journals=journals)
 
     trace = RequestTrace(seed=1)
     reqs = list(trace.generate(args.requests))
@@ -211,6 +246,8 @@ def main() -> int:
             arrivals = poisson_arrivals(reqs, args.arrival_rate, seed=1)
         step_kw = (dict(step_level=True, slot_capacity=args.slot_capacity)
                    if args.step_level else {})
+        if injector is not None:
+            step_kw["on_step"] = injector.on_step
         occupancy = []
         if args.fail_node is not None:
             done = engine.run(arrivals[:half], **step_kw)
@@ -293,6 +330,22 @@ def main() -> int:
                   f"{s['queue_delay_p95'] * 1e3:.2f}  "
                   f"wall {s['wall_p50'] * 1e3:.2f}/"
                   f"{s['wall_p95'] * 1e3:.2f}")
+    if injector is not None:
+        injector.finish()
+        rep = injector.report()
+        print(f"chaos schedule     : {args.fault_schedule} "
+              f"(seed {args.fault_seed}, {rep['steps_seen']} injection "
+              f"boundaries seen)")
+        print(f"chaos actions      : {rep['actions']}")
+        print(f"chaos absorbed     : "
+              f"transient_retries={rep['transient_retries']}  "
+              f"corrupt_hits={rep['corrupt_hits']}  "
+              f"degraded_serves={rep['degraded_serves']}")
+        lost = len(reqs) - len(done)
+        if lost or any(c.result.image is None for c in done):
+            print(f"CHAOS FAIL         : {lost} accepted jobs lost")
+            return 1
+        print("chaos invariant    : zero accepted-job loss")
     return 0
 
 

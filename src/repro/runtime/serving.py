@@ -72,6 +72,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.pipeline import TransientBackendError
 from repro.core.system import CacheGenius, GenerationBackend, Plan, \
     ServeResult
 from repro.core.trace import TimedRequest
@@ -787,19 +788,21 @@ class ServingEngine:
         arrivals into free slots at ANY step boundary and retiring
         finished slots through per-request Archive/Finish passes in
         submission order (exact maintenance crossings preserved).
-        ``on_step(step_no)`` is called before each step launch — the
-        fault-injection hook (e.g. ``fail_node`` while slots are
-        mid-flight).  See :class:`DiffusionSlotEngine` /
-        :class:`EmulatedSlotEngine` and ``docs/ARCHITECTURE.md``.
+        ``on_step(step_no)`` is the fault-injection hook (e.g.
+        ``fail_node`` / chaos injection while work is in flight): with
+        ``step_level=True`` it is called before each step launch; in
+        group mode it is called before each GROUP is served (the group
+        counter stands in for the step number — group granularity is the
+        finest boundary that mode has).  See :class:`DiffusionSlotEngine`
+        / :class:`EmulatedSlotEngine` and ``docs/ARCHITECTURE.md``.
         """
         if mode not in ("continuous", "drain"):
             raise ValueError(f"unknown mode {mode!r}")
         if step_level and mode != "continuous":
             raise ValueError("step_level=True requires mode='continuous'")
-        if not step_level and (slot_capacity is not None
-                               or on_step is not None):
+        if not step_level and slot_capacity is not None:
             raise ValueError(
-                "slot_capacity/on_step only apply with step_level=True")
+                "slot_capacity only applies with step_level=True")
         if self.queue:
             raise RuntimeError(
                 "ServingEngine.run would strand the submit() queue "
@@ -813,6 +816,7 @@ class ServingEngine:
         ready: List[TimedRequest] = []
         out: List[Completed] = []
         now = float(start)
+        group_no = 0
 
         def admit_arrived() -> None:
             while pending and pending[0].arrival_time <= now + 1e-12:
@@ -828,6 +832,9 @@ class ServingEngine:
                 now = max(now, pending[0].arrival_time)
                 continue
             batch, ready = ready[: self.max_batch], ready[self.max_batch:]
+            if on_step is not None:
+                on_step(group_no)
+            group_no += 1
             admitted = now
             t0 = time.perf_counter()
             results = self.system.serve_batch(
@@ -920,7 +927,7 @@ class ServingEngine:
                 h = base + s.index
                 states[h], arr_of[h], admit_t[h] = s, r, admitted
                 if s.plan.kind == "gen":
-                    engine.admit(s, h)
+                    self._admit_with_retry(engine, s, h)
                     inflight_gen.append(h)
                     img_ready[h] = False
                 elif s.plan.kind == "alias":
@@ -990,6 +997,36 @@ class ServingEngine:
                     break
         self.completed.extend(out)
         return out
+
+    def _admit_with_retry(self, engine, state, handle: int) -> None:
+        """Seat one gen plan in a slot, retrying transient backend faults
+        (the emulated engine generates AT admit time — a batch-of-one
+        backend call — so this is the step-level analogue of the Generate
+        stage's retry loop).  Health bookkeeping mirrors
+        ``GenerateStage._call``; the final failed attempt re-raises so no
+        accepted job is silently dropped."""
+        system = self.system
+        retries = getattr(system, "transient_retries", 0)
+        sched = (system.scheduler
+                 if getattr(system, "use_scheduler", False) else None)
+        node = state.plan.node
+        attempt = 0
+        while True:
+            try:
+                engine.admit(state, handle)
+            except TransientBackendError:
+                if sched is not None and 0 <= node < len(sched.nodes):
+                    sched.observe_fault(node, kind="transient")
+                stats = getattr(system, "stats", None)
+                if stats is not None:
+                    stats.transient_retries += 1
+                attempt += 1
+                if attempt > retries:
+                    raise
+                continue
+            if sched is not None and 0 <= node < len(sched.nodes):
+                sched.observe_ok(node)
+            return
 
     def fail_node(self, node: int) -> None:
         self.system.fail_node(node)

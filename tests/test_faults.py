@@ -1,0 +1,366 @@
+"""Fault-domain hardening: deterministic chaos harness, degraded-mode
+serving, and crash-restart recovery properties.
+
+Three layers are pinned here:
+
+* the harness itself — ``FaultSchedule`` validation and bit-for-bit
+  replayability (same schedule + same trace → same injector log, same
+  images), the saturating ``FlakyBackend`` arm contract;
+* degraded-mode serving — per-node EWMA health + circuit-breaker state
+  machine on the scheduler, transient-fault retry budgets end-to-end,
+  and the checksum-verify path: a corrupted archived reference NEVER
+  reaches a client — the hit degrades to the full txt2img miss path and
+  produces exactly the image a fresh miss would have;
+* crash-restart recovery — a crashed node journal-replays to a bitwise
+  copy of its pre-crash cache, rejoins through the join_node machinery,
+  and an interrupted trace finishes identical to an uninterrupted twin.
+
+Chaos acceptance (both serving modes): zero accepted-job loss under the
+full scripted ``chaos`` preset (crash + rejoin + corruption + transient
+backend faults + slow-node stall).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.scheduler import UnknownNodeError
+from repro.core.pipeline import TransientBackendError
+from repro.core.trace import RequestTrace, bursty_arrivals
+from repro.faults import (FaultEvent, FaultInjector, FaultSchedule,
+                          FlakyBackend, attach_journals)
+from repro.launch.serve import build_system
+from repro.runtime.serving import ServingEngine
+
+
+def _system(n_nodes=3, corpus_n=80):
+    system, _, _, captions = build_system(
+        n_nodes=n_nodes, corpus_n=corpus_n, capacity_per_node=80, seed=0)
+    return system, captions
+
+
+def _trace(n, seed=0):
+    return list(RequestTrace(seed=seed).generate(n))
+
+
+# ---------------------------------------------------------------------------
+# schedule: validation + determinism
+# ---------------------------------------------------------------------------
+
+
+def test_fault_event_and_preset_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent(step=0, kind="meteor")
+    with pytest.raises(ValueError, match="step must be"):
+        FaultEvent(step=-1, kind="crash")
+    with pytest.raises(ValueError, match="unknown preset"):
+        FaultSchedule.preset("nope", nodes=2, horizon=20)
+    with pytest.raises(ValueError, match="nodes >= 2"):
+        FaultSchedule.preset("crash", nodes=1, horizon=20)
+    s = FaultSchedule.preset("chaos", nodes=3, horizon=40, seed=7)
+    kinds = {e.kind for e in s.events}
+    assert kinds == {"crash", "corrupt", "transient", "stall"}
+    assert s.horizon <= 40
+    assert all(s.at(e.step) for e in s.events)
+
+
+def test_schedule_rng_is_a_pure_function_of_seed_and_step():
+    a = FaultSchedule(events=(), seed=3)
+    b = FaultSchedule(events=(), seed=3)
+    for step in (0, 7, 31):
+        np.testing.assert_array_equal(a.rng(step).integers(0, 1000, 8),
+                                      b.rng(step).integers(0, 1000, 8))
+    assert not np.array_equal(a.rng(0).integers(0, 1000, 8),
+                              a.rng(1).integers(0, 1000, 8))
+    g1 = FaultSchedule.generate(nodes=3, horizon=200, seed=5)
+    g2 = FaultSchedule.generate(nodes=3, horizon=200, seed=5)
+    assert g1.events == g2.events
+    assert g1.events != FaultSchedule.generate(nodes=3, horizon=200,
+                                               seed=6).events
+
+
+def test_flaky_backend_arm_is_saturating():
+    """Two transient events with no backend call between them expose at
+    most ``max(count)`` consecutive faults — the property that keeps any
+    scripted schedule inside the serving stack's retry budget."""
+    class Inner:
+        def txt2img_batch(self, p, s, seeds):
+            return "ok"
+
+    fb = FlakyBackend(Inner())
+    fb.arm(2)
+    fb.arm(1)                    # saturates at 2, does NOT stack to 3
+    assert fb._armed == 2
+    for _ in range(2):
+        with pytest.raises(TransientBackendError):
+            fb.txt2img_batch([], 0, [])
+    assert fb.txt2img_batch([], 0, []) == "ok"
+    assert fb.faults_injected == 2
+
+
+# ---------------------------------------------------------------------------
+# fail_node edges (satellite: safe under repeated / invalid calls)
+# ---------------------------------------------------------------------------
+
+
+def test_fail_node_invalid_repeated_and_last_alive():
+    system, _ = _system(n_nodes=3)
+    eng = ServingEngine(system, max_batch=4)
+    for bad in (-1, 3, 99):
+        with pytest.raises(UnknownNodeError):
+            eng.fail_node(bad)
+    eng.fail_node(1)
+    assert not system.scheduler.nodes[1].alive
+    state = system.dbs[1].snapshot()
+    eng.fail_node(1)                         # repeated: an exact no-op
+    for k, v in system.dbs[1].snapshot().items():
+        np.testing.assert_array_equal(v, state[k])
+    eng.fail_node(0)
+    with pytest.raises(RuntimeError, match="last alive"):
+        eng.fail_node(2)                     # the fleet never goes dark
+    assert system.scheduler.nodes[2].alive
+    with pytest.raises(UnknownNodeError):
+        system.crash_node(5)
+    with pytest.raises(RuntimeError, match="last alive"):
+        system.crash_node(2)
+
+
+def test_rejoin_validation():
+    system, _ = _system(n_nodes=3)
+    with pytest.raises(RuntimeError, match="alive"):
+        system.rejoin_node(0)                # can't rejoin a live node
+    system.fail_node(0)
+    from repro.core.vdb import VectorDB
+    with pytest.raises(ValueError, match="shape"):
+        system.rejoin_node(0, VectorDB(system.dbs[0].dim + 1,
+                                       system.dbs[0].capacity))
+    system.rejoin_node(0)
+    assert system.scheduler.nodes[0].alive
+    assert system.cluster_index.n_nodes == len(system.dbs)
+
+
+# ---------------------------------------------------------------------------
+# health EWMA + circuit breaker state machine
+# ---------------------------------------------------------------------------
+
+
+def test_breaker_open_half_open_closed_cycle():
+    system, _ = _system(n_nodes=3)
+    sched = system.scheduler
+    h = sched.nodes[0].health
+    assert h.ewma == 1.0 and h.state == "closed"
+    for _ in range(sched.breaker_threshold - 1):
+        sched.observe_fault(0)
+    assert h.state == "closed" and h.ewma < 1.0
+    sched.observe_fault(0)                       # threshold reached
+    assert h.state == "open" and h.cooldown == sched.breaker_cooldown
+    assert 0 not in {n.index for n in sched._routable_nodes()}
+    for _ in range(sched.breaker_cooldown):
+        sched._breaker_tick()
+    assert h.state == "half_open"                # probe-back window
+    assert 0 in {n.index for n in sched._routable_nodes()}
+    sched.observe_fault(0)                       # probe fails: reopen
+    assert h.state == "open"
+    for _ in range(sched.breaker_cooldown):
+        sched._breaker_tick()
+    sched.observe_ok(0)                          # probe succeeds
+    assert h.state == "closed"
+    for _ in range(200):
+        sched.observe_ok(0)
+    assert h.ewma == pytest.approx(1.0)
+    # fault-free nodes keep ewma EXACTLY 1.0 (the no-penalty guard that
+    # preserves bitwise fault-free routing parity)
+    assert sched.nodes[1].health.ewma == 1.0
+    sched.observe_ok(1)
+    assert sched.nodes[1].health.ewma == 1.0
+
+
+def test_open_breaker_routes_around_until_probe_back():
+    system, _ = _system(n_nodes=3)
+    sched = system.scheduler
+    for _ in range(sched.breaker_threshold):
+        sched.observe_fault(1)
+    routable = {n.index for n in sched._routable_nodes()}
+    assert routable == {0, 2}
+    # breaker-open is NOT node death: with every breaker open the
+    # fallback routes to all alive nodes rather than nowhere
+    for node in (0, 2):
+        for _ in range(sched.breaker_threshold):
+            sched.observe_fault(node)
+    assert {n.index for n in sched._routable_nodes()} == {0, 1, 2}
+
+
+# ---------------------------------------------------------------------------
+# corrupted reference → degraded miss-path serve (never a bad image)
+# ---------------------------------------------------------------------------
+
+
+def test_corrupt_hit_degrades_to_exact_miss_path_image():
+    system, captions = _system()
+    prompt = captions[0]
+    warm = system.serve(prompt, seed=0)
+    assert not warm.degraded
+    for bid in list(system.blob_store._blobs):
+        system.blob_store.corrupt(bid)
+    bids_before = set(system.blob_store._blobs)
+    res = system.serve(prompt, seed=1)
+    # the corrupted hit fell back to the FULL generation path and the
+    # image is exactly what a pure miss would have produced
+    assert res.degraded and res.route.value == "txt2img"
+    assert res.steps == system.policy.steps_full
+    expected = system.backend.txt2img_batch(
+        [prompt], system.policy.steps_full, [1])[0]
+    np.testing.assert_array_equal(res.image, expected)
+    assert system.stats.corrupt_hits >= 1
+    assert system.stats.degraded_serves >= 1
+    # the matched reference was quarantined: its blob is deleted (the
+    # degraded serve then archives a FRESH image, so compare id sets,
+    # not counts)
+    assert bids_before - set(system.blob_store._blobs)
+    # the quarantined slots are gone from every node's index
+    for db in system.dbs:
+        assert not np.any(db.payload_ids[db.valid] < 0)
+
+
+def test_corrupt_quarantine_attributes_fault_to_owner_node():
+    system, captions = _system()
+    prompt = captions[3]
+    system.serve(prompt, seed=0)
+    for bid in list(system.blob_store._blobs):
+        system.blob_store.corrupt(bid)
+    system.serve(prompt, seed=1)
+    assert any(n.health.ewma < 1.0 for n in system.scheduler.nodes)
+
+
+# ---------------------------------------------------------------------------
+# transient backend faults: retry budget end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_transient_faults_absorbed_within_retry_budget():
+    system, _ = _system()
+    system.backend = FlakyBackend(system.backend)
+    system.backend.arm(system.transient_retries)     # exactly absorbable
+    res = system.serve("a prompt no cache has seen", seed=42)
+    assert res.image is not None and not res.degraded
+    assert system.stats.transient_retries == system.transient_retries
+    assert system.backend.faults_injected == system.transient_retries
+    node = res.node
+    assert node >= 0 and system.scheduler.nodes[node].health.ewma < 1.0
+    assert system.scheduler.nodes[node].health.consecutive_faults == 0
+
+
+def test_transient_faults_beyond_budget_reraise():
+    system, _ = _system()
+    system.transient_retries = 0
+    system.backend = FlakyBackend(system.backend)
+    system.backend.arm(1)
+    with pytest.raises(TransientBackendError):
+        system.serve("another never-cached prompt", seed=0)
+
+
+# ---------------------------------------------------------------------------
+# chaos acceptance: zero accepted-job loss in BOTH serving modes
+# ---------------------------------------------------------------------------
+
+
+def _chaos_run(step_level, journal_root=None):
+    system, _ = _system()
+    reqs = _trace(36)
+    arr = bursty_arrivals(reqs, burst_size=7, burst_gap=0.4)
+    journals = (attach_journals(system, str(journal_root),
+                                snapshot_every=16)
+                if journal_root is not None else None)
+    # injection boundaries ≈ denoising steps (step-level) vs admission
+    # groups (~one per burst) — scale the preset to what the run sees
+    horizon = 120 if step_level else 10
+    sched = FaultSchedule.preset("chaos", nodes=3, horizon=horizon, seed=1)
+    inj = FaultInjector(system, sched, journals=journals)
+    eng = ServingEngine(system, max_batch=8)
+    kw = dict(step_level=True, slot_capacity=4) if step_level else {}
+    done = eng.run(arr, on_step=inj.on_step, **kw)
+    inj.finish()
+    return system, done, reqs, inj.report()
+
+
+def test_chaos_group_mode_zero_loss():
+    system, done, reqs, rep = _chaos_run(step_level=False)
+    assert len(done) == len(reqs)
+    assert all(c.result.image is not None for c in done)
+    assert rep["actions"]["crash"] == 1
+    assert rep["actions"]["rejoin-cold"] == 1    # no journal attached
+    assert rep["actions"]["unstall"] == 1
+    assert rep["faults_injected"] > 0            # transients really fired
+    assert rep["corrupt_hits"] > 0               # corruption really bit
+    assert all(system.scheduler.nodes[i].alive for i in range(3))
+
+
+def test_chaos_step_level_zero_loss_with_journaled_rejoin(tmp_path):
+    system, done, reqs, rep = _chaos_run(step_level=True,
+                                         journal_root=tmp_path)
+    assert len(done) == len(reqs)
+    assert all(c.result.image is not None for c in done)
+    assert rep["actions"]["crash"] == 1
+    assert rep["actions"]["rejoin-journaled"] == 1
+    assert rep["transient_retries"] > 0
+    assert system.dbs[2].size > 0                # rejoined WITH its cache
+
+
+def test_chaos_replay_is_bit_for_bit():
+    """Same schedule + same trace twice → identical injector log,
+    identical route mix, bitwise-identical images."""
+    sys_a, done_a, _, rep_a = _chaos_run(step_level=False)
+    sys_b, done_b, _, rep_b = _chaos_run(step_level=False)
+    assert rep_a["log"] == rep_b["log"]
+    assert sys_a.stats.route_counts == sys_b.stats.route_counts
+    for a, b in zip(done_a, done_b):
+        np.testing.assert_array_equal(a.result.image, b.result.image)
+
+
+# ---------------------------------------------------------------------------
+# crash-restart recovery: bitwise journal replay + interrupted-run parity
+# ---------------------------------------------------------------------------
+
+
+def test_crash_replay_bitwise_and_interrupted_run_parity(tmp_path):
+    """The satellite property: serve half the trace, hard-crash the
+    busiest node, journal-replay it (bitwise-equal to the instant of the
+    crash), rejoin, finish the trace — every post-rejoin result is
+    identical to an uninterrupted twin's."""
+    reqs = _trace(40, seed=2)
+    cut = 20
+
+    twin, _ = _system()
+    attach_journals(twin, str(tmp_path / "twin"), snapshot_every=16)
+    twin_res = [twin.serve(r.prompt, seed=i) for i, r in enumerate(reqs)]
+
+    system, _ = _system()
+    journals = attach_journals(system, str(tmp_path / "crashed"),
+                               snapshot_every=16)
+    res = [system.serve(r.prompt, seed=i)
+           for i, r in enumerate(reqs[:cut])]
+    victim = max(range(3), key=lambda n: system.dbs[n].size)
+    old = system.crash_node(victim)
+    assert system.dbs[victim].size == 0          # cache really lost
+    j = journals[victim]
+    db = j.replay(old.dim, old.capacity, name=old.name,
+                  use_pallas=old.use_pallas, interpret=old.interpret)
+    live, rest = old.snapshot(), db.snapshot()   # bitwise-equal BEFORE
+    assert set(live) == set(rest)                # the node rejoins
+    for k in live:
+        np.testing.assert_array_equal(live[k], rest[k], err_msg=k)
+    db.attach_journal(j)
+    system.rejoin_node(victim, db)
+    res += [system.serve(r.prompt, seed=cut + i)
+            for i, r in enumerate(reqs[cut:])]
+
+    for a, b in zip(twin_res, res):
+        assert (a.fast_path or a.route.value) == (b.fast_path
+                                                  or b.route.value)
+        assert a.node == b.node and a.steps == b.steps
+        np.testing.assert_array_equal(a.image, b.image)
+    assert twin.stats.route_counts == system.stats.route_counts
+    for db_a, db_b in zip(twin.dbs, system.dbs):
+        for k, v in db_a.snapshot().items():
+            np.testing.assert_array_equal(v, db_b.snapshot()[k],
+                                          err_msg=k)

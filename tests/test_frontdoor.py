@@ -478,3 +478,99 @@ def test_premium_tier_maps_to_priority_fast_path():
         plain.wait(timeout=120)
     assert repeat.meta["route"] == "priority"
     assert plain.meta["route"] != "priority"
+
+
+# ---------------------------------------------------------------------------
+# dispatcher robustness: hung-shutdown detection, transient group retry
+# ---------------------------------------------------------------------------
+
+
+class _GatedBackend:
+    """Delegating backend whose generation calls block on an event —
+    lets a test hold the dispatcher worker mid-group deterministically."""
+
+    def __init__(self, inner):
+        import threading
+        self._inner = inner
+        self.gate = threading.Event()
+        self.entered = threading.Event()
+
+    def _wait(self):
+        self.entered.set()
+        assert self.gate.wait(timeout=120)
+
+    def txt2img_batch(self, *a, **kw):
+        self._wait()
+        return self._inner.txt2img_batch(*a, **kw)
+
+    def img2img_batch(self, *a, **kw):
+        self._wait()
+        return self._inner.img2img_batch(*a, **kw)
+
+    def resume_batch(self, *a, **kw):
+        self._wait()
+        return self._inner.resume_batch(*a, **kw)
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
+def test_stop_timeout_warns_and_keeps_thread_handle():
+    """Satellite regression: a ``stop(timeout=...)`` that expires with
+    the worker still alive must WARN and keep the thread handle (so
+    ``running`` stays truthful and a later ``stop`` can re-join) instead
+    of silently dropping it."""
+    system = _system(n_nodes=2)
+    backend = _GatedBackend(system.backend)
+    system.backend = backend
+    gw = Gateway(ServingEngine(system, max_batch=2))
+    gw.start()
+    h = gw.submit("a never-cached prompt to force generation", seed=0)
+    assert backend.entered.wait(timeout=120)     # worker is mid-group
+    with pytest.warns(RuntimeWarning, match="did not stop"):
+        gw.close(timeout=0.05)
+    assert gw.dispatcher.running                 # handle kept, truthful
+    backend.gate.set()                           # un-wedge the worker
+    gw.close(timeout=120)                        # re-join succeeds
+    assert not gw.dispatcher.running
+    assert gw.dispatcher._thread is None
+    assert h.done()
+
+
+def test_transient_group_failure_retries_then_serves():
+    """A group that dies of a transient backend fault is retried with
+    backoff at the dispatcher level (on top of the Generate stage's
+    in-call budget) — the handles still resolve, nothing is failed."""
+    from repro.core.pipeline import TransientBackendError
+    from repro.faults import FlakyBackend
+
+    system = _system(n_nodes=2)
+    system.transient_retries = 0       # defeat the in-call retry budget
+    system.backend = FlakyBackend(system.backend)
+    system.backend.arm(1)
+    gw = Gateway(ServingEngine(system, max_batch=2))
+    gw.dispatcher.retry_backoff = 0.001
+    with gw:
+        h = gw.submit("transient-retry probe prompt", seed=0)
+        assert h.image() is not None             # group retried, served
+    assert system.backend.faults_injected == 1
+    assert gw.stats()["jobs_served"] == 1
+
+
+def test_transient_group_failure_beyond_budget_fails_handles():
+    from repro.core.pipeline import TransientBackendError
+    from repro.faults import FlakyBackend
+
+    system = _system(n_nodes=2)
+    system.transient_retries = 0
+    system.backend = FlakyBackend(system.backend)
+    gw = Gateway(ServingEngine(system, max_batch=2))
+    gw.dispatcher.max_group_retries = 2
+    gw.dispatcher.retry_backoff = 0.001
+    system.backend.arm(10**6)                    # never recovers
+    with gw:
+        h = gw.submit("doomed prompt", seed=0)
+        with pytest.raises(TransientBackendError):
+            h.wait(timeout=120)
+    # exactly initial attempt + max_group_retries in-call failures
+    assert system.backend.faults_injected == 3

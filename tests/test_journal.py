@@ -1,0 +1,198 @@
+"""Cache durability journal: WAL + snapshot recovery properties.
+
+The contract pinned here (the crash-restart half of the fault-domain
+tentpole): a ``VectorDB`` with a ``CacheJournal`` attached can be
+rebuilt, at ANY point in an arbitrary interleaved mutation stream, to a
+state bitwise-equal (every ``snapshot()`` array, ``np.testing`` strict)
+to the live db — because every mutation's RAW arguments hit the WAL
+before the slab changes, and replay re-runs the REAL mutation methods.
+Randomized streams cover the add / evict / mark_access interleavings the
+serving pipeline actually produces (FIFO overwrite under pressure,
+evictions of already-dead slots, repeated accesses), crossed with
+snapshot cadences including the pure-WAL ``snapshot_every=0`` mode.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.journal import CacheJournal
+from repro.core.vdb import VectorDB
+
+
+DIM = 16
+
+
+def _rand_op(db: VectorDB, rng: np.random.Generator, t: float) -> None:
+    """One random mutation drawn from the live-serving distribution."""
+    kind = rng.choice(["add", "add", "evict", "access", "access"])
+    valid = np.flatnonzero(db.valid)
+    if kind != "add" and len(valid) == 0:
+        kind = "add"
+    if kind == "add":
+        n = int(rng.integers(1, 4))
+        depths = (rng.integers(-1, 6, size=n)
+                  if rng.random() < 0.5 else None)
+        db.add(rng.standard_normal((n, DIM)).astype(np.float32),
+               rng.standard_normal((n, DIM)).astype(np.float32),
+               rng.integers(0, 10_000, size=n), t, depths=depths,
+               source_ids=(rng.integers(0, 10_000, size=n)
+                           if rng.random() < 0.5 else None))
+    elif kind == "evict":
+        k = int(rng.integers(1, min(3, len(valid)) + 1))
+        slots = rng.choice(valid, size=k, replace=False)
+        if rng.random() < 0.2:       # evicting a dead slot must replay too
+            slots = np.append(slots, rng.integers(0, db.capacity))
+        db.evict_slots(slots)
+    else:
+        k = int(rng.integers(1, min(4, len(valid)) + 1))
+        db.mark_access(rng.choice(valid, size=k, replace=False), t)
+
+
+def _assert_bitwise(db: VectorDB, rebuilt: VectorDB) -> None:
+    live, rest = db.snapshot(), rebuilt.snapshot()
+    assert set(live) == set(rest)
+    for k in live:
+        np.testing.assert_array_equal(live[k], rest[k], err_msg=k)
+
+
+@pytest.mark.parametrize("seed,snapshot_every",
+                         [(0, 8), (1, 8), (2, 5), (3, 64), (4, 0), (5, 0),
+                          (6, 1), (7, 3)])
+def test_replay_bitwise_equal_through_random_stream(tmp_path, seed,
+                                                    snapshot_every):
+    """The tentpole property: at every probe point of a random mutation
+    stream — including mid-WAL, exactly on auto-snapshot boundaries, and
+    in pure-WAL mode — replay reproduces the live db bitwise."""
+    rng = np.random.default_rng(seed)
+    db = VectorDB(DIM, 24, name="n0")
+    j = CacheJournal(str(tmp_path), snapshot_every=snapshot_every)
+    db.attach_journal(j)
+    probes = set(rng.integers(1, 120, size=12).tolist()) | {119}
+    for i in range(120):
+        _rand_op(db, rng, t=float(i))
+        if i in probes:
+            _assert_bitwise(db, j.replay(DIM, 24, name="n0"))
+    # a second replay from the same directory is just as equal (replay
+    # mutates nothing on disk)
+    _assert_bitwise(db, j.replay(DIM, 24, name="n0"))
+
+
+def test_pre_attach_state_is_durable_via_base_snapshot(tmp_path):
+    """Content loaded BEFORE the journal attaches (corpus pre-population)
+    is captured by an explicit base snapshot; the WAL then only needs to
+    cover post-attach mutations."""
+    rng = np.random.default_rng(9)
+    db = VectorDB(DIM, 16)
+    db.add(rng.standard_normal((6, DIM)).astype(np.float32),
+           rng.standard_normal((6, DIM)).astype(np.float32),
+           np.arange(6), 0.0)                  # pre-attach: not journaled
+    j = CacheJournal(str(tmp_path), snapshot_every=0)
+    db.attach_journal(j)
+    j.snapshot()                               # the durability baseline
+    db.mark_access([0, 2], 1.0)
+    db.evict_slots([1])
+    _assert_bitwise(db, j.replay(DIM, 16))
+
+
+def test_snapshot_requires_bound_db(tmp_path):
+    j = CacheJournal(str(tmp_path))
+    with pytest.raises(RuntimeError):
+        j.snapshot()
+    with pytest.raises(ValueError):
+        CacheJournal(str(tmp_path), snapshot_every=-1)
+
+
+def test_snapshot_prunes_absorbed_wal_and_old_snapshots(tmp_path):
+    rng = np.random.default_rng(3)
+    db = VectorDB(DIM, 16)
+    j = CacheJournal(str(tmp_path), snapshot_every=0)
+    db.attach_journal(j)
+    for i in range(5):
+        _rand_op(db, rng, t=float(i))
+    first = j.snapshot()
+    assert os.path.isdir(first)
+    # records <= snapshot seq are gone, the snapshot is the restart base
+    assert not [n for n in os.listdir(tmp_path) if n.startswith("wal_")]
+    for i in range(3):
+        _rand_op(db, rng, t=float(5 + i))
+    assert len([n for n in os.listdir(tmp_path)
+                if n.startswith("wal_")]) == 3
+    second = j.snapshot()
+    assert os.path.isdir(second) and not os.path.isdir(first)  # pruned
+    _assert_bitwise(db, j.replay(DIM, 16))
+
+
+def test_deferred_auto_snapshot_never_loses_boundary_record(tmp_path):
+    """Regression for a real WAL bug: the mutation hook runs BEFORE the
+    slab applies the record, so auto-snapshotting inside that hook
+    published a state MISSING the boundary record's effect while pruning
+    it from the WAL.  The publish is now deferred to the next mutation's
+    hook; a stream cut exactly at the cadence boundary must replay the
+    boundary mutation's effect."""
+    db = VectorDB(DIM, 16)
+    j = CacheJournal(str(tmp_path), snapshot_every=2)
+    db.attach_journal(j)
+    rng = np.random.default_rng(0)
+    vec = rng.standard_normal((1, DIM)).astype(np.float32)
+    db.add(vec, vec, [7], 0.0)          # record 1
+    db.mark_access([0], 1.0)            # record 2: cadence boundary
+    _assert_bitwise(db, j.replay(DIM, 16))     # access_count must be 2
+    assert j.replay(DIM, 16).access_count[0] == 2
+    db.mark_access([0], 2.0)            # record 3: triggers the deferred
+    #                                     snapshot covering records 1-2
+    snaps = [n for n in os.listdir(tmp_path) if n.startswith("snap_")]
+    assert snaps == ["snap_0000000002"]
+    _assert_bitwise(db, j.replay(DIM, 16))
+
+
+def test_replay_ignores_inflight_tmp_artifacts(tmp_path):
+    """A crash mid-publish leaves ``*.tmp`` artifacts; replay must treat
+    them as absent (the atomic-rename discipline's whole point)."""
+    rng = np.random.default_rng(4)
+    db = VectorDB(DIM, 16)
+    j = CacheJournal(str(tmp_path), snapshot_every=0)
+    db.attach_journal(j)
+    for i in range(4):
+        _rand_op(db, rng, t=float(i))
+    # fake a crash mid-snapshot-publish and mid-WAL-append
+    os.makedirs(tmp_path / "snap_0000000099.tmp")
+    np.savez(tmp_path / "snap_0000000099.tmp" / "arrays.npz",
+             junk=np.zeros(3))
+    with open(tmp_path / "wal_0000000099.npz.tmp", "wb") as f:
+        f.write(b"torn write")
+    _assert_bitwise(db, j.replay(DIM, 16))
+    # a fresh journal over the same directory resumes from the real seq,
+    # not the torn artifacts
+    assert CacheJournal(str(tmp_path), snapshot_every=0).seq == j.seq
+
+
+def test_replay_rejects_unknown_record_kind(tmp_path):
+    db = VectorDB(DIM, 8)
+    j = CacheJournal(str(tmp_path), snapshot_every=0)
+    db.attach_journal(j)
+    db.mark_access(np.array([], np.int64), 0.0)
+    with open(tmp_path / "wal_0000000002.npz", "wb") as f:
+        np.savez(f, kind=np.array("frobnicate"))
+    with pytest.raises(ValueError, match="frobnicate"):
+        j.replay(DIM, 8)
+
+
+def test_restored_db_keeps_journaling_after_rejoin(tmp_path):
+    """The rejoin path re-attaches the journal to the replayed db: a
+    second crash after more traffic still replays bitwise."""
+    rng = np.random.default_rng(5)
+    db = VectorDB(DIM, 16)
+    j = CacheJournal(str(tmp_path), snapshot_every=4)
+    db.attach_journal(j)
+    for i in range(10):
+        _rand_op(db, rng, t=float(i))
+    db.detach_journal()                          # crash #1
+    db2 = j.replay(DIM, 16)
+    _assert_bitwise(db, db2)
+    db2.attach_journal(j)                        # rejoin
+    for i in range(10, 20):
+        _rand_op(db2, rng, t=float(i))
+    _assert_bitwise(db2, j.replay(DIM, 16))      # crash #2 replays too

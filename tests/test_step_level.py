@@ -261,8 +261,11 @@ def test_step_level_validation_and_empty():
         eng.run([TimedRequest(0.0, "p")], mode="drain", step_level=True)
     with pytest.raises(ValueError):
         eng.run([TimedRequest(0.0, "p")], slot_capacity=4)
-    with pytest.raises(ValueError):
-        eng.run([TimedRequest(0.0, "p")], on_step=lambda i: None)
+    # on_step is valid in BOTH modes now (group mode calls it per group
+    # — the chaos harness's injection point); it must actually fire
+    seen = []
+    done = eng.run([TimedRequest(0.0, "p")], on_step=seen.append)
+    assert len(done) == 1 and seen == [0]
 
 
 # ---------------------------------------------------------------------------
