@@ -58,6 +58,14 @@ ARRIVAL_RATES: Tuple[float, ...] = (10.0, 40.0, 160.0)
 NODE_COUNTS: Tuple[int, ...] = (2, 4, 8)
 CACHE_CAPACITIES: Tuple[int, ...] = (2048, 4096)
 
+# Device-mesh sizes for retrieval_scan's sharded arm (`--mesh-nodes`):
+# each size > 1 reruns the fused scan with the cluster slabs sharded
+# over that many devices (1-D "nodes" mesh) and gates bitwise parity +
+# per-device slab-byte shrinkage.  (1,) = unsharded only, the default —
+# the sharded arm needs forced host devices BEFORE jax initialises,
+# which `benchmarks.run --mesh-nodes` arranges.
+MESH_NODES: Tuple[int, ...] = (1,)
+
 # Target cache hit-rates (band-mutation fractions) swept by the
 # latent_depth_cache benchmark; overridable via `benchmarks.run
 # --hit-rates`.

@@ -351,6 +351,18 @@ def retrieval_scan(batch: int = 8, dim: int = 512, k: int = 8,
     per-node loop (one ``VectorDB.search_batch`` per touched node, each
     re-uploading its slab), across ``C.NODE_COUNTS`` × ``C.CACHE_CAPACITIES``.
 
+    Mesh sizes > 1 in ``C.MESH_NODES`` (``--mesh-nodes``) add a SHARDED
+    arm per shape: the same fused scan with the slabs partitioned over a
+    1-D "nodes" device mesh (each device scans only its local node
+    shard; only per-node best-k rows are gathered).  Each sharded row
+    records per-device slab bytes, all-gather bytes, and fused-vs-
+    sharded wall, and gates ``sharded_parity_ok`` (bitwise-identical
+    retrieval + routing results) and ``sharded_shrinks_slab``
+    (per-device bytes < the unsharded slab).  Requires the backend to
+    expose >= mesh devices (``benchmarks.run --mesh-nodes`` forces host
+    devices before jax initialises); shapes whose mesh exceeds the
+    device count are skipped with a note.
+
     Stack-free: runs on synthetic vectors, so CI can smoke it without
     training the diffusion stack."""
     from repro.core.cluster_index import ClusterIndex
@@ -366,6 +378,7 @@ def retrieval_scan(batch: int = 8, dim: int = 512, k: int = 8,
         return best
 
     rows: List[Dict] = []
+    mesh_rows: List[Dict] = []
     for n_nodes in C.NODE_COUNTS:
         for cap in C.CACHE_CAPACITIES:
             rng = np.random.default_rng(1000 * n_nodes + cap)
@@ -399,13 +412,60 @@ def retrieval_scan(batch: int = 8, dim: int = 512, k: int = 8,
                 "loop_gbps": scan_bytes / t_loop / 1e9,
                 "fused_gbps": scan_bytes / t_fused / 1e9,
             })
+            base = ci.search_batch(Q, node_ids, k, count_queries=False)
+            for m in C.MESH_NODES:
+                if m <= 1:
+                    continue
+                import jax
+                if len(jax.devices()) < m:
+                    mesh_rows.append({
+                        "nodes": n_nodes, "capacity": cap, "mesh_nodes": m,
+                        "skipped": f"backend has {len(jax.devices())} "
+                                   f"devices < mesh {m}"})
+                    continue
+                # identical second fleet: the first one's dbs are bound
+                # to the unsharded index (both would receive updates)
+                rng2 = np.random.default_rng(1000 * n_nodes + cap)
+                dbs_m = [VectorDB(dim, cap, name=f"bench{i}m")
+                         for i in range(n_nodes)]
+                for db in dbs_m:
+                    v = rng2.normal(size=(cap, dim)).astype(np.float32)
+                    t = rng2.normal(size=(cap, dim)).astype(np.float32)
+                    db.add(v, t, np.arange(cap), t=0.0)
+                cim = ClusterIndex.from_dbs(dbs_m, mesh_nodes=m)
+                t_sharded = bench(
+                    lambda: cim.search_batch(Q, node_ids, k,
+                                             count_queries=False))
+                ag0 = cim.stats["allgather_bytes"]
+                got = cim.search_batch(Q, node_ids, k, count_queries=False)
+                ag_bytes = cim.stats["allgather_bytes"] - ag0
+                parity = len(base) == len(got) and all(
+                    np.array_equal(bs, gs) and np.array_equal(bi, gi)
+                    for (bs, bi), (gs, gi) in zip(base, got))
+                mesh_rows.append({
+                    "nodes": n_nodes, "capacity": cap, "mesh_nodes": m,
+                    "fused_scan_s": t_fused, "sharded_scan_s": t_sharded,
+                    "single_device_slab_bytes": ci.per_device_slab_bytes(),
+                    "per_device_slab_bytes": cim.per_device_slab_bytes(),
+                    "allgather_bytes_per_scan": ag_bytes,
+                    "sharded_parity_ok": parity,
+                })
     wins = [r for r in rows if r["nodes"] >= 4 and r["capacity"] >= 2048]
-    return {"rows": rows,
+    ran_mesh = [r for r in mesh_rows if "skipped" not in r]
+    return {"rows": rows, "mesh_rows": mesh_rows,
             "fused_beats_loop_everywhere":
                 all(r["speedup"] > 1.0 for r in rows),
             # None when the sweep didn't include the acceptance shape
             "fused_beats_loop_at_4x2048":
-                all(r["speedup"] > 1.0 for r in wins) if wins else None}
+                all(r["speedup"] > 1.0 for r in wins) if wins else None,
+            # sharded-arm gates: None when no mesh>1 arm ran
+            "sharded_parity_ok":
+                all(r["sharded_parity_ok"] for r in ran_mesh)
+                if ran_mesh else None,
+            "sharded_shrinks_slab":
+                all(r["per_device_slab_bytes"]
+                    < r["single_device_slab_bytes"] for r in ran_mesh)
+                if ran_mesh else None}
 
 
 # ---------------------------------------------------------------------------

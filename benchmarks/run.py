@@ -81,7 +81,10 @@ def _tier_names(text: str):
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="run only these benchmarks (comma-separated); "
+                         "their entries refresh in place, the rest of "
+                         "the results file is preserved")
     ap.add_argument("--out", default="experiments/results.json")
     ap.add_argument("--with-roofline", action="store_true")
     ap.add_argument("--batch-sizes", type=_batch_sizes, default=None,
@@ -104,6 +107,14 @@ def main() -> int:
     ap.add_argument("--cache-capacities", type=_pos_ints, default=None,
                     help="comma-separated per-node cache capacities for the "
                          "retrieval_scan benchmark (default: 2048,4096)")
+    ap.add_argument("--mesh-nodes", type=_pos_ints, default=None,
+                    help="comma-separated device-mesh sizes for "
+                         "retrieval_scan's sharded arm (sizes > 1 shard "
+                         "the cluster slabs over that many devices and "
+                         "gate bitwise parity + per-device byte "
+                         "shrinkage); host devices are forced "
+                         "automatically on CPU (default: 1 = unsharded "
+                         "only)")
     ap.add_argument("--tenants", type=_pos_ints, default=None,
                     help="comma-separated tenant counts for the "
                          "frontdoor_load contention sweep (default: 3)")
@@ -127,6 +138,14 @@ def main() -> int:
         ap.error("--crash-at must be in (0, 1)")
     if args.corrupt_frac is not None and not 0.0 < args.corrupt_frac <= 1.0:
         ap.error("--corrupt-frac must be in (0, 1]")
+    if args.mesh_nodes and max(args.mesh_nodes) > 1:
+        # must land before the benchmark imports below can initialise
+        # the XLA backend — host-device forcing is a no-op afterwards
+        from repro.launch.mesh import ensure_host_devices
+        if not ensure_host_devices(max(args.mesh_nodes)):
+            print(f"# warning: backend already up with fewer than "
+                  f"{max(args.mesh_nodes)} devices; sharded arms will "
+                  "be skipped")
 
     from benchmarks.paper_figures import ALL_BENCHMARKS, STACK_FREE
     from benchmarks import common as C
@@ -151,13 +170,22 @@ def main() -> int:
         C.CORRUPT_FRAC = args.corrupt_frac
     if args.step_level:
         C.STEP_LEVEL = True
+    if args.mesh_nodes:
+        C.MESH_NODES = args.mesh_nodes
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     t0 = time.time()
-    names = [args.only] if args.only else list(ALL_BENCHMARKS)
+    if args.only:
+        names = [n.strip() for n in args.only.split(",") if n.strip()]
+        unknown = [n for n in names if n not in ALL_BENCHMARKS]
+        if unknown:
+            ap.error(f"unknown benchmark(s) {unknown}; "
+                     f"choose from {sorted(ALL_BENCHMARKS)}")
+    else:
+        names = list(ALL_BENCHMARKS)
     results = {}
     if args.only and os.path.exists(args.out):
-        # a single-benchmark run refreshes its entry in place instead of
+        # a selective run refreshes its entries in place instead of
         # wiping the rest of the results trajectory
         try:
             with open(args.out) as f:
@@ -193,8 +221,13 @@ def main() -> int:
             print("roofline," +
                   json.dumps(results["roofline_summary"]["dominant_counts"]))
 
-    with open(args.out, "w") as f:
+    # atomic write: a crash mid-dump must not truncate the results file
+    # (a later --only run merges into it — a half-written file would
+    # silently wipe the whole trajectory)
+    tmp = args.out + ".tmp"
+    with open(tmp, "w") as f:
         json.dump(results, f, indent=1, default=float)
+    os.replace(tmp, args.out)
     print(f"# wrote {args.out}; total {time.time()-t0:.1f}s; "
           f"{len(failures)} failures {failures}")
     return 1 if failures else 0

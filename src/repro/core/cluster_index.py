@@ -32,6 +32,21 @@ eviction bookkeeping / snapshot / restore, and once registered here its
 ``search``/``search_batch`` delegate to the fused device scan with
 identical semantics (same union-dedup, same FIFO-overwrite and eviction
 behaviour — pinned by parity tests against the per-node jnp oracle).
+
+``mesh_nodes > 1`` shards all of the above over a 1-D ``("nodes",)``
+device mesh: the node axis pads up to a multiple of the mesh size with
+masked-invalid nodes, the slabs/validity live as ``NamedSharding``
+arrays (specs from :mod:`repro.runtime.partition`), and every scan mode
+runs the same per-node kernels inside ``shard_map``
+(:func:`repro.kernels.vdb_topk.vdb_topk_sharded_mesh` /
+``vdb_topk_pernode_mesh``) so each device scans only its local node
+shard.  Only the per-node best-k rows are gathered
+(``stats["allgather_bytes"]`` counts them) and the cross-shard merge
+(:func:`repro.kernels.vdb_topk.merge_shard_topk`) reproduces the
+single-device tie-break bitwise.  Incremental row updates go through
+the SAME donated scatter — XLA routes each write to the owning shard,
+so the zero steady-state host→device-slab-copy guarantee (and its
+stats pins) carries over unchanged.
 """
 from __future__ import annotations
 
@@ -87,46 +102,92 @@ class ClusterIndex:
 
     def __init__(self, dim: int, capacities: Sequence[int], *,
                  use_pallas: bool = False,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 mesh_nodes: int = 1):
         self.dim = dim
         self.capacities = [int(c) for c in capacities]
         self.n_nodes = len(self.capacities)
         self.capacity = max(self.capacities) if self.capacities else 0
         self.use_pallas = use_pallas
         self.interpret = interpret
+        self.mesh_nodes = int(mesh_nodes)
         self.dbs: List[Optional[VectorDB]] = [None] * self.n_nodes
         self.stats: Dict[str, int] = {
-            "slab_uploads": 0, "row_updates": 0, "fused_scans": 0}
-        self._slabs = jnp.zeros((2, self.n_nodes, self.capacity, dim),
-                                jnp.float32)
-        self._valid = jnp.zeros((self.n_nodes, self.capacity), bool)
+            "slab_uploads": 0, "row_updates": 0, "fused_scans": 0,
+            "allgather_bytes": 0}
+        if self.mesh_nodes > 1:
+            from repro.launch.mesh import make_node_mesh
+            self._mesh = make_node_mesh(self.mesh_nodes)
+            # pad the node axis to a mesh multiple with masked-invalid
+            # nodes (their validity rows stay all-False forever, so their
+            # NEG_INF candidates never survive the union)
+            self.padded_nodes = (
+                -(-max(self.n_nodes, 1) // self.mesh_nodes)
+                * self.mesh_nodes)
+        else:
+            self._mesh = None
+            self.padded_nodes = self.n_nodes
+        self._slabs = self._shard(
+            jnp.zeros((2, self.padded_nodes, self.capacity, dim),
+                      jnp.float32), slab=True)
+        self._valid = self._shard(
+            jnp.zeros((self.padded_nodes, self.capacity), bool), slab=False)
+
+    def _shard(self, arr, *, slab: bool):
+        """Commit ``arr`` (jnp or host numpy) to the node mesh — without
+        one, a plain device array (``device_put`` IS the one upload when
+        ``arr`` is numpy, no staging copy)."""
+        if self._mesh is None:
+            return jnp.asarray(arr)
+        from jax.sharding import NamedSharding
+
+        from repro.runtime.partition import (CLUSTER_SLAB_SPEC,
+                                             CLUSTER_VALID_SPEC)
+        spec = CLUSTER_SLAB_SPEC if slab else CLUSTER_VALID_SPEC
+        return jax.device_put(arr, NamedSharding(self._mesh, spec))
+
+    def per_device_slab_bytes(self) -> int:
+        """Bytes of cluster cache state resident on EACH device — the
+        quantity the mesh shrinks ~linearly (benchmarks gate on it)."""
+        if self._mesh is None:
+            return int(self._slabs.nbytes + self._valid.nbytes)
+        from repro.runtime.partition import (CLUSTER_SLAB_SPEC,
+                                            CLUSTER_VALID_SPEC,
+                                            count_sharded_bytes)
+        return count_sharded_bytes(
+            [self._slabs, self._valid],
+            [CLUSTER_SLAB_SPEC, CLUSTER_VALID_SPEC], self._mesh)
 
     # -- construction -------------------------------------------------------
 
     @classmethod
     def from_dbs(cls, dbs: Sequence[VectorDB], *,
                  use_pallas: Optional[bool] = None,
-                 interpret: Optional[bool] = None) -> "ClusterIndex":
+                 interpret: Optional[bool] = None,
+                 mesh_nodes: int = 1) -> "ClusterIndex":
         """Build the stacked device slabs from a fleet's current numpy
         state (ONE upload) and register each db as a view: subsequent
-        mutations flow through the incremental row updates."""
+        mutations flow through the incremental row updates.
+        ``mesh_nodes > 1`` commits the upload straight to the node mesh —
+        still ONE host→device transfer, just scattered across shards."""
         if use_pallas is None:
             use_pallas = any(db.use_pallas for db in dbs)
         if interpret is None:
             interprets = {db.interpret for db in dbs}
             interpret = interprets.pop() if len(interprets) == 1 else None
         ci = cls(dbs[0].dim, [db.capacity for db in dbs],
-                 use_pallas=use_pallas, interpret=interpret)
-        img = np.zeros((ci.n_nodes, ci.capacity, ci.dim), np.float32)
+                 use_pallas=use_pallas, interpret=interpret,
+                 mesh_nodes=mesh_nodes)
+        img = np.zeros((ci.padded_nodes, ci.capacity, ci.dim), np.float32)
         txt = np.zeros_like(img)
-        val = np.zeros((ci.n_nodes, ci.capacity), bool)
+        val = np.zeros((ci.padded_nodes, ci.capacity), bool)
         for ni, db in enumerate(dbs):
             img[ni, :db.capacity] = db.img_vecs
             txt[ni, :db.capacity] = db.txt_vecs
             val[ni, :db.capacity] = db.valid
             ci.dbs[ni] = db
-        ci._slabs = jnp.asarray(np.stack([img, txt]))
-        ci._valid = jnp.asarray(val)
+        ci._slabs = ci._shard(np.stack([img, txt]), slab=True)
+        ci._valid = ci._shard(val, slab=False)
         ci.stats["slab_uploads"] += 1
         for ni, db in enumerate(dbs):
             db.register_cluster(ci, ni)
@@ -202,6 +263,12 @@ class ClusterIndex:
         self._slabs = self._slabs.at[0, node].set(jnp.asarray(img))
         self._slabs = self._slabs.at[1, node].set(jnp.asarray(txt))
         self._valid = self._valid.at[node].set(jnp.asarray(val))
+        if self._mesh is not None:
+            # out-of-jit .at updates may leave XLA-chosen layouts;
+            # re-commit to the node mesh (this path is a slab upload
+            # anyway — steady-state updates never come through here)
+            self._slabs = self._shard(self._slabs, slab=True)
+            self._valid = self._shard(self._valid, slab=False)
         self.stats["slab_uploads"] += 1
 
     # -- search -------------------------------------------------------------
@@ -237,6 +304,9 @@ class ClusterIndex:
         self.stats["fused_scans"] += 1
         slabs = (self._slabs if planes == (0, 1)
                  else self._slabs[planes[0]:planes[0] + 1])
+        if self._mesh is not None:
+            return self._scan_mesh(Qn, node_ids, k, slabs, mask_nodes,
+                                   per_node)
         if per_node:
             if self.use_pallas:
                 from repro.kernels.vdb_topk import vdb_topk_pernode
@@ -256,6 +326,38 @@ class ClusterIndex:
             s, i = _fused_topk(slabs, self._valid, jnp.asarray(Qn), nids, k,
                                mask_nodes)
         return np.asarray(s), np.asarray(i)
+
+    def _scan_mesh(self, Qn, node_ids, k: int, slabs, mask_nodes: bool,
+                   per_node: bool):
+        """Mesh-sharded body of :meth:`_scan` — still the same single
+        launch per micro-batch, but run through ``shard_map`` so each
+        device scans only its local node shard.  Only the per-shard
+        best-k rows come back to the host (counted in
+        ``stats["allgather_bytes"]``); the global modes then merge them
+        with the single-device tie-break."""
+        from repro.kernels.vdb_topk import (merge_shard_topk,
+                                            vdb_topk_pernode_mesh,
+                                            vdb_topk_sharded_mesh)
+        if per_node:
+            s, i = vdb_topk_pernode_mesh(
+                jnp.asarray(Qn), slabs, self._valid, k, mesh=self._mesh,
+                use_pallas=self.use_pallas, interpret=self.interpret)
+            s, i = np.asarray(s), np.asarray(i)
+            self.stats["allgather_bytes"] += s.nbytes + i.nbytes
+            # pad nodes are all-invalid — drop their (NEG_INF, 0) rows
+            return s[:, :self.n_nodes], i[:, :self.n_nodes]
+        # per-shard k never exceeds the shard's own candidate count; the
+        # merged pool (mesh_nodes × k_local) still holds >= k candidates
+        n_shard = self.padded_nodes // self.mesh_nodes
+        k_local = min(k, n_shard * self.capacity)
+        s, i = vdb_topk_sharded_mesh(
+            jnp.asarray(Qn), slabs, self._valid,
+            jnp.asarray(node_ids, jnp.int32), k_local, mesh=self._mesh,
+            mask_nodes=mask_nodes, use_pallas=self.use_pallas,
+            interpret=self.interpret)
+        s, i = np.asarray(s), np.asarray(i)
+        self.stats["allgather_bytes"] += s.nbytes + i.nbytes
+        return merge_shard_topk(s, i, k)
 
     def search_batch(self, query_vecs: np.ndarray, node_ids: Sequence[int],
                      k: int, *, index: str = "both",
@@ -356,7 +458,11 @@ class ClusterIndex:
     # -- introspection (tests / debugging) ----------------------------------
 
     def device_state(self) -> Tuple[np.ndarray, np.ndarray]:
-        return np.asarray(self._slabs), np.asarray(self._valid)
+        """Device slabs/validity pulled to host, sliced to the REAL nodes
+        (mesh padding stripped) so it compares directly against
+        :meth:`rebuild_reference` at any mesh size."""
+        return (np.asarray(self._slabs)[:, :self.n_nodes],
+                np.asarray(self._valid)[:self.n_nodes])
 
     def rebuild_reference(self) -> Tuple[np.ndarray, np.ndarray]:
         """What the device state SHOULD be, rebuilt from the numpy views

@@ -342,6 +342,11 @@ class ScheduleStage:
     stashed on the state, making the Retrieve stage a no-op.  Schedule +
     Retrieve therefore cost exactly ONE device scan per micro-batch,
     pinned by the call-count test in ``tests/test_scheduling_score.py``.
+    The contract is mesh-transparent: with a sharded cluster index
+    (``mesh_nodes > 1``) the same single call becomes one ``shard_map``
+    launch whose per-device scans run concurrently — still one
+    ``fused_scans`` tick, still bitwise-identical routing (pinned by
+    ``tests/test_cluster_sharded.py``).
     """
 
     name = "Schedule"
@@ -425,9 +430,12 @@ class RetrieveStage:
     never a per-node Python loop, never a host→device slab copy.  Under
     score-aware routing the Schedule stage's cluster-wide scan already
     filled every chosen node's rows (``state.retrieved``), so this stage
-    issues NOTHING — Schedule+Retrieve collapse to one scan.  Systems
-    without a cluster index (custom stage lists, standalone fleets) fall
-    back to the per-node ``VectorDB.search_batch`` grouping."""
+    issues NOTHING — Schedule+Retrieve collapse to one scan.  The scan
+    is mesh-transparent: a sharded index (``mesh_nodes > 1``) serves the
+    identical call from per-device node shards with bitwise-equal
+    results.  Systems without a cluster index (custom stage lists,
+    standalone fleets) fall back to the per-node ``VectorDB.search_batch``
+    grouping."""
 
     name = "Retrieve"
 

@@ -177,6 +177,7 @@ class CacheGenius:
                  use_scheduler: bool = True,
                  use_prompt_optimizer: bool = True,
                  use_cluster_index: bool = True,
+                 mesh_nodes: int = 1,
                  routing: str = "score",
                  latent_depths=None,
                  pipeline: Optional[ServePipeline] = None):
@@ -207,9 +208,15 @@ class CacheGenius:
         # device-resident cross-node retrieval engine: the fleet's cache
         # state lives on device (ONE build-time upload, incremental row
         # updates from every add/evict) and the Schedule/Retrieve stages
-        # issue ONE fused scan per micro-batch across all touched nodes
-        self.cluster_index = (ClusterIndex.from_dbs(self.dbs)
-                              if use_cluster_index and self.dbs else None)
+        # issue ONE fused scan per micro-batch across all touched nodes.
+        # mesh_nodes > 1 shards the slabs over a 1-D "nodes" device mesh
+        # (each device scans only its local node shard; results stay
+        # bitwise identical) and is preserved across every re-stack
+        # (join/fail/rejoin).
+        self.mesh_nodes = int(mesh_nodes)
+        self.cluster_index = (
+            ClusterIndex.from_dbs(self.dbs, mesh_nodes=self.mesh_nodes)
+            if use_cluster_index and self.dbs else None)
         # routing="score" (default): the Schedule stage routes on each
         # request's TRUE best composite match per node from the cluster
         # scan, blended with load + expected latency; "centroid" is the
@@ -432,7 +439,8 @@ class CacheGenius:
             return
         for d in self.dbs:
             d.unregister_cluster(self.cluster_index)
-        self.cluster_index = ClusterIndex.from_dbs(self.dbs)
+        self.cluster_index = ClusterIndex.from_dbs(
+            self.dbs, mesh_nodes=self.mesh_nodes)
 
     def join_node(self, *, speed: float = 1.0,
                   capacity: Optional[int] = None) -> int:

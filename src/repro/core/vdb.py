@@ -210,8 +210,11 @@ class VectorDB:
         """Attach a ClusterIndex view; future mutations push incremental
         device row updates, and searches delegate to the fused scan.
         EVERY registered cluster receives updates (two systems sharing a
-        fleet each keep their own index in sync); drop indexes you are
-        done with via :meth:`unregister_cluster` or they stay live."""
+        fleet each keep their own index in sync — including a sharded
+        and an unsharded index side by side, as the parity tests do; on
+        a mesh-sharded index the donated scatter routes each row to the
+        node's owning shard); drop indexes you are done with via
+        :meth:`unregister_cluster` or they stay live."""
         self._clusters = [(c, n) for c, n in self._clusters
                           if c is not cluster] + [(cluster, node)]
 

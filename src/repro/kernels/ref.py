@@ -30,7 +30,15 @@ def vdb_topk_sharded_ref(queries, slabs, valid, node_ids, k: int, *,
                          mask_nodes: bool = True):
     """queries: (Q, D); slabs: (n_idx, nodes, cap, D); valid: (nodes, cap);
     node_ids: (Q,).  Returns (scores, idx) of shape (n_idx, Q, k) with
-    GLOBAL slot ids ``node * cap + col``; masked candidates are -inf."""
+    GLOBAL slot ids ``node * cap + col``; masked candidates are -inf.
+
+    Shape-generic on the node axis, so the mesh-sharded scan
+    (``vdb_topk_sharded_mesh``) reuses this oracle verbatim per device
+    over its LOCAL node shard — shard-local node ids in, shard-local
+    slot ids out, offset to global by the caller.  Ties (equal scores,
+    and every -inf row) resolve to the LOWER flat index via
+    ``jax.lax.top_k`` — the ordering contract the cross-shard merge
+    reproduces."""
     n_idx, n_nodes, cap, _ = slabs.shape
     scores = jnp.einsum("qd,incd->iqnc", queries, slabs)
     ok = valid[None, None, :, :]
@@ -49,7 +57,9 @@ def vdb_topk_pernode_ref(queries, slabs, valid, k: int):
 
     queries: (Q, D); slabs: (n_idx, nodes, cap, D); valid: (nodes, cap).
     Returns (scores, idx) of shape (n_idx, nodes, Q, k) with GLOBAL slot
-    ids ``node * cap + col``; masked candidates are -inf."""
+    ids ``node * cap + col``; masked candidates are -inf.  Shape-generic
+    on the node axis (the mesh-sharded scan runs it per device on the
+    local shard; per-node results need no cross-shard merge)."""
     n_idx, n_nodes, cap, _ = slabs.shape
     scores = jnp.einsum("qd,incd->inqc", queries, slabs)
     scores = jnp.where(valid[None, :, None, :], scores, -jnp.inf)

@@ -25,6 +25,17 @@ Three entry points:
   top-k from one hot node could hide) and what lets the Schedule and
   Retrieve stages share a single scan.
 
+Mesh-sharded variants (:func:`vdb_topk_sharded_mesh` /
+:func:`vdb_topk_pernode_mesh`) run the SAME per-node scans inside
+``shard_map`` over a 1-D ``"nodes"`` device mesh: each device scans only
+its local node shard of the stacked slabs and only the per-node best-k
+rows (scores + global slot ids) ever leave a device — never the slabs.
+The cross-shard reduction of the global modes is
+:func:`merge_shard_topk`, whose (score desc, global-slot-id asc)
+ordering reproduces both single-device scans' tie-break bitwise (the
+fix for the classic all-gather reordering bug on equal scores
+straddling a shard boundary).
+
 ``interpret`` defaults to ``None`` = backend-aware: compile through
 Mosaic whenever a TPU backend is present, fall back to interpret mode
 elsewhere (CPU containers, unit tests), so ``use_pallas=True`` actually
@@ -327,3 +338,131 @@ def vdb_topk_pernode(queries, slabs, valid, k: int, *,
         interpret=interpret,
     )(queries, slabs, valid_i, nid)
     return scores, idx
+
+
+# ---------------------------------------------------------------------------
+# mesh-sharded cluster scans (shard_map over the per-node grid axis)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _mesh_scan_fn(mesh, n_shard: int, capacity: int, k: int,
+                  mask_nodes: bool, per_node: bool, use_pallas: bool,
+                  interpret: bool, block_n: int):
+    """Build (and cache) the jitted ``shard_map`` wrapper for one scan
+    configuration.  Each device runs the unmodified single-device scan —
+    Pallas kernel or jnp ref — over its LOCAL ``(n_idx, n_shard,
+    capacity, dim)`` slab shard, then globalises the slot ids by its
+    shard offset.  ``check_rep=False`` because ``pallas_call`` has no
+    replication rule; every output here is explicitly sharded anyway.
+
+    Cache note: keying on the hashable ``Mesh`` keeps one executable per
+    (mesh, shape, mode) across ClusterIndex rebuilds/restacks."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def local(slabs_l, valid_l, queries, node_ids):
+        shard = jax.lax.axis_index("nodes")
+        offset = shard * n_shard * capacity
+        if per_node:
+            if use_pallas:
+                s, i = vdb_topk_pernode(queries, slabs_l, valid_l, k,
+                                        block_n=block_n,
+                                        interpret=interpret)
+            else:
+                from repro.kernels.ref import vdb_topk_pernode_ref
+                s, i = vdb_topk_pernode_ref(queries, slabs_l, valid_l, k)
+            return s, i + offset
+        # global modes: node ids become shard-local (queries scheduled on
+        # another shard's node match nothing here — their candidates come
+        # from the owning shard's list at merge time)
+        nids_l = node_ids - shard * n_shard
+        if use_pallas:
+            s, i = vdb_topk_sharded(queries, slabs_l, valid_l, nids_l, k,
+                                    block_n=block_n, mask_nodes=mask_nodes,
+                                    interpret=interpret)
+        else:
+            from repro.kernels.ref import vdb_topk_sharded_ref
+            s, i = vdb_topk_sharded_ref(queries, slabs_l, valid_l, nids_l,
+                                        k, mask_nodes=mask_nodes)
+        return s[None], (i + offset)[None]
+
+    out_specs = ((P(None, "nodes", None, None),) * 2 if per_node
+                 else (P("nodes", None, None, None),) * 2)
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(None, "nodes", None, None), P("nodes", None),
+                  P(None, None), P(None)),
+        out_specs=out_specs, check_rep=False)
+    return jax.jit(fn)
+
+
+def vdb_topk_sharded_mesh(queries, slabs, valid, node_ids, k: int, *,
+                          mesh, block_n: int = 512, mask_nodes: bool = True,
+                          use_pallas: bool = False,
+                          interpret: Optional[bool] = None):
+    """Mesh-sharded global cluster scan.
+
+    ``slabs``: (n_idx, padded_nodes, capacity, D) sharded along the node
+    axis over ``mesh`` (padded_nodes a multiple of the mesh size, pad
+    nodes masked invalid); ``valid``: (padded_nodes, capacity);
+    ``node_ids``: (Q,) GLOBAL node assignment (ignored when
+    ``mask_nodes=False``).
+
+    Returns STACKED per-shard results ``(shards, n_idx, Q, k)`` with
+    GLOBAL slot ids ``node * capacity + col`` — the all-gather payload
+    (k rows per query per shard, never the slabs).  Reduce to the global
+    top-k with :func:`merge_shard_topk`.
+    """
+    interpret = resolve_interpret(interpret)
+    _, padded_nodes, cap, _ = slabs.shape
+    n_shard = padded_nodes // mesh.shape["nodes"]
+    fn = _mesh_scan_fn(mesh, n_shard, cap, k, bool(mask_nodes), False,
+                       bool(use_pallas), interpret, block_n)
+    return fn(slabs, valid, queries, node_ids.astype(jnp.int32))
+
+
+def vdb_topk_pernode_mesh(queries, slabs, valid, k: int, *,
+                          mesh, block_n: int = 512,
+                          use_pallas: bool = False,
+                          interpret: Optional[bool] = None):
+    """Mesh-sharded per-node cluster scan (the schedule+retrieve fusion).
+
+    Same sharded layout as :func:`vdb_topk_sharded_mesh`.  The per-node
+    reduction needs NO cross-shard merge — each node's top-k is complete
+    on its owning shard — so the result is simply reassembled along the
+    node axis: ``(n_idx, padded_nodes, Q, k)`` with GLOBAL slot ids
+    (bitwise what the single-device :func:`vdb_topk_pernode` returns for
+    the real, unpadded nodes).
+    """
+    interpret = resolve_interpret(interpret)
+    _, padded_nodes, cap, _ = slabs.shape
+    n_shard = padded_nodes // mesh.shape["nodes"]
+    fn = _mesh_scan_fn(mesh, n_shard, cap, k, False, True,
+                       bool(use_pallas), interpret, block_n)
+    qn = queries.shape[0]
+    return fn(slabs, valid, queries, jnp.zeros((qn,), jnp.int32))
+
+
+def merge_shard_topk(scores, idx, k: int):
+    """Exact cross-shard reduction of stacked per-shard top-k lists.
+
+    ``scores``/``idx``: (shards, n_idx, Q, k_local) numpy arrays with
+    GLOBAL slot ids.  Returns the global ``(n_idx, Q, k)`` top-k ordered
+    by (score desc, global slot id asc) — the SAME tie-break both
+    single-device scans produce (``jax.lax.top_k`` keeps the lower flat
+    index on ties; the Pallas streaming merge encounters slots in
+    ascending global order and keeps the first seen), so equal-score
+    candidates straddling a shard boundary rank identically to the
+    unsharded scan instead of in all-gather arrival order.
+    """
+    import numpy as np
+    shards, n_idx, qn, kl = scores.shape
+    flat_s = np.ascontiguousarray(
+        np.transpose(scores, (1, 2, 0, 3))).reshape(n_idx, qn, shards * kl)
+    flat_i = np.ascontiguousarray(
+        np.transpose(idx, (1, 2, 0, 3))).reshape(n_idx, qn, shards * kl)
+    k = min(k, shards * kl)
+    order = np.lexsort((flat_i, -flat_s), axis=-1)[..., :k]
+    return (np.take_along_axis(flat_s, order, -1),
+            np.take_along_axis(flat_i, order, -1))

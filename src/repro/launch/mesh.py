@@ -12,6 +12,9 @@ inter-pod DCI bandwidth ≪ intra-pod ICI).
 """
 from __future__ import annotations
 
+import os
+import re
+
 import jax
 
 
@@ -28,3 +31,45 @@ def mesh_shape_dict(multi_pod: bool = False):
 
 def n_chips(multi_pod: bool = False) -> int:
     return 512 if multi_pod else 256
+
+
+def make_node_mesh(mesh_nodes: int):
+    """1-D ``("nodes",)`` mesh for the sharded cluster-retrieval scans
+    (core/cluster_index.py): the embarrassingly-parallel node axis of the
+    stacked cache slabs maps one shard of nodes per device.  Raises
+    ``ValueError`` when the backend has fewer devices than requested —
+    callers that want graceful degradation (tests, CLI) check
+    ``len(jax.devices())`` first or force host devices with
+    :func:`ensure_host_devices`."""
+    if mesh_nodes < 1:
+        raise ValueError(f"mesh_nodes must be >= 1, got {mesh_nodes}")
+    avail = len(jax.devices())
+    if avail < mesh_nodes:
+        raise ValueError(
+            f"mesh_nodes={mesh_nodes} needs that many devices, backend has "
+            f"{avail}; on CPU force more with ensure_host_devices() BEFORE "
+            "first jax use")
+    return jax.make_mesh((mesh_nodes,), ("nodes",))
+
+
+def ensure_host_devices(n: int) -> bool:
+    """Best-effort: force ``n`` host-platform XLA devices by appending
+    ``--xla_force_host_platform_device_count=n`` to ``XLA_FLAGS`` — only
+    effective BEFORE the XLA backend initialises (jax import alone does
+    not initialise it; first device/array use does).  Returns True when
+    the flag is in place or the backend already exposes >= n devices,
+    False when the backend is already up with fewer (callers skip their
+    sharded path instead of erroring)."""
+    from jax._src import xla_bridge
+
+    if xla_bridge._backends:                      # backend already up
+        return len(jax.devices()) >= n
+    flags = os.environ.get("XLA_FLAGS", "")
+    m = re.search(r"--xla_force_host_platform_device_count=(\d+)", flags)
+    if m and int(m.group(1)) >= n:
+        return True
+    if m:                                         # raise an existing, smaller count
+        flags = flags.replace(m.group(0), "")
+    os.environ["XLA_FLAGS"] = (
+        flags + f" --xla_force_host_platform_device_count={n}").strip()
+    return True

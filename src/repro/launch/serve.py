@@ -36,7 +36,7 @@ def build_system(*, n_nodes: int = 4, corpus_n: int = 600,
                  eviction="LCU", use_scheduler=True,
                  use_prompt_optimizer=True, backend=None, seed=0,
                  node_speeds=None, routing: str = "score",
-                 latent_depths=None):
+                 latent_depths=None, mesh_nodes: int = 1):
     """Assemble the full CacheGenius stack over the synthetic corpus.
 
     ``routing`` selects the Schedule stage's mode: ``"score"`` (default)
@@ -44,7 +44,12 @@ def build_system(*, n_nodes: int = 4, corpus_n: int = 600,
     the cluster-wide fused scan; ``"centroid"`` keeps the paper's Eq. 6
     node-representation baseline.  ``latent_depths`` enables the
     latent-depth cache (``True`` = the policy's default {K/4, K/2, 3K/4}
-    schedule, or an explicit depth tuple)."""
+    schedule, or an explicit depth tuple).  ``mesh_nodes > 1`` shards
+    the cluster index's cache slabs over that many devices (a 1-D
+    "nodes" mesh; results stay bitwise identical to ``mesh_nodes=1``) —
+    on CPU force the devices with
+    :func:`repro.launch.mesh.ensure_host_devices` BEFORE first jax
+    use."""
     images, captions, _ = make_corpus(corpus_n, res=32, seed=seed)
     embedder = ProxyClipEmbedder(render_caption)
     img_vecs = embedder.embed_image(images)
@@ -68,7 +73,7 @@ def build_system(*, n_nodes: int = 4, corpus_n: int = 600,
         eviction=POLICIES[eviction], node_speeds=speeds,
         use_scheduler=use_scheduler,
         use_prompt_optimizer=use_prompt_optimizer, routing=routing,
-        latent_depths=latent_depths)
+        latent_depths=latent_depths, mesh_nodes=mesh_nodes)
     return system, embedder, images, captions
 
 
@@ -129,6 +134,11 @@ def main() -> int:
                     "cluster scan; 'centroid' is the Eq. 6 "
                     "node-representation baseline")
     ap.add_argument("--no-prompt-optimizer", action="store_true")
+    ap.add_argument("--mesh-nodes", type=int, default=1,
+                    help="shard the cluster index's cache slabs over "
+                    "this many devices (1-D 'nodes' mesh; scan results "
+                    "stay bitwise identical to the single-device path); "
+                    "on CPU host devices are forced automatically")
     ap.add_argument("--latent-cache", action="store_true",
                     help="archive noised img2img intermediates alongside "
                     "finished images and resume denoising from them "
@@ -197,6 +207,16 @@ def main() -> int:
         ap.error("--slot-capacity requires --step-level")
     if args.slot_capacity is not None and args.slot_capacity < 1:
         ap.error("--slot-capacity must be >= 1")
+    if args.mesh_nodes < 1:
+        ap.error("--mesh-nodes must be >= 1")
+    if args.mesh_nodes > 1:
+        # must happen before any jax device use below (backend init is
+        # lazy — an already-initialised smaller backend falls back)
+        from repro.launch.mesh import ensure_host_devices
+        if not ensure_host_devices(args.mesh_nodes):
+            print(f"# mesh-nodes={args.mesh_nodes} unavailable "
+                  "(backend already initialised); running unsharded")
+            args.mesh_nodes = 1
 
     if args.latent_depths is not None:
         latent_depths = tuple(int(d) for d in args.latent_depths.split(","))
@@ -208,7 +228,8 @@ def main() -> int:
         n_nodes=args.nodes, eviction=args.eviction,
         use_scheduler=not args.no_scheduler,
         use_prompt_optimizer=not args.no_prompt_optimizer,
-        routing=args.routing, latent_depths=latent_depths)
+        routing=args.routing, latent_depths=latent_depths,
+        mesh_nodes=args.mesh_nodes)
     engine = ServingEngine(system, max_batch=args.max_batch)
 
     journals = (attach_journals(system, args.journal_dir)

@@ -78,6 +78,14 @@ VAE_RULES: List[Rule] = [
 
 VISION_RULES: List[Rule] = []  # replicate — small models, DP handles scale
 
+# Cluster-retrieval slabs (core/cluster_index.py): the per-node cache
+# state is embarrassingly parallel along the node axis, so the stacked
+# ``(2, padded_nodes, capacity, dim)`` img/txt slabs and the
+# ``(padded_nodes, capacity)`` validity mask shard along a 1-D "nodes"
+# mesh — index planes, slot rows, and feature dims stay local.
+CLUSTER_SLAB_SPEC = P(None, "nodes", None, None)
+CLUSTER_VALID_SPEC = P("nodes", None)
+
 
 # ---------------------------------------------------------------------------
 # application
